@@ -1,0 +1,69 @@
+"""Cluster-scale simulation benchmark: 512-chip training of the assigned
+architectures under LiveStack, validated against the closed-form roofline
+and exercised with stragglers/failures (what closed forms cannot do).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def simulate(arch: str = "qwen3_4b", shape: str = "train_4k",
+             n_steps: int = 5, straggler: bool = False,
+             multi_pod: bool = True) -> dict:
+    from repro.core.cluster import (ClusterSpec, StepCost, StragglerSpec,
+                                    analytic_step_ns,
+                                    build_training_cluster)
+    from repro.core.vtime import SEC
+
+    spec = ClusterSpec(n_pods=2 if multi_pod else 1, chips_per_pod=256)
+    try:
+        cost = StepCost.from_dryrun(arch, shape,
+                                    "2x16x16" if multi_pod else "16x16")
+    except Exception:
+        cost = StepCost(compute_ns=5_000_000, ici_bytes=50_000_000)
+    cost.dcn_bytes = cost.ici_bytes // 8
+    stragglers = (StragglerSpec(chip=7, slowdown=2.0),) if straggler \
+        else ()
+    sched, tasks, ctx = build_training_cluster(
+        spec, cost, n_steps, stragglers=stragglers)
+    t0 = time.perf_counter()
+    sched.run()
+    wall = time.perf_counter() - t0
+    sim_ns = max(t.vtime for t in tasks)
+    analytic_ns = analytic_step_ns(spec, cost) * n_steps
+    return {
+        "arch": arch, "n_chips": spec.n_chips, "n_steps": n_steps,
+        "straggler": straggler,
+        "sim_step_ms": sim_ns / n_steps / 1e6,
+        "analytic_step_ms": analytic_ns / n_steps / 1e6,
+        "ratio": sim_ns / max(analytic_ns, 1),
+        "wall_s": wall,
+        "sim_speed": (sim_ns / SEC) / wall,     # simulated s per wall s
+        "messages": sum(h.stats["messages"] for h in ctx["hubs"]),
+        "done_steps_min": int(ctx["done_steps"].min()),
+    }
+
+
+def main():
+    rows = []
+    for arch in ("qwen3_4b", "olmoe_1b_7b"):
+        rows.append(simulate(arch, straggler=False))
+        rows.append(simulate(arch, straggler=True))
+    out = ROOT / "results" / "cluster_bench.json"
+    out.parent.mkdir(exist_ok=True)
+    out.write_text(json.dumps(rows, indent=2))
+    print(f"{'arch':16s} {'strag':>6s} {'sim ms/step':>12s} "
+          f"{'analytic':>9s} {'ratio':>6s} {'msgs':>8s} {'wall_s':>7s}")
+    for r in rows:
+        print(f"{r['arch']:16s} {str(r['straggler']):>6s} "
+              f"{r['sim_step_ms']:12.2f} {r['analytic_step_ms']:9.2f} "
+              f"{r['ratio']:6.2f} {r['messages']:8d} {r['wall_s']:7.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

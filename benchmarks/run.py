@@ -1,0 +1,219 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows per the harness contract,
+and writes detailed JSON under results/.
+
+  table1    — method-comparison matrix (qualitative, from the paper)
+  table2    — accuracy + wall time vs physical + DES baseline (the
+              paper's headline table)
+  fig2      — scheduling timeline stats (skew stalls, wake forwarding)
+  sched     — scheduler dispatch throughput (reference vs vectorized)
+  hub       — IPC hub routing microbenchmark
+  cells     — cell-isolation accounting microbenchmark
+  cluster   — 512-chip cluster simulation vs analytic roofline
+  roofline  — dry-run roofline terms summary (see benchmarks/roofline.py)
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+import time
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT))
+
+
+def _csv(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.3f},{derived}")
+
+
+def table1() -> None:
+    rows = [
+        ("gem5/Simics (DES)", "slow", "full end-host", "single-node"),
+        ("ns-3/OMNeT++ (DES)", "fast", "no end-host stack", "cluster"),
+        ("SimBricks/SplitSim", "slowest-component", "full", "cluster"),
+        ("Phantora (live)", "fast", "ML apps w/o OS", "cluster"),
+        ("NEX (live)", "fast", "no full stack", "single-server"),
+        ("LiveStack (this work)", "fast", "full", "cluster"),
+    ]
+    t0 = time.perf_counter()
+    (ROOT / "results").mkdir(exist_ok=True)
+    (ROOT / "results" / "table1.json").write_text(json.dumps(rows))
+    _csv("table1_matrix", (time.perf_counter() - t0) * 1e6,
+         "methods=6;livestack=fast+full+cluster")
+
+
+def table2() -> None:
+    from benchmarks import table2 as t2
+
+    t0 = time.perf_counter()
+    rows = t2.run(sizes="quick")
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+    (ROOT / "results" / "table2.json").write_text(json.dumps(rows,
+                                                             indent=2))
+    for r in rows:
+        _csv(f"table2_{r['workload']}", us,
+             f"acc={r['accuracy_metric']*100:.1f}%;"
+             f"slowdown={r['slowdown_x']:.2f}x;"
+             f"des_slowdown={r.get('des_slowdown_x', 0):.0f}x")
+
+
+def fig2() -> None:
+    from repro.core import (Compute, Endpoint, Hub, LinkSpec, Recv,
+                            Scheduler, Scope, Send, US, VTask)
+
+    t0 = time.perf_counter()
+    sc = Scope("fig2", 20 * US)
+    hub = Hub("h", LinkSpec(bandwidth_bps=80e9, latency_ns=1000))
+    sched = Scheduler(n_cpus=2)
+    dev_ep = hub.attach(Endpoint("dev"))
+    cpu_ep = hub.attach(Endpoint("cpu0"))
+
+    def vcpu0():
+        for _ in range(5):
+            yield Compute(10 * US)
+        yield Send(cpu_ep, "dev", 4096)
+        for _ in range(20):
+            yield Compute(10 * US)
+
+    def vcpu1():
+        for _ in range(25):
+            yield Compute(10 * US)
+
+    def device():
+        yield Recv(dev_ep)
+        for _ in range(10):
+            yield Compute(30 * US)
+
+    ts = [sched.spawn(VTask(n, b(), kind="modeled"))
+          for n, b in (("vcpu0", vcpu0), ("vcpu1", vcpu1),
+                       ("dev", device))]
+    for t in ts:
+        t.join(sc)
+    sched.run()
+    us = (time.perf_counter() - t0) * 1e6
+    _csv("fig2_timeline", us,
+         f"skew_stalls={sched.stats.skew_stalls};"
+         f"max_skew_us={sched.stats.max_skew_seen/1000:.0f};"
+         f"dev_wake_vtime_us={ts[2].vtime/1000:.0f}")
+
+
+def sched() -> None:
+    from benchmarks import sched_scale
+
+    for n in (1024, 8192):
+        r_ref = sched_scale.bench_reference(n, max(4, n // 64))
+        r_vec = sched_scale.bench_vectorized(n, max(4, n // 64))
+        _csv(f"sched_ref_{n}",
+             r_ref["wall_s"] / r_ref["dispatches"] * 1e6,
+             f"disp_per_s={r_ref['dispatch_per_s']:.0f}")
+        _csv(f"sched_vec_{n}",
+             r_vec["wall_s"] / r_vec["dispatches"] * 1e6,
+             f"disp_per_s={r_vec['dispatch_per_s']:.0f};"
+             f"speedup={r_vec['dispatch_per_s']/r_ref['dispatch_per_s']:.1f}x")
+
+
+def hub() -> None:
+    import numpy as np
+
+    from repro.core.ipc import Endpoint, Hub, LinkSpec
+
+    h = Hub("bench", LinkSpec(bandwidth_bps=100e9, latency_ns=1000))
+    h.attach(Endpoint("rx"))
+    h.attach(Endpoint("tx"))
+    n = 50_000
+    t0 = time.perf_counter()
+    for i in range(n):
+        h.send("tx", "rx", 1024, send_vtime=i * 100)
+    wall = time.perf_counter() - t0
+    _csv("hub_route_python", wall / n * 1e6,
+         f"msgs_per_s={n/wall:.0f}")
+
+    import jax.numpy as jnp
+
+    from repro.core.engine_jax import hub_visibility
+
+    rng = np.random.default_rng(0)
+    m = 200_000
+    link = np.sort(rng.integers(0, 64, m)).astype(np.int32)
+    send = np.sort(rng.integers(0, 1 << 28, m)).astype(np.int32)
+    size = rng.integers(64, 65536, m).astype(np.int32)
+    bw = jnp.asarray(rng.uniform(1e9, 100e9, 64), jnp.float32)
+    lat = jnp.asarray(rng.integers(100, 10000, 64), jnp.int32)
+    args = (jnp.asarray(send), jnp.asarray(size), jnp.asarray(link), bw,
+            lat)
+    hub_visibility(*args).block_until_ready()
+    t0 = time.perf_counter()
+    hub_visibility(*args).block_until_ready()
+    wall = time.perf_counter() - t0
+    _csv("hub_route_vectorized", wall / m * 1e6,
+         f"msgs_per_s={m/wall:.0f}")
+
+
+def cells() -> None:
+    from repro.core import CellManager, VTask
+
+    cm = CellManager()
+    for i in range(16):
+        cm.create(f"c{i}", ways=max(1, 12 // 4), bw_share=1 / 4,
+                  bw_demand=0.3, working_set_frac=0.5)
+    tasks = [VTask(f"t{i}", None, kind="live") for i in range(16)]
+    for i, t in enumerate(tasks):
+        cm.assign(t, f"c{i}")
+    n = 100_000
+    t0 = time.perf_counter()
+    acc = 0.0
+    co = [f"c{j}" for j in range(4)]
+    for i in range(n):
+        acc += cm.slowdown(tasks[i % 16], co)
+        cm.switch_cost(tasks[i % 16])
+    wall = time.perf_counter() - t0
+    _csv("cell_accounting", wall / n * 1e6,
+         f"mean_slowdown={acc/n:.3f};switches={cm.stats['switches']}")
+
+
+def cluster() -> None:
+    from benchmarks import cluster_bench
+
+    for straggler in (False, True):
+        r = cluster_bench.simulate("qwen3_4b", straggler=straggler,
+                                   n_steps=3)
+        _csv(f"cluster_512chip_straggler={straggler}",
+             r["wall_s"] * 1e6 / r["n_steps"],
+             f"sim_ms_per_step={r['sim_step_ms']:.2f};"
+             f"analytic_ms={r['analytic_step_ms']:.2f};"
+             f"ratio={r['ratio']:.2f};msgs={r['messages']}")
+
+
+def roofline() -> None:
+    from benchmarks import roofline as rl
+
+    t0 = time.perf_counter()
+    rows = rl.load_all("16x16") + rl.load_all("2x16x16")
+    if rows:
+        import statistics
+
+        worst = min(rows, key=lambda r: r["roofline_frac"])
+        _csv("roofline_summary", (time.perf_counter() - t0) * 1e6,
+             f"cells={len(rows)};"
+             f"median_frac="
+             f"{statistics.median(r['roofline_frac'] for r in rows):.3f};"
+             f"worst={worst['arch']}/{worst['shape']}="
+             f"{worst['roofline_frac']:.4f}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    table1()
+    fig2()
+    cells()
+    hub()
+    sched()
+    cluster()
+    table2()
+    roofline()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Scheduler scalability: reference engine vs vectorized JAX engine.
+
+Dispatch throughput (vtask-dispatches/second) as cluster size grows —
+the motivation for the kernel-resident fast path (paper: "kernel
+mechanisms keep virtual-time updates ... on the hot path") and for the
+``minskew`` Pallas kernel.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def bench_reference(n_tasks: int, n_scopes: int, steps: int = 20) -> dict:
+    from repro.core import Compute, Scheduler, Scope, US, VTask
+
+    sched = Scheduler(n_cpus=max(8, n_tasks // 4))
+    scopes = [Scope(f"s{i}", 50 * US) for i in range(n_scopes)]
+    rng = np.random.default_rng(0)
+
+    def body(dur):
+        def gen():
+            for _ in range(steps):
+                yield Compute(int(dur))
+        return gen()
+
+    for i in range(n_tasks):
+        t = VTask(f"t{i}", body(rng.integers(5, 50) * US), kind="modeled")
+        t.join(scopes[i % n_scopes])
+        if i % 7 == 0:
+            t.join(scopes[(i + 1) % n_scopes])
+        sched.spawn(t)
+    t0 = time.perf_counter()
+    sched.run()
+    wall = time.perf_counter() - t0
+    return {"engine": "reference", "n_tasks": n_tasks,
+            "dispatches": sched.stats.dispatches, "wall_s": wall,
+            "dispatch_per_s": sched.stats.dispatches / wall}
+
+
+def bench_vectorized(n_tasks: int, n_scopes: int, steps: int = 20) -> dict:
+    import jax
+
+    from repro.core.engine_jax import VecState, run_vectorized
+
+    rng = np.random.default_rng(0)
+    membership = np.zeros((n_tasks, n_scopes), bool)
+    idx = np.arange(n_tasks)
+    membership[idx, idx % n_scopes] = True
+    membership[idx[idx % 7 == 0], (idx[idx % 7 == 0] + 1) % n_scopes] = True
+    st = VecState.create(
+        n_tasks, n_scopes,
+        durations=rng.integers(5, 50, n_tasks) * 1000,
+        steps=np.full(n_tasks, steps),
+        membership=membership,
+        skews=np.full(n_scopes, 50_000))
+    # warm-up compile
+    st2, _ = run_vectorized(st, max_rounds=1)
+    st = VecState.create(
+        n_tasks, n_scopes,
+        durations=rng.integers(5, 50, n_tasks) * 1000,
+        steps=np.full(n_tasks, steps),
+        membership=membership,
+        skews=np.full(n_scopes, 50_000))
+    t0 = time.perf_counter()
+    st, rounds = run_vectorized(st)
+    jax.block_until_ready(st.vtime)
+    wall = time.perf_counter() - t0
+    dispatches = int(n_tasks * steps)
+    return {"engine": "vectorized", "n_tasks": n_tasks,
+            "dispatches": dispatches, "rounds": rounds, "wall_s": wall,
+            "dispatch_per_s": dispatches / wall}
+
+
+def main():
+    rows = []
+    for n in (256, 1024, 4096, 16384):
+        rows.append(bench_reference(n, max(4, n // 64)))
+        rows.append(bench_vectorized(n, max(4, n // 64)))
+    out = ROOT / "results" / "sched_scale.json"
+    out.parent.mkdir(exist_ok=True)
+    out.write_text(json.dumps(rows, indent=2))
+    print(f"{'engine':12s} {'n_tasks':>8s} {'disp/s':>12s} {'wall_s':>8s}")
+    for r in rows:
+        print(f"{r['engine']:12s} {r['n_tasks']:8d} "
+              f"{r['dispatch_per_s']:12.0f} {r['wall_s']:8.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

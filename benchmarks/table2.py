@@ -1,0 +1,85 @@
+"""Table 2 reproduction: accuracy + wall time per workload.
+
+For each workload (paper row analogues):
+  physical  — real threads + real wire delays: ground-truth wall time
+  livestack — same unmodified functions under virtual time: accuracy =
+              1 - |predicted - physical|/physical; slowdown = sim wall /
+              physical wall
+  DES       — fine-grained event baseline (gem5 stand-in): measured or
+              extrapolated wall time
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def run(sizes: str = "full") -> list:
+    from repro.core import workloads as wl
+
+    scale = {"full": 1.0, "quick": 0.25}[sizes]
+    rows = []
+    params = {
+        "arith": dict(iters=max(50, int(300 * scale))),
+        "oltp": dict(n_req=max(100, int(800 * scale))),
+        "kvstore": dict(n_ops=max(100, int(600 * scale))),
+        "shuffle": dict(rounds=max(2, int(6 * scale))),
+    }
+    for name, spec in wl.WORKLOADS.items():
+        kw = params[name]
+        phys = spec["physical"](**kw)
+        live = spec["livestack"](**kw)
+        metric = spec["metric"]
+        acc_runtime = wl.accuracy(live.sim_s, phys.sim_s)
+        acc_metric = wl.accuracy(live.metrics[metric],
+                                 phys.metrics[metric])
+        row = {
+            "workload": name,
+            "paper_row": spec["paper_row"],
+            "instances": spec["instances"],
+            "metric": metric,
+            "physical_s": phys.sim_s,
+            "livestack_pred_s": live.sim_s,
+            "livestack_wall_s": live.wall_s,
+            "accuracy_runtime": acc_runtime,
+            "accuracy_metric": acc_metric,
+            "slowdown_x": live.wall_s / phys.wall_s,
+        }
+        if "des" in spec:
+            des = spec["des"](**kw)
+            row["des_wall_s"] = des.wall_s
+            row["des_slowdown_x"] = des.wall_s / phys.wall_s
+        rows.append(row)
+    return rows
+
+
+def main():
+    rows = run()
+    out = ROOT / "results" / "table2.json"
+    out.parent.mkdir(exist_ok=True)
+    out.write_text(json.dumps(rows, indent=2))
+    hdr = (f"{'workload':10s} {'#inst':>5s} {'acc(metric)':>11s} "
+           f"{'acc(runtime)':>12s} {'phys_s':>8s} {'LS_wall':>8s} "
+           f"{'slowdn':>7s} {'DES_wall':>10s}")
+    print(hdr)
+    for r in rows:
+        des = r.get("des_wall_s")
+        print(f"{r['workload']:10s} {r['instances']:5d} "
+              f"{r['accuracy_metric']*100:10.1f}% "
+              f"{r['accuracy_runtime']*100:11.1f}% "
+              f"{r['physical_s']:8.2f} {r['livestack_wall_s']:8.2f} "
+              f"{r['slowdown_x']:6.2f}x "
+              f"{des:10.1f}" if des else
+              f"{r['workload']:10s} {r['instances']:5d} "
+              f"{r['accuracy_metric']*100:10.1f}% "
+              f"{r['accuracy_runtime']*100:11.1f}% "
+              f"{r['physical_s']:8.2f} {r['livestack_wall_s']:8.2f} "
+              f"{r['slowdown_x']:6.2f}x {'-':>10s}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

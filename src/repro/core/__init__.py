@@ -1,0 +1,25 @@
+"""LiveStack core: OS-level live-simulation substrate in JAX-native form.
+
+Subsystems (one module per paper subsystem):
+  vtime        — virtual-time accounting (§3.2): LiveClock, RunPage, CostModel
+  vtask        — the vtask abstraction + action vocabulary (§3.2)
+  scope        — synchronization scopes, bounded-skew arithmetic (§3.2)
+  scheduler    — reference dispatch engine (§3.2)
+  cells        — live memory-hierarchy management (§3.3)
+  ipc          — simulation-aware IPC: messages/endpoints/hubs (§3.4)
+  orchestrator — distributed simulation orchestration (§3.5)
+  engine_jax   — vectorized fast-path engine (kernel-hot-path analogue)
+  des          — fine-grained DES baseline (the gem5/ns-3 comparison)
+  cluster      — ClusterSpec: chips/ICI/DCN topology -> vtasks + hubs
+  workloads    — live workload adapters (Table-2 benchmarks + LM steps)
+"""
+from repro.core.vtime import (NS, US, MS, SEC, CostModel, LiveClock,
+                              RunPage, to_ns)
+from repro.core.vtask import (Await, Compute, Event, LiveCall, Recv, Send,
+                              State, VTask, Yield)
+from repro.core.scope import Scope, all_eligible, wake
+from repro.core.cells import Cell, CellManager
+from repro.core.ipc import Endpoint, Hub, LinkSpec, Message
+from repro.core.scheduler import DeadlockError, SchedStats, Scheduler
+from repro.core.orchestrator import Orchestrator, ProxyVTask
+from repro.core.des import DESEngine, extrapolate_wall_s, fine_grained_compute

@@ -1,0 +1,136 @@
+"""Live memory-hierarchy management (paper §3.3): the cell abstraction.
+
+A cell binds one live component to a controlled resource domain: CPU set,
+NUMA node, LLC way allocation (Intel CAT / AMD QoS analogue), memory-
+bandwidth share (MBA analogue), interrupt placement.  On the simulation
+host we cannot program real RDT MSRs, so the subsystem does exactly what
+the paper prescribes for *imperfect* isolation: estimate the residual
+deviation and fold it into virtual-time advance — "imperfect isolation is
+not hidden; it is explicitly incorporated into simulated time."
+
+Two distortions are modeled:
+
+* **Spatial interference**: a closed-form contention model.  Cache
+  pressure = working-set overflow beyond the cell's way fraction; memory
+  bandwidth = demand vs. MBA share under co-active demand, weighted by
+  the workload's memory-bound fraction.  The resulting multiplier scales
+  clock-derived vtime of live calls.
+* **Temporal residue**: warm-cell tracking with `n_warm_slots` capacity.
+  Dispatching a cold cell costs reconditioning time (flush outgoing +
+  prefetch incoming) plus a deterministic "PMU-sampled" residue
+  (hash-derived, reproducible) — charged to the incoming component's
+  vtime at its next live call.
+
+All constants are calibration knobs (see benchmarks/cell_bench.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Optional
+
+from repro.core.vtask import VTask
+
+TOTAL_WAYS = 12
+
+
+def _hash01(*xs: int) -> float:
+    """Deterministic pseudo-random in [-1, 1) (PMU-sampling stand-in)."""
+    h = 2166136261
+    for x in xs:
+        h = (h ^ (x & 0xFFFFFFFF)) * 16777619 & 0xFFFFFFFF
+    return (h / 2**31) - 1.0
+
+
+@dataclasses.dataclass
+class Cell:
+    name: str
+    ways: int = 4                     # CAT way allocation
+    bw_share: float = 0.5             # MBA throttle (fraction of machine BW)
+    bw_demand: float = 0.3            # workload's bandwidth appetite
+    working_set_frac: float = 0.5     # working set / LLC size
+    mem_frac: float = 0.3             # memory-bound fraction of runtime
+    cpus: tuple = ()
+    numa: int = 0
+
+
+class CellManager:
+    def __init__(self, total_ways: int = TOTAL_WAYS,
+                 miss_penalty: float = 0.6,
+                 recondition_ns: int = 50_000,
+                 residue_frac: float = 0.05,
+                 n_warm_slots: int = 4):
+        self.cells: Dict[str, Cell] = {}
+        self.total_ways = total_ways
+        self.miss_penalty = miss_penalty
+        self.recondition_ns = recondition_ns
+        self.residue_frac = residue_frac
+        self.n_warm_slots = n_warm_slots
+        self._warm: "OrderedDict[str, None]" = OrderedDict()
+        self._switches = 0
+        self.stats = {"switches": 0, "recondition_ns": 0,
+                      "interference_events": 0}
+
+    # -- allocation ------------------------------------------------------------
+    def create(self, name: str, **kwargs) -> Cell:
+        if name in self.cells:
+            raise ValueError(f"cell {name} exists")
+        cell = Cell(name=name, **kwargs)
+        self.cells[name] = cell
+        return cell
+
+    def assign(self, task: VTask, name: str) -> VTask:
+        if name not in self.cells:
+            raise KeyError(name)
+        task.cell = name
+        return task
+
+    def release(self, name: str) -> None:
+        self.cells.pop(name, None)
+        self._warm.pop(name, None)
+
+    # -- spatial interference ----------------------------------------------------
+    def slowdown(self, task: VTask, coactive_cells: List[Optional[str]]
+                 ) -> float:
+        if not task.cell or task.cell not in self.cells:
+            return 1.0
+        c = self.cells[task.cell]
+        # cache: overflow beyond the cell's partition (CAT guarantees the
+        # partition itself; overflow lines miss)
+        ways_frac = c.ways / self.total_ways
+        overflow = max(0.0, c.working_set_frac - ways_frac)
+        s_cache = self.miss_penalty * overflow / max(c.working_set_frac,
+                                                     1e-9)
+        # bandwidth: MBA share under co-active demand
+        others = [self.cells[x] for x in set(coactive_cells)
+                  if x and x in self.cells and x != task.cell]
+        total_demand = c.bw_demand + sum(o.bw_demand for o in others)
+        if total_demand > 1.0:
+            total_share = c.bw_share + sum(o.bw_share for o in others)
+            avail = c.bw_share / max(total_share, 1e-9)
+            got = min(c.bw_demand, avail)
+        else:
+            got = c.bw_demand
+        s_bw = c.mem_frac * max(0.0, c.bw_demand / max(got, 1e-9) - 1.0)
+        s = 1.0 + s_cache + s_bw
+        if s > 1.0:
+            self.stats["interference_events"] += 1
+        return s
+
+    # -- temporal residue ----------------------------------------------------------
+    def switch_cost(self, task: VTask) -> int:
+        """Reconditioning + residue when the task's cell is cold."""
+        if not task.cell or task.cell not in self.cells:
+            return 0
+        if task.cell in self._warm:
+            self._warm.move_to_end(task.cell)
+            return 0
+        if len(self._warm) >= self.n_warm_slots:
+            self._warm.popitem(last=False)       # evict LRU (flush)
+        self._warm[task.cell] = None
+        self._switches += 1
+        residue = _hash01(task.id, self._switches) * self.residue_frac
+        cost = int(self.recondition_ns * (1.0 + residue))
+        self.stats["switches"] += 1
+        self.stats["recondition_ns"] += cost
+        return cost

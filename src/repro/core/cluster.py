@@ -1,0 +1,177 @@
+"""Cluster model: TPU pods as LiveStack components.
+
+Maps a production mesh (16x16 chips/pod, 2 pods) onto the simulation
+substrate: every chip is a vtask; ICI links and the DCN are hubs; one
+synchronization scope per collective group.  The per-chip compute/step
+durations come from the dry-run roofline terms (``results/dryrun``) — the
+cost-derived vtime model of DESIGN.md — optionally calibrated by really
+executing a reduced-config step on the host (live calibration).
+
+This is the paper's use case pointed at our workloads: "what will this
+unmodified training stack do on the 512-chip cluster I don't have yet?"
+— including stragglers, failures, and interference, which closed-form
+rooflines cannot express.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.ipc import Endpoint, Hub, LinkSpec
+from repro.core.scheduler import Scheduler
+from repro.core.scope import Scope
+from repro.core.vtask import Compute, LiveCall, Recv, Send, VTask
+from repro.core.vtime import SEC, US, CostModel
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    n_pods: int = 1
+    chips_per_pod: int = 256
+    ici_bw_Bps: float = 50e9            # per link
+    ici_lat_ns: int = 1_000
+    dcn_bw_Bps: float = 25e9
+    dcn_lat_ns: int = 10_000
+    cost: CostModel = CostModel()
+
+    @property
+    def n_chips(self) -> int:
+        return self.n_pods * self.chips_per_pod
+
+
+@dataclasses.dataclass
+class StepCost:
+    """Per-chip per-step cost (from the dry-run artifact or analytic)."""
+    compute_ns: int
+    ici_bytes: int                      # per-chip wire bytes per step
+    dcn_bytes: int = 0
+
+    @staticmethod
+    def from_dryrun(arch: str, shape: str, mesh: str = "16x16",
+                    cost: CostModel = CostModel(),
+                    variant: str = "") -> "StepCost":
+        """Prefer the trip-count-corrected costs (results/costs, see
+        launch/costcount.py); fall back to the raw dry-run record.
+        ``variant`` selects an optimized §Perf configuration."""
+        suffix = f"__{variant}" if variant else ""
+        corrected = (RESULTS.parent / "costs"
+                     / f"{arch}__{shape}__{mesh}{suffix}.json")
+        if corrected.exists():
+            rec = json.loads(corrected.read_text())
+            if rec.get("status") == "ok":
+                c = rec["corrected"]
+                compute_ns = int(max(c["flops"] / cost.peak_flops,
+                                     c["bytes"] / cost.hbm_bw) * SEC)
+                return StepCost(compute_ns=compute_ns,
+                                ici_bytes=int(c["coll_bytes"]))
+        f = RESULTS / f"{arch}__{shape}__{mesh}.json"
+        rec = json.loads(f.read_text())
+        if rec["status"] != "ok":
+            raise ValueError(f"dry-run cell {f.name}: {rec['status']}")
+        flops = rec["flops_per_chip"]
+        bts = rec["bytes_per_chip"]
+        coll = rec["collectives"]
+        ici = sum(v for k, v in coll.items() if k != "count")
+        compute_ns = int(max(flops / cost.peak_flops,
+                             bts / cost.hbm_bw) * SEC)
+        return StepCost(compute_ns=compute_ns, ici_bytes=int(ici))
+
+
+@dataclasses.dataclass
+class StragglerSpec:
+    chip: int                           # straggling chip index
+    slowdown: float = 2.0               # compute multiplier
+
+
+def build_training_cluster(
+    spec: ClusterSpec,
+    step_cost: StepCost,
+    n_steps: int,
+    *,
+    skew_bound_ns: int = 1_000_000,
+    stragglers: Tuple[StragglerSpec, ...] = (),
+    fail_at: Optional[Tuple[int, int]] = None,   # (chip, step) -> dies
+    live_step_fn: Optional[Callable] = None,     # executed natively per step
+    chips_per_host: int = 0,                     # 0 = all on one scheduler
+) -> Tuple[Scheduler, List[VTask], Dict]:
+    """Build a data-parallel training simulation.
+
+    Per step each chip: compute (roofline-derived or live-measured), then
+    exchanges its per-step collective bytes with its ring neighbor through
+    the pod hub (reduce-scatter + all-gather ring), with cross-pod
+    gradient reduction over the DCN once per step.
+    """
+    sched = Scheduler(n_cpus=64)
+    pod_hubs = [Hub(f"ici{p}", LinkSpec(bandwidth_bps=spec.ici_bw_Bps * 8,
+                                        latency_ns=spec.ici_lat_ns))
+                for p in range(spec.n_pods)]
+    dcn = Hub("dcn", LinkSpec(bandwidth_bps=spec.dcn_bw_Bps * 8,
+                              latency_ns=spec.dcn_lat_ns))
+    scope = Scope("train", skew_bound_ns)
+    slowdown = {s.chip: s.slowdown for s in stragglers}
+
+    endpoints = []
+    dcn_eps = []
+    for c in range(spec.n_chips):
+        p = c // spec.chips_per_pod
+        ep = pod_hubs[p].attach(Endpoint(f"chip{c}"))
+        endpoints.append(ep)
+        if c % spec.chips_per_pod == 0:      # pod leader joins the DCN
+            dcn_eps.append(dcn.attach(Endpoint(f"pod{p}")))
+
+    tasks: List[VTask] = []
+    done_steps = np.zeros(spec.n_chips, dtype=np.int64)
+
+    def chip_body(c: int):
+        p = c // spec.chips_per_pod
+        right = p * spec.chips_per_pod + (c + 1) % spec.chips_per_pod
+        ep = endpoints[c]
+        mult = slowdown.get(c, 1.0)
+
+        def body():
+            for step in range(n_steps):
+                if fail_at is not None and fail_at == (c, step):
+                    return                    # chip dies silently
+                # 1. compute (live or cost-derived)
+                if live_step_fn is not None:
+                    yield LiveCall(live_step_fn,
+                                   cost_ns=int(step_cost.compute_ns * mult))
+                else:
+                    yield Compute(int(step_cost.compute_ns * mult))
+                # 2. ring exchange: send grad shard to right neighbor,
+                #    receive from left (models RS+AG wire bytes per chip)
+                yield Send(ep, f"chip{right}", step_cost.ici_bytes)
+                yield Recv(ep)
+                # 3. pod leader: cross-pod all-reduce over DCN
+                if spec.n_pods > 1 and c % spec.chips_per_pod == 0:
+                    other = (p + 1) % spec.n_pods
+                    yield Send(dcn_eps[p], f"pod{other}",
+                               step_cost.dcn_bytes)
+                    yield Recv(dcn_eps[p])
+                done_steps[c] = step + 1
+
+        t = VTask(f"chip{c}", body(),
+                  kind="live" if live_step_fn else "modeled")
+        t.join(scope)
+        return t
+
+    for c in range(spec.n_chips):
+        tasks.append(sched.spawn(chip_body(c)))
+
+    ctx = {"scope": scope, "hubs": pod_hubs + [dcn],
+           "done_steps": done_steps, "endpoints": endpoints}
+    return sched, tasks, ctx
+
+
+def analytic_step_ns(spec: ClusterSpec, step_cost: StepCost) -> int:
+    """Closed-form per-step time (the validation target for the sim)."""
+    comm = step_cost.ici_bytes / spec.ici_bw_Bps * SEC + spec.ici_lat_ns
+    dcn = (step_cost.dcn_bytes / spec.dcn_bw_Bps * SEC + spec.dcn_lat_ns
+           if spec.n_pods > 1 else 0)
+    return int(step_cost.compute_ns + comm + dcn)

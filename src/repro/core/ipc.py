@@ -1,0 +1,185 @@
+"""Simulation-aware IPC (paper §3.4): messages, endpoints, hubs.
+
+* **Message** separates timing control from data movement: metadata holds
+  addressing + virtual-time info (send vtime, computed visibility time);
+  the payload rides alongside (the shared-memory path of the paper is an
+  in-process reference, which is exactly zero-copy here).
+* **Endpoint** proxies a component's communication interface.  Each has a
+  per-receiver incoming queue ordered by visibility time; the scheduler
+  reads the queue head as a dispatch hint.
+* **Hub** is the kernel-resident router: lightweight routing + latency
+  control on the common path.  ``hook`` is the eBPF analogue — a pure
+  function (msg, hub state) -> extra_latency_ns / rerouting that runs
+  inline in the hub without a context switch.  Heavier behavior is a
+  modeled component behind the same endpoint—hub interface
+  (``ModeledHubComponent``).
+
+Latency model on the common path (per link): serialization (size/bw) +
+propagation (latency_ns) + FIFO queuing (link busy-until tracking).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.vtime import SEC
+
+
+@dataclasses.dataclass
+class Message:
+    src: str
+    dst: str
+    size_bytes: int
+    send_vtime: int
+    visibility_time: int = 0
+    payload: Any = None
+    seq: int = 0
+    hops: int = 0
+
+    def sort_key(self):
+        return (self.visibility_time, self.seq)
+
+
+@dataclasses.dataclass
+class LinkSpec:
+    bandwidth_bps: float = 10e9 * 8      # 10 GB/s default
+    latency_ns: int = 2_000              # 2 us
+    mtu: int = 0                         # 0 = no segmentation
+
+
+class Endpoint:
+    """A component port.  ``owner`` is the vtask that receives here."""
+
+    def __init__(self, name: str, owner=None):
+        self.name = name
+        self.owner = owner
+        self.hub: Optional["Hub"] = None
+        self._queue: List[Tuple[Tuple[int, int], Message]] = []
+
+    # receiver side --------------------------------------------------------
+    def deliver(self, msg: Message) -> None:
+        heapq.heappush(self._queue, (msg.sort_key(), msg))
+        if self.owner is not None:
+            head = self._queue[0][1].visibility_time
+            self.owner.inbox_hint = head
+
+    def head_visibility(self) -> Optional[int]:
+        return self._queue[0][1].visibility_time if self._queue else None
+
+    def pop_visible(self, vtime: int) -> Optional[Message]:
+        """Messages become visible only in virtual-time order."""
+        if self._queue and self._queue[0][1].visibility_time <= vtime:
+            _, msg = heapq.heappop(self._queue)
+            if self.owner is not None:
+                self.owner.inbox_hint = self.head_visibility()
+            return msg
+        return None
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+
+HookFn = Callable[[Message, Dict[str, Any]], int]
+
+
+class Hub:
+    """Kernel-resident message router with per-link latency control."""
+
+    _seq = itertools.count()
+
+    def __init__(self, name: str, default_link: LinkSpec = LinkSpec()):
+        self.name = name
+        self.endpoints: Dict[str, Endpoint] = {}
+        self.links: Dict[Tuple[str, str], LinkSpec] = {}
+        self.default_link = default_link
+        self.hooks: List[HookFn] = []
+        self.state: Dict[str, Any] = {}           # hook scratch state
+        self.busy_until: Dict[Tuple[str, str], int] = {}
+        self.stats = {"messages": 0, "bytes": 0, "queued_ns": 0}
+        self.peers: Dict[str, "Hub"] = {}         # distributed hub instances
+        self.peer_link: LinkSpec = LinkSpec(bandwidth_bps=25e9 * 8,
+                                            latency_ns=10_000)
+
+    # wiring -----------------------------------------------------------------
+    def attach(self, ep: Endpoint) -> Endpoint:
+        self.endpoints[ep.name] = ep
+        ep.hub = self
+        return ep
+
+    def connect(self, a: str, b: str, link: LinkSpec) -> None:
+        self.links[(a, b)] = link
+        self.links[(b, a)] = link
+
+    def add_hook(self, fn: HookFn) -> None:
+        """eBPF-analogue: inline, pure extra-latency/steering program."""
+        self.hooks.append(fn)
+
+    def peer_with(self, other: "Hub", link: Optional[LinkSpec] = None):
+        """Distributed hub instance (paper §3.5): one logical hub spanning
+        hosts; cross-instance messages carry addressing+visibility
+        metadata over the host interconnect link."""
+        self.peers[other.name] = other
+        other.peers[self.name] = self
+        if link is not None:
+            self.peer_link = link
+            other.peer_link = link
+
+    # data path ----------------------------------------------------------------
+    def _link(self, src: str, dst: str) -> LinkSpec:
+        return self.links.get((src, dst), self.default_link)
+
+    def send(self, src: str, dst: str, size_bytes: int, send_vtime: int,
+             payload: Any = None) -> Message:
+        msg = Message(src=src, dst=dst, size_bytes=size_bytes,
+                      send_vtime=send_vtime, payload=payload,
+                      seq=next(Hub._seq))
+        return self.route(msg)
+
+    def route(self, msg: Message) -> Message:
+        msg.hops += 1
+        extra = 0
+        for hook in self.hooks:
+            extra += int(hook(msg, self.state))
+        if msg.dst not in self.endpoints:
+            # cross-host: forward to the distributed hub instance owning dst
+            for peer in self.peers.values():
+                if msg.dst in peer.endpoints:
+                    link = self.peer_link
+                    msg.send_vtime = self._serialize(msg, ("__peer__",
+                                                           peer.name),
+                                                     link, extra)
+                    return peer.route(msg)
+            raise KeyError(f"hub {self.name}: unknown endpoint {msg.dst}")
+        link = self._link(msg.src, msg.dst)
+        msg.visibility_time = self._serialize(msg, (msg.src, msg.dst),
+                                              link, extra)
+        self.endpoints[msg.dst].deliver(msg)
+        self.stats["messages"] += 1
+        self.stats["bytes"] += msg.size_bytes
+        return msg
+
+    def _serialize(self, msg: Message, link_key, link: LinkSpec,
+                   extra_ns: int) -> int:
+        ser_ns = int(msg.size_bytes * 8 / link.bandwidth_bps * SEC)
+        start = max(msg.send_vtime, self.busy_until.get(link_key, 0))
+        self.stats["queued_ns"] += start - msg.send_vtime
+        end = start + ser_ns
+        self.busy_until[link_key] = end
+        return end + link.latency_ns + extra_ns
+
+
+class ModeledHubComponent:
+    """Detailed connection behavior as a modeled component behind the same
+    endpoint—hub interface (paper: 'more detailed connection behavior can
+    instead be modeled as a separate component ... at higher overhead').
+
+    Wrap as a vtask body with ``switch_vtask_body``: it drains its ingress
+    endpoint, applies a per-message service model, and re-routes."""
+
+    def __init__(self, name: str, hub: Hub, service_fn):
+        self.name = name
+        self.hub = hub
+        self.ingress = hub.attach(Endpoint(f"{name}.in"))
+        self.service_fn = service_fn       # (msg) -> (service_ns, out_dst)

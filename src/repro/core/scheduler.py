@@ -1,0 +1,342 @@
+"""Simulation-oriented scheduling (paper §3.2): the reference engine.
+
+Deterministic in-process realization of LiveStack's scheduler:
+
+* vtasks yield actions (see ``repro.core.vtask``); the yield points are
+  the dispatch boundaries.
+* Per round, up to ``n_cpus`` runnable vtasks satisfying the bounded-skew
+  condition in **every** scope are dispatched (lowest-vtime first,
+  deterministic id tie-break).  The globally minimal runnable vtask is
+  always eligible (see ``tests/test_scheduler.py::test_no_livelock``), so
+  the simulation cannot livelock while work remains.
+* Live vtasks advance clock-derived vtime (measured host span x
+  calibration, scaled by the cell-interference factor — imperfect
+  isolation is folded into simulated time, §3.3); modeled vtasks advance
+  by reported latency (sync return or async RunPage), and are preempted
+  to FAULTY after ``preempt_after`` consecutive zero-progress dispatches.
+* Blocked vtasks are excluded from scope minima; wake-up forwards their
+  vtime to the scope vtime (and to the message visibility time for
+  receive wake-ups).
+* If nothing is runnable, the scheduler performs an idle jump to the
+  earliest pending visibility/event time (a halted CPU observing elapsed
+  time on resume).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.core import scope as scope_mod
+from repro.core.cells import CellManager
+from repro.core.ipc import Endpoint, Message
+from repro.core.vtask import (Await, Compute, LiveCall, Recv, Send, State,
+                              VTask, Yield)
+
+
+@dataclasses.dataclass
+class SchedStats:
+    rounds: int = 0
+    dispatches: int = 0
+    live_calls: int = 0
+    idle_jumps: int = 0
+    preemptions: int = 0
+    skew_stalls: int = 0          # eligible-check rejections
+    max_skew_seen: int = 0
+
+
+class DeadlockError(RuntimeError):
+    pass
+
+
+class Scheduler:
+    def __init__(self, host: int = 0, n_cpus: int = 8,
+                 cells: Optional[CellManager] = None,
+                 preempt_after: int = 100,
+                 send_overhead_ns: int = 500,
+                 distributed: bool = False,
+                 cpu_resource: bool = False):
+        self.host = host
+        self.n_cpus = n_cpus
+        self.cells = cells or CellManager()
+        self.tasks: List[VTask] = []
+        self.preempt_after = preempt_after
+        self.send_overhead_ns = send_overhead_ns
+        self.distributed = distributed   # a remote host may still wake us
+        # cpu_resource: model the host's CPUs as contended resources in
+        # *virtual time* (per-CPU busy-until).  In the paper this happens
+        # implicitly — vCPUs execute on real, time-shared cores and the
+        # pvclock measures it; in-process live calls execute solo, so
+        # co-located compute must queue for a simulated CPU instead.
+        # Leave False for cluster sims where every vtask is its own
+        # machine.
+        self.cpu_resource = cpu_resource
+        self._cpu_free_at: List[int] = [0] * n_cpus
+        self.stats = SchedStats()
+        self._inbound: Dict[int, Message] = {}    # task.id -> pending recv
+
+    # -- registration --------------------------------------------------------
+    def spawn(self, task: VTask) -> VTask:
+        task.host = self.host
+        self.tasks.append(task)
+        for s in task.scopes:
+            s.invalidate()
+        return task
+
+    # -- introspection -------------------------------------------------------
+    def runnable(self) -> List[VTask]:
+        return [t for t in self.tasks if t.state == State.RUNNABLE]
+
+    def unfinished(self) -> List[VTask]:
+        return [t for t in self.tasks
+                if t.state in (State.RUNNABLE, State.BLOCKED)]
+
+    def now(self) -> int:
+        """Host-level simulated time = min over unfinished vtasks."""
+        vs = [t.vtime for t in self.unfinished()]
+        return min(vs) if vs else max(
+            (t.vtime for t in self.tasks), default=0)
+
+    def next_time(self) -> Optional[int]:
+        """Conservative next-event time: min over runnable real vtasks'
+        vtime and blocked vtasks' pending visibility.  Blocked vtasks with
+        nothing pending cannot act (or send) until woken, so they do not
+        hold the horizon back (classic PDES next-event semantics)."""
+        times = []
+        for t in self.tasks:
+            if t.kind == "proxy":
+                continue
+            if t.state == State.RUNNABLE:
+                times.append(t.vtime)
+            elif t.state == State.BLOCKED and t._wait_reason:
+                kind, obj = t._wait_reason
+                v = (obj.head_visibility() if kind == "recv"
+                     else obj.set_at_vtime)
+                if v is not None:
+                    times.append(max(t.vtime, v))
+        return min(times) if times else None
+
+    def horizon(self) -> int:
+        """Completed simulated time = max vtime reached."""
+        return max((t.vtime for t in self.tasks), default=0)
+
+    # -- wake-ups -------------------------------------------------------------
+    def _try_wake(self, task: VTask) -> bool:
+        reason = task._wait_reason
+        if reason is None:
+            return False
+        kind, obj = reason
+        if kind == "recv":
+            ep: Endpoint = obj
+            vis = ep.head_visibility()
+            if vis is None:
+                return False
+            scope_mod.wake(task)
+            task.vtime = max(task.vtime, vis)    # idle-until-interrupt
+            task._wait_reason = None
+            return True
+        if kind == "event":
+            if obj.set_at_vtime is None:
+                return False
+            scope_mod.wake(task)
+            task.vtime = max(task.vtime, obj.set_at_vtime)
+            task._wait_reason = None
+            return True
+        return False
+
+    def _wake_pass(self) -> None:
+        for t in self.tasks:
+            if t.state == State.BLOCKED:
+                self._try_wake(t)
+
+    # -- one action -----------------------------------------------------------
+    def _advance(self, task: VTask, delta_ns: int) -> None:
+        if delta_ns < 0:
+            raise ValueError("vtime cannot go backwards")
+        task.vtime += delta_ns
+        for s in task.scopes:
+            s.invalidate()
+
+    def _advance_on_cpu(self, task: VTask, delta_ns: int) -> None:
+        """Advance vtime by a compute span, queuing for a simulated CPU
+        when cpu_resource accounting is on (virtual-time time-sharing)."""
+        if not self.cpu_resource:
+            self._advance(task, delta_ns)
+            return
+        cpu = min(range(self.n_cpus), key=self._cpu_free_at.__getitem__)
+        start = max(task.vtime, self._cpu_free_at[cpu])
+        end = start + delta_ns
+        self._cpu_free_at[cpu] = end
+        self._advance(task, end - task.vtime)
+
+    def _exec_action(self, task: VTask, action, send_value=None):
+        """Returns value to send into the generator on next dispatch."""
+        if isinstance(action, Compute):
+            progress = action.ns + task.run_page.drain()
+            self._advance_on_cpu(task, progress)
+            if task.kind == "modeled":
+                if progress == 0:
+                    task.zero_progress += 1
+                    if task.zero_progress >= self.preempt_after:
+                        task.state = State.FAULTY
+                        self.stats.preemptions += 1
+                        for s in task.scopes:
+                            s.invalidate()
+                else:
+                    task.zero_progress = 0
+            return None
+        if isinstance(action, LiveCall):
+            self.stats.live_calls += 1
+            slow = self.cells.slowdown(task, self._coactive_cells(task))
+            if action.cost_ns is not None:
+                result = action.fn(*action.args, **action.kwargs)
+                delta = int(action.cost_ns * slow)
+            else:
+                result, host_delta = task.clock.measure(
+                    action.fn, *action.args, **action.kwargs)
+                delta = int(host_delta * slow)
+            delta += self.cells.switch_cost(task)
+            task.stats["live_ns"] += delta
+            self._advance_on_cpu(task, delta)
+            return result
+        if isinstance(action, Send):
+            hub = action.endpoint.hub
+            self._advance(task, self.send_overhead_ns)
+            msg = hub.send(action.endpoint.name, action.dst,
+                           action.size_bytes, task.vtime, action.payload)
+            task.stats["msgs_tx"] += 1
+            return msg
+        if isinstance(action, Recv):
+            msg = action.endpoint.pop_visible(task.vtime)
+            if msg is not None:
+                task.stats["msgs_rx"] += 1
+                return msg
+            vis = action.endpoint.head_visibility()
+            if vis is not None:
+                # message exists but not yet visible: idle until it is
+                self._advance(task, vis - task.vtime)
+                msg = action.endpoint.pop_visible(task.vtime)
+                task.stats["msgs_rx"] += 1
+                return msg
+            task.state = State.BLOCKED
+            task._wait_reason = ("recv", action.endpoint)
+            for s in task.scopes:
+                s.invalidate()
+            return None
+        if isinstance(action, Await):
+            ev = action.event
+            if ev.set_at_vtime is not None:
+                self._advance(task, max(0, ev.set_at_vtime - task.vtime))
+                return None
+            task.state = State.BLOCKED
+            task._wait_reason = ("event", ev)
+            for s in task.scopes:
+                s.invalidate()
+            return None
+        if isinstance(action, Yield):
+            return None
+        raise TypeError(f"unknown action {action!r}")
+
+    def _coactive_cells(self, task: VTask) -> List[str]:
+        """Cells of other unfinished live tasks on this host (spatial
+        interference candidates)."""
+        return [t.cell for t in self.tasks
+                if t is not task and t.cell is not None
+                and t.state in (State.RUNNABLE, State.BLOCKED)]
+
+    def _dispatch(self, task: VTask) -> None:
+        task.stats["dispatches"] += 1
+        self.stats.dispatches += 1
+        if task._pending_action is not None:
+            # retry the action that blocked (Recv/Await); the generator
+            # must receive its real result, not None.
+            action, task._pending_action = task._pending_action, None
+        else:
+            send_value = task.result
+            task.result = None
+            try:
+                action = task.body.send(send_value)
+            except StopIteration as stop:
+                task.state = State.DONE
+                task.result = getattr(stop, "value", None)
+                for s in task.scopes:
+                    s.invalidate()
+                return
+        value = self._exec_action(task, action)
+        if task.state == State.BLOCKED:
+            task._pending_action = action
+            return
+        task.result = value
+
+    # -- main loop --------------------------------------------------------------
+    def step_round(self, until_vtime: Optional[int] = None) -> bool:
+        """One dispatch round.  Returns False when nothing is left to do
+        locally (all done, or stalled on remote proxy vtime / the epoch
+        gate — the orchestrator then syncs proxies and resumes).
+
+        ``until_vtime`` is the conservative epoch gate: only vtasks with
+        vtime < until_vtime may dispatch this round."""
+        self.stats.rounds += 1
+        self._wake_pass()
+        all_runnable = [t for t in self.runnable() if t.kind != "proxy"]
+        runnable = all_runnable
+        if until_vtime is not None:
+            runnable = [t for t in runnable if t.vtime < until_vtime]
+            if not runnable and all_runnable:
+                return False            # everything is past the epoch gate
+        if not runnable:
+            blocked = [t for t in self.tasks
+                       if t.state == State.BLOCKED and t.kind != "proxy"]
+            if not blocked:
+                return False
+            # idle jump: earliest pending visibility/event
+            horizon = None
+            for t in blocked:
+                kind, obj = t._wait_reason or (None, None)
+                if kind == "recv":
+                    v = obj.head_visibility()
+                elif kind == "event":
+                    v = obj.set_at_vtime
+                else:
+                    v = None
+                if v is not None:
+                    horizon = v if horizon is None else min(horizon, v)
+            if horizon is None:
+                if self.distributed:
+                    # a remote host may still deliver; yield to orchestrator
+                    return False
+                raise DeadlockError(
+                    f"host {self.host}: all tasks blocked with no pending "
+                    f"messages/events: {blocked}")
+            self.stats.idle_jumps += 1
+            for t in blocked:
+                self._try_wake(t)
+            return True
+        # bounded-skew eligibility, lowest-vtime first; ineligible vtasks
+        # are rescheduled (counted as skew stalls) until peers catch up
+        runnable.sort(key=lambda t: (t.vtime, t.id))
+        eligible = []
+        for t in runnable:
+            if scope_mod.all_eligible(t):
+                eligible.append(t)
+            else:
+                self.stats.skew_stalls += 1
+        picked = eligible[: self.n_cpus]
+        if not picked:
+            # every dispatchable vtask is skew-bound behind a proxy (remote)
+            # vtime: yield to the orchestrator for a proxy sync.
+            return False
+        for t in picked:
+            for s in t.scopes:
+                sv = s.vtime
+                if sv >= 0:
+                    self.stats.max_skew_seen = max(
+                        self.stats.max_skew_seen, t.vtime - sv)
+            self._dispatch(t)
+        return True
+
+    def run(self, max_rounds: int = 10_000_000,
+            until_vtime: Optional[int] = None) -> SchedStats:
+        for _ in range(max_rounds):
+            if not self.step_round(until_vtime):
+                break
+        return self.stats

@@ -1,0 +1,75 @@
+"""Synchronization scopes (paper §3.2, "Dispatch").
+
+A scope groups vtasks that must progress together within a bounded
+virtual-time skew.  A vtask may belong to multiple scopes; dispatch
+eligibility requires the bound to hold in *every* scope.
+
+scope.vtime (the cached minimum) is computed over RUNNABLE members only —
+blocked vtasks are excluded (they cannot make progress and would pin the
+minimum, deadlocking e.g. VM boot where halted vCPUs lag the bootstrap
+vCPU).  On wake, a previously blocked vtask's vtime is forwarded to the
+current scope vtime (time causality: a sleeper observes that time moved).
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, Optional
+
+from repro.core.vtask import State, VTask
+
+
+class Scope:
+    def __init__(self, name: str, skew_bound_ns: int):
+        self.name = name
+        self.skew_bound_ns = int(skew_bound_ns)
+        self.members: List[VTask] = []
+        self._cached_vtime: Optional[int] = None
+
+    def add(self, task: VTask) -> None:
+        if task not in self.members:
+            self.members.append(task)
+            if self not in task.scopes:
+                task.scopes.append(self)
+        self.invalidate()
+
+    def remove(self, task: VTask) -> None:
+        if task in self.members:
+            self.members.remove(task)
+        if self in task.scopes:
+            task.scopes.remove(self)
+        self.invalidate()
+
+    def invalidate(self) -> None:
+        self._cached_vtime = None
+
+    @property
+    def vtime(self) -> int:
+        """Cached min vtime over runnable members (+inf if none)."""
+        if self._cached_vtime is None:
+            vs = [t.vtime for t in self.members if t.state == State.RUNNABLE]
+            self._cached_vtime = min(vs) if vs else -1
+        return self._cached_vtime
+
+    def eligible(self, task: VTask) -> bool:
+        sv = self.vtime
+        if sv < 0:      # no runnable members -> nothing to lag behind
+            return True
+        return task.vtime <= sv + self.skew_bound_ns
+
+    def forward_on_wake(self, task: VTask) -> None:
+        """Paper: wake-up forwards vtime to the current scope vtime."""
+        sv = self.vtime
+        if sv >= 0 and task.vtime < sv:
+            task.vtime = sv
+
+
+def all_eligible(task: VTask) -> bool:
+    return all(s.eligible(task) for s in task.scopes)
+
+
+def wake(task: VTask) -> None:
+    """Unblock + forward vtime across every scope (max of scope vtimes)."""
+    for s in task.scopes:
+        s.forward_on_wake(task)
+    task.state = State.RUNNABLE
+    for s in task.scopes:
+        s.invalidate()

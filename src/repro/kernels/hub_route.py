@@ -1,0 +1,113 @@
+"""Batched hub message-routing Pallas TPU kernel (simulation-aware IPC
+fast path, paper §3.4).
+
+Computes visibility times for a batch of messages with per-link FIFO
+queuing — the hub's common-path latency control as one vectorized pass:
+
+  end_i = max(send_i, end_{i-1 on same link}) + size_i/bw
+  visibility_i = end_i + latency
+
+The FIFO recurrence is a segmented max-plus scan (elements (S, A) with
+composition (max(S1, S2-A1), A1+A2)); within a VMEM tile it runs as a
+log-depth doubling on VREGs, and the running prefix + link id carry
+across tiles in VMEM/SMEM scratch (grid ``arbitrary``).
+
+Messages must be pre-sorted by (link_id, send_vtime) — the hub batches
+per flush epoch, so the sort amortizes.  Oracle:
+``repro.core.engine_jax.hub_visibility_ref``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -(2**30)  # python int: jnp scalars would be captured as consts
+
+
+def _kernel(send_ref, ser_ref, link_ref, lat_ref, out_ref, carry_ref, *,
+            block):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        carry_ref[0] = NEG          # S_run
+        carry_ref[1] = 0            # A_run
+        carry_ref[2] = -1           # last link id
+
+    send = send_ref[...]
+    ser = ser_ref[...]
+    link = link_ref[...]
+    lat = lat_ref[...]
+
+    prev_link = jnp.concatenate(
+        [jnp.full((1,), carry_ref[2], jnp.int32), link[:-1]])
+    seg_first = link != prev_link
+
+    # in-tile segmented max-plus scan via doubling
+    S, A, G = send, ser, seg_first
+    steps = int(math.log2(block))
+    for st in range(steps):
+        d = 1 << st
+        # fills are the monoid identity (NEG, 0, False) so tile-start
+        # prefixes compose with a no-op rather than a fake boundary
+        S_sh = jnp.concatenate([jnp.full((d,), NEG, jnp.int32), S[:-d]])
+        A_sh = jnp.concatenate([jnp.zeros((d,), jnp.int32), A[:-d]])
+        G_sh = jnp.concatenate([jnp.zeros((d,), bool), G[:-d]])
+        S_new = jnp.where(G, S, jnp.maximum(S_sh, S - A_sh))
+        A_new = jnp.where(G, A, A_sh + A)
+        S, A, G = S_new, A_new, G | G_sh
+
+    # fold the cross-tile carry into prefixes with no boundary yet
+    S_c, A_c = carry_ref[0], carry_ref[1]
+    S_fin = jnp.where(G, S, jnp.maximum(S_c, S - A_c))
+    A_fin = jnp.where(G, A, A_c + A)
+    out_ref[...] = S_fin + A_fin + lat
+
+    carry_ref[0] = S_fin[-1]
+    carry_ref[1] = A_fin[-1]
+    carry_ref[2] = link[-1]
+
+
+def hub_route(send_vtime, size_bytes, link_id, link_bw_Bps, link_lat_ns,
+              *, block=2048, interpret=False):
+    """Visibility times (ns int32) for sorted messages.
+
+    send_vtime (M,) int32; size_bytes (M,) int32; link_id (M,) int32;
+    link_bw_Bps/link_lat_ns (L,) per-link tables."""
+    m = send_vtime.shape[0]
+    ser = (size_bytes.astype(jnp.float32) * 1e9
+           / link_bw_Bps[link_id]).astype(jnp.int32)
+    lat = link_lat_ns[link_id].astype(jnp.int32)
+    block = min(block, 1 << int(math.ceil(math.log2(max(m, 1)))))
+    assert block & (block - 1) == 0
+    m_pad = pl.cdiv(m, block) * block
+    if m_pad != m:
+        pad = (0, m_pad - m)
+        send_vtime = jnp.pad(send_vtime, pad)
+        ser = jnp.pad(ser, pad)
+        # padded tail gets a fresh fake link so it can't affect carries
+        link_id = jnp.pad(link_id, pad, constant_values=2**30)
+        lat = jnp.pad(lat, pad)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, block=block),
+        grid=(m_pad // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda j: (j,)),
+            pl.BlockSpec((block,), lambda j: (j,)),
+            pl.BlockSpec((block,), lambda j: (j,)),
+            pl.BlockSpec((block,), lambda j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((m_pad,), jnp.int32),
+        scratch_shapes=[pltpu.SMEM((3,), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(send_vtime, ser, link_id, lat)
+    return out[:m]

@@ -1,0 +1,115 @@
+"""LiveStack scheduler hot spot as a Pallas TPU kernel.
+
+Per dispatch round the scheduler computes (paper §3.2):
+  1. scope minima: min vtime over runnable members of each scope,
+  2. eligibility:  vtask runnable AND vtime <= min + skew in EVERY scope.
+
+At cluster scale (10^4..10^5 vtasks x 10^2..10^3 scopes) this is the
+per-round bottleneck — a masked segmented-min plus a masked all-reduce
+over the scope axis.  The kernel tiles the (N x S) membership matrix into
+VMEM blocks: grid (n_blocks, s_blocks) with the scope-min pass
+accumulating into a VMEM scratch row per scope block, then a second
+fused pass producing the per-vtask eligibility conjunction.
+
+Layout notes: vtimes are int32 ticks (see engine_jax); membership is a
+dense int8 mask (bitpacking is a further 8x but int8 keeps the VPU mask
+ops trivial); tiles are (8..512, 128)-aligned for the (8,128) VREG shape.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+INF = 2**30  # python int: jnp scalars would be captured as consts
+
+
+def _minima_kernel(vtime_ref, runnable_ref, member_ref, min_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        min_ref[...] = jnp.full_like(min_ref, INF)
+
+    v = vtime_ref[...]                       # (bn,)
+    r = runnable_ref[...] != 0               # (bn,)
+    m = member_ref[...] != 0                 # (bn, bs)
+    vm = jnp.where(r[:, None] & m, v[:, None], INF)
+    min_ref[...] = jnp.minimum(min_ref[...], jnp.min(vm, axis=0))
+
+
+def _elig_kernel(vtime_ref, runnable_ref, member_ref, skew_ref, minima_ref,
+                 elig_ref, ok_ref, *, ns):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        ok_ref[...] = jnp.ones_like(ok_ref)
+
+    v = vtime_ref[...]
+    m = member_ref[...] != 0
+    mins = minima_ref[...]
+    skew = skew_ref[...]
+    ok_scope = (v[:, None] <= mins[None, :] + skew[None, :])
+    ok_scope |= ~m | (mins == INF)[None, :]
+    ok_ref[...] &= jnp.all(ok_scope, axis=1).astype(jnp.int8)
+
+    @pl.when(j == ns - 1)
+    def _finalize():
+        elig_ref[...] = ok_ref[...] & runnable_ref[...]
+
+
+def minskew(vtime, runnable, membership, skew, *, block_n=512,
+            block_s=128, interpret=False):
+    """Returns (scope minima (S,), eligibility (N,) int8).
+
+    vtime (N,) int32; runnable (N,) int8; membership (N, S) int8;
+    skew (S,) int32."""
+    n, s = membership.shape
+    block_n = min(block_n, max(8, n))
+    block_s = min(block_s, max(8, s))
+    n_pad = pl.cdiv(n, block_n) * block_n
+    s_pad = pl.cdiv(s, block_s) * block_s
+    vtime = jnp.pad(vtime, (0, n_pad - n), constant_values=INF)
+    runnable = jnp.pad(runnable, (0, n_pad - n))
+    membership = jnp.pad(membership, ((0, n_pad - n), (0, s_pad - s)))
+    skew = jnp.pad(skew, (0, s_pad - s))
+    nb, sb = n_pad // block_n, s_pad // block_s
+
+    minima = pl.pallas_call(
+        _minima_kernel,
+        grid=(nb, sb),
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+            pl.BlockSpec((block_n, block_s), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_s,), lambda i, j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((s_pad,), jnp.int32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "parallel")),
+        interpret=interpret,
+    )(vtime, runnable, membership)
+
+    elig = pl.pallas_call(
+        functools.partial(_elig_kernel, ns=sb),
+        grid=(nb, sb),
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+            pl.BlockSpec((block_n, block_s), lambda i, j: (i, j)),
+            pl.BlockSpec((block_s,), lambda i, j: (j,)),
+            pl.BlockSpec((block_s,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.int8),
+        scratch_shapes=[pltpu.VMEM((block_n,), jnp.int8)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(vtime, runnable, membership, skew, minima)
+
+    return minima[:s], elig[:n]

@@ -1,0 +1,113 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On TPU the kernels lower natively; on CPU they run in interpret mode
+(used by the test-suite oracles) or fall back to the pure-jnp reference
+(used by the models at trace time — XLA:CPU fuses those fine).  Set
+``KERNEL_MODE`` to force a path:
+  auto      — TPU: kernels; CPU: references
+  kernel    — always kernels (interpret=True off-TPU)
+  reference — always references
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.decode_attention import decode_attention as _decode_k
+from repro.kernels.flash_attention import flash_attention_flat as _flash_k
+from repro.kernels.hub_route import hub_route as _hub_k
+from repro.kernels.minskew import minskew as _minskew_k
+from repro.kernels.mlstm_kernel import mlstm_chunkwise as _mlstm_k
+from repro.kernels.rglru_scan import rglru_scan as _rglru_k
+
+KERNEL_MODE = "auto"
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _use_kernel() -> bool:
+    if KERNEL_MODE == "kernel":
+        return True
+    if KERNEL_MODE == "reference":
+        return False
+    return _on_tpu()
+
+
+def _interp() -> bool:
+    return not _on_tpu()
+
+
+@partial(jax.jit, static_argnames=("causal", "window"))
+def flash_attention(q, k, v, *, causal=True, window=0):
+    """q (B,S,H,hd); k/v (B,S,Hkv,hd) -> (B,S,H,hd)."""
+    b, s, h, hd = q.shape
+    hkv = k.shape[2]
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, s, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, s, hd)
+    if _use_kernel():
+        of = _flash_k(qf, kf, vf, causal=causal, window=window,
+                      interpret=_interp())
+    else:
+        of = _ref.attention_flat_ref(qf, kf, vf, causal=causal,
+                                     window=window)
+    return of.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+
+
+@jax.jit
+def decode_attention(q, k_cache, v_cache, lengths):
+    """q (B,H,hd); caches (B,S,Hkv,hd); lengths (B,) -> (B,H,hd)."""
+    if _use_kernel():
+        return _decode_k(q, k_cache, v_cache, lengths,
+                         interpret=_interp())
+    return _ref.decode_attention_ref(q, k_cache, v_cache, lengths)
+
+
+@jax.jit
+def rglru(log_a, b, h0=None):
+    if _use_kernel():
+        return _rglru_k(log_a, b, h0, interpret=_interp())
+    return _ref.rglru_ref(log_a, b, h0)
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def mlstm(q, k, v, i_raw, f_raw, *, chunk=128):
+    """q,k,v (B,S,H,hd); gates (B,S,H) -> h (B,S,H,hd)."""
+    b, s, h, hd = q.shape
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    gi = i_raw.transpose(0, 2, 1).reshape(b * h, s).astype(jnp.float32)
+    gf = f_raw.transpose(0, 2, 1).reshape(b * h, s).astype(jnp.float32)
+    chunk = min(chunk, s)
+    if s % chunk:
+        raise ValueError(f"S={s} not divisible by chunk={chunk}")
+    hf = _mlstm_k(qf, kf, vf, gi, gf, chunk=chunk, interpret=_interp())
+    return hf.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+
+
+def minskew(vtime, runnable, membership, skew):
+    if _use_kernel():
+        return _minskew_k(vtime, runnable, membership, skew,
+                          interpret=_interp())
+    from repro.core.engine_jax import eligibility, scope_minima
+
+    minima = scope_minima(vtime, runnable != 0, membership != 0)
+    elig = eligibility(vtime, runnable != 0, membership != 0, skew,
+                       minima)
+    return minima, elig.astype(jnp.int8)
+
+
+def hub_route(send_vtime, size_bytes, link_id, link_bw_Bps, link_lat_ns):
+    if _use_kernel():
+        return _hub_k(send_vtime, size_bytes, link_id, link_bw_Bps,
+                      link_lat_ns, interpret=_interp())
+    from repro.core.engine_jax import hub_visibility
+
+    return hub_visibility(send_vtime, size_bytes, link_id, link_bw_Bps,
+                          link_lat_ns)

@@ -1,0 +1,121 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+# -- flash attention -----------------------------------------------------------
+
+
+def attention_flat_ref(q, k, v, *, causal=True, window=0):
+    """q (BH, Sq, hd); k/v (BHkv, Sk, hd) — exact softmax attention."""
+    bh, sq, hd = q.shape
+    bhkv, sk, _ = k.shape
+    qpk = bh // bhkv
+    k = jnp.repeat(k, qpk, axis=0)
+    v = jnp.repeat(v, qpk, axis=0)
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+# -- decode attention ----------------------------------------------------------
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """q (B, H, hd); caches (B, S, Hkv, hd); lengths (B,) valid prefixes."""
+    b, h, hd = q.shape
+    _, s, hkv, _ = k_cache.shape
+    qpk = h // hkv
+    k = jnp.repeat(k_cache, qpk, axis=2)             # (B, S, H, hd)
+    v = jnp.repeat(v_cache, qpk, axis=2)
+    scale = 1.0 / math.sqrt(hd)
+    sc = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) * scale
+    valid = jnp.arange(s)[None, None, :] < lengths[:, None, None]
+    sc = jnp.where(valid, sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+# -- RG-LRU linear recurrence ---------------------------------------------------
+
+
+def rglru_ref(log_a, b, h0=None):
+    """h_t = exp(log_a_t) * h_{t-1} + b_t over axis 1.  (B, S, W) fp32."""
+    def step(h, xs):
+        la, bt = xs
+        h = jnp.exp(la) * h + bt
+        return h, h
+
+    B, S, W = log_a.shape
+    h0 = jnp.zeros((B, W), jnp.float32) if h0 is None else h0
+    _, hs = jax.lax.scan(step, h0, (log_a.swapaxes(0, 1),
+                                    b.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1)
+
+
+# -- mLSTM chunkwise ------------------------------------------------------------
+# (oracle = the step-recurrent form in repro.models.xlstm.mlstm_step)
+
+
+def mlstm_seq_ref(q, k, v, i_raw, f_raw, c0, n0, i_cap=8.0):
+    """Sequential stabilized-gate mLSTM; q,k,v (B,S,H,hd)."""
+    from repro.models.xlstm import mlstm_step
+
+    def step(carry, xs):
+        c, n = carry
+        qt, kt, vt, it, ft = xs
+        h, (c, n) = mlstm_step(qt, kt, vt, it, ft, c, n)
+        return (c, n), h
+
+    xs = tuple(x.swapaxes(0, 1) for x in (q, k, v, i_raw, f_raw))
+    (cf, nf), hs = jax.lax.scan(step, (c0, n0), xs)
+    return hs.swapaxes(0, 1), (cf, nf)
+
+
+# -- minskew (scheduler hot spot) -----------------------------------------------
+
+
+def minskew_ref(vtime, runnable, membership, skew):
+    """Scope minima + eligibility mask — numpy oracle."""
+    vtime = np.asarray(vtime)
+    runnable = np.asarray(runnable)
+    membership = np.asarray(membership)
+    skew = np.asarray(skew)
+    n, s = membership.shape
+    INF = np.int32(2**30)
+    minima = np.full(s, INF, np.int32)
+    for j in range(s):
+        members = runnable & membership[:, j]
+        if members.any():
+            minima[j] = vtime[members].min()
+    elig = runnable.copy()
+    for i in range(n):
+        for j in range(s):
+            if membership[i, j] and minima[j] != INF:
+                if vtime[i] > minima[j] + skew[j]:
+                    elig[i] = False
+    return minima, elig
+
+
+# -- hub_route -------------------------------------------------------------------
+# oracle lives in repro.core.engine_jax.hub_visibility_ref

@@ -1,0 +1,248 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (architecture x input-shape x
+# mesh) cell and extract memory / cost / collective statistics.
+#
+# The two lines above MUST stay first: jax locks the device count on first
+# init, and only the dry-run wants 512 placeholder host devices.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--single-pod]
+# Results land in results/dryrun/<arch>__<shape>__<mesh>.json.
+
+import argparse
+import json
+import pathlib
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.launch import shapes as shp
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry
+from repro.optim import opt_state_specs
+from repro.parallel import ctx as pctx
+from repro.parallel import sharding as shd
+from repro.serve.step import (build_decode_step, build_prefill_step,
+                              cache_shardings, serve_rules)
+from repro.train.step import build_train_step, train_state_shardings
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?"
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-chip wire-byte estimate per collective type from optimized HLO.
+
+    Post-SPMD shapes are per-partition.  Ring cost model: all-gather ->
+    result bytes; reduce-scatter/all-to-all/permute -> operand(=result)
+    bytes; all-reduce -> 2x bytes (RS + AG phases)."""
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0, "count": 0}
+    for m in _COLL_RE.finditer(hlo_text):
+        _, dtype, dims, kind = m.groups()
+        b = _shape_bytes(dtype, dims)
+        if kind == "all-reduce":
+            b *= 2
+        out[kind] += b
+        out["count"] += 1
+    return out
+
+
+def _sds_specs_only(tree):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), tree)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool):
+    """Lower+compile one (arch, shape, mesh) cell.  Returns stats dict."""
+    cfg = configs.get(arch)
+    shape = shp.SHAPES[shape_name]
+    skip = shp.applicable(cfg, shape)
+    if skip:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "n/a", "reason": skip}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ispecs = shp.input_specs(cfg, shape)
+    t0 = time.time()
+    with pctx.use_mesh(mesh):
+        if shape.kind == "train":
+            n_mb = shp.MICROBATCH.get(arch, 1)
+            step = build_train_step(cfg, n_microbatch=n_mb)
+            p_sh, o_sh = train_state_shardings(cfg, mesh)
+            p_specs = registry.param_specs(cfg)
+            o_specs = opt_state_specs(p_specs)
+            b_sh = {k: shd.batch_sharding(mesh, len(v.shape))
+                    for k, v in ispecs.items()}
+            fn = jax.jit(
+                step,
+                in_shardings=(p_sh, o_sh, NamedSharding(mesh, P()), b_sh),
+                out_shardings=(p_sh, o_sh, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = fn.lower(p_specs, o_specs,
+                               jax.ShapeDtypeStruct((), jnp.int32), ispecs)
+        elif shape.kind == "prefill":
+            step = build_prefill_step(cfg)
+            rules = serve_rules(cfg, mesh, shape.batch)
+            axes = registry.logical_axes(cfg)
+            p_specs = registry.param_specs(cfg)
+            p_sh = shd.shardings_from_axes(axes, mesh, rules, p_specs)
+            c_sh = cache_shardings(cfg, mesh, shape.batch, shape.seq + 64,
+                                   rules)
+            b_sh = {k: shd.batch_sharding(mesh, len(v.shape))
+                    for k, v in ispecs.items()}
+            logits_sh = NamedSharding(mesh, shd.spec_from_axes(
+                ("batch", "vocab"), mesh, rules,
+                (shape.batch, cfg.vocab)))
+            if "frontend_embeds" in ispecs:
+                in_sh = (p_sh, b_sh["tokens"], b_sh["frontend_embeds"])
+                fn = jax.jit(step, in_shardings=in_sh,
+                             out_shardings=(logits_sh, c_sh))
+                lowered = fn.lower(p_specs, ispecs["tokens"],
+                                   ispecs["frontend_embeds"])
+            else:
+                fn = jax.jit(step, in_shardings=(p_sh, b_sh["tokens"]),
+                             out_shardings=(logits_sh, c_sh))
+                lowered = fn.lower(p_specs, ispecs["tokens"])
+        else:  # decode
+            step = build_decode_step(cfg)
+            rules = serve_rules(cfg, mesh, shape.batch)
+            axes = registry.logical_axes(cfg)
+            p_specs = registry.param_specs(cfg)
+            p_sh = shd.shardings_from_axes(axes, mesh, rules, p_specs)
+            c_sh = cache_shardings(cfg, mesh, shape.batch, shape.seq, rules)
+            tok_sh = NamedSharding(mesh, shd.spec_from_axes(
+                ("batch",), mesh, rules, (shape.batch,)))
+            logits_sh = NamedSharding(mesh, shd.spec_from_axes(
+                ("batch", "vocab"), mesh, rules,
+                (shape.batch, cfg.vocab)))
+            fn = jax.jit(step, in_shardings=(p_sh, tok_sh, c_sh),
+                         out_shardings=(logits_sh, c_sh),
+                         donate_argnums=(2,))
+            lowered = fn.lower(p_specs, ispecs["token"], ispecs["cache"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    n_chips = mesh.devices.size
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok",
+        "n_chips": int(n_chips),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops_per_chip": float(cost.get("flops", -1.0)),
+        "bytes_per_chip": float(cost.get("bytes accessed", -1.0)),
+        "collectives": coll,
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+            "generated_code_bytes": int(
+                getattr(mem, "generated_code_size_in_bytes", 0)),
+        },
+        "n_params": cfg.n_params(),
+    }
+    return result
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose=True):
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    try:
+        res = lower_cell(arch, shape_name, multi_pod)
+    except Exception as e:  # noqa: BLE001 — record failures as data
+        res = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out = RESULTS / f"{arch}__{shape_name}__{mesh_tag}.json"
+    out.write_text(json.dumps(res, indent=2))
+    if verbose:
+        if res["status"] == "ok":
+            m = res["memory"]
+            per_dev = (m["argument_bytes"] + m["temp_bytes"]
+                       + m["output_bytes"] - m["alias_bytes"])
+            print(f"[ok] {arch} x {shape_name} x {mesh_tag}: "
+                  f"flops/chip={res['flops_per_chip']:.3e} "
+                  f"bytes/chip={res['bytes_per_chip']:.3e} "
+                  f"coll={res['collectives']['count']} "
+                  f"compile={res['compile_s']:.1f}s")
+        else:
+            print(f"[{res['status']}] {arch} x {shape_name} x {mesh_tag}: "
+                  f"{res.get('reason', res.get('error', ''))}")
+    return res
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args(argv)
+
+    meshes = []
+    if args.multi_pod or not args.single_pod:
+        meshes.append(True)
+    if args.single_pod or not args.multi_pod:
+        meshes.append(False)
+    meshes = sorted(set(meshes))  # [False, True] or subset
+
+    archs = configs.ARCHS if (args.all or not args.arch) else [args.arch]
+    shape_names = (list(shp.SHAPES) if (args.all or not args.shape)
+                   else [args.shape])
+
+    failures = 0
+    for arch in archs:
+        for shape_name in shape_names:
+            for mp in meshes:
+                tag = "2x16x16" if mp else "16x16"
+                out = RESULTS / f"{arch}__{shape_name}__{tag}.json"
+                if args.skip_existing and out.exists():
+                    prev = json.loads(out.read_text())
+                    if prev.get("status") in ("ok", "n/a"):
+                        continue
+                res = run_cell(arch, shape_name, mp)
+                if res["status"] == "error":
+                    failures += 1
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

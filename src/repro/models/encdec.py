@@ -1,0 +1,327 @@
+"""Encoder-decoder transformer (seamless-m4t-medium text/audio backbone).
+
+The audio frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed frame embeddings (B, S_enc, frontend_dim); a learned projection
+maps them to d_model.  Encoder: bidirectional MHA + SwiGLU.  Decoder:
+causal self-attention + cross-attention to encoder output + SwiGLU.
+
+Shapes: the assignment's seq_len applies to the *decoder*; the encoder
+consumes ``S_enc = max(seq_len // 4, 64)`` frames (typical 4x length ratio
+for speech frames vs text tokens; recorded in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import common as cm
+from repro.models.common import ModelConfig
+
+
+def enc_len(cfg: ModelConfig, dec_len: int) -> int:
+    return max(dec_len // 4, 64)
+
+
+# ---------------------------------------------------------------------------
+# Layer params
+# ---------------------------------------------------------------------------
+
+
+def _enc_layer_init(cfg: ModelConfig):
+    d, h, hkv, hd, ff, dt = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                             cfg.hd, cfg.d_ff, cfg.dtype)
+
+    def init_one(key):
+        ks = jax.random.split(key, 5)
+        return {
+            "ln1": jnp.zeros((d,), dt),
+            "wq": cm.dense_init(ks[0], (d, h, hd), dt),
+            "wk": cm.dense_init(ks[1], (d, hkv, hd), dt),
+            "wv": cm.dense_init(ks[2], (d, hkv, hd), dt),
+            "wo": cm.dense_init(ks[3], (h, hd, d), dt, in_axis=(0, 1)),
+            "ln2": jnp.zeros((d,), dt),
+            "mlp": cm.mlp_params(ks[4], d, ff, dt),
+        }
+
+    return init_one
+
+
+def _dec_layer_init(cfg: ModelConfig):
+    d, h, hkv, hd, ff, dt = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                             cfg.hd, cfg.d_ff, cfg.dtype)
+
+    def init_one(key):
+        ks = jax.random.split(key, 10)
+        return {
+            "ln1": jnp.zeros((d,), dt),
+            "wq": cm.dense_init(ks[0], (d, h, hd), dt),
+            "wk": cm.dense_init(ks[1], (d, hkv, hd), dt),
+            "wv": cm.dense_init(ks[2], (d, hkv, hd), dt),
+            "wo": cm.dense_init(ks[3], (h, hd, d), dt, in_axis=(0, 1)),
+            "ln_x": jnp.zeros((d,), dt),
+            "xq": cm.dense_init(ks[4], (d, h, hd), dt),
+            "xk": cm.dense_init(ks[5], (d, hkv, hd), dt),
+            "xv": cm.dense_init(ks[6], (d, hkv, hd), dt),
+            "xo": cm.dense_init(ks[7], (h, hd, d), dt, in_axis=(0, 1)),
+            "ln2": jnp.zeros((d,), dt),
+            "mlp": cm.mlp_params(ks[8], d, ff, dt),
+        }
+
+    return init_one
+
+
+def _enc_layer_specs(cfg):
+    d, h, hkv, hd, ff, dt = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                             cfg.hd, cfg.d_ff, cfg.dtype)
+    return {
+        "ln1": jax.ShapeDtypeStruct((d,), dt),
+        "wq": jax.ShapeDtypeStruct((d, h, hd), dt),
+        "wk": jax.ShapeDtypeStruct((d, hkv, hd), dt),
+        "wv": jax.ShapeDtypeStruct((d, hkv, hd), dt),
+        "wo": jax.ShapeDtypeStruct((h, hd, d), dt),
+        "ln2": jax.ShapeDtypeStruct((d,), dt),
+        "mlp": cm.mlp_specs(d, ff, dt),
+    }
+
+
+def _dec_layer_specs(cfg):
+    d, h, hkv, hd, ff, dt = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                             cfg.hd, cfg.d_ff, cfg.dtype)
+    base = _enc_layer_specs(cfg)
+    base.update({
+        "ln_x": jax.ShapeDtypeStruct((d,), dt),
+        "xq": jax.ShapeDtypeStruct((d, h, hd), dt),
+        "xk": jax.ShapeDtypeStruct((d, hkv, hd), dt),
+        "xv": jax.ShapeDtypeStruct((d, hkv, hd), dt),
+        "xo": jax.ShapeDtypeStruct((h, hd, d), dt),
+    })
+    return base
+
+
+_ENC_AXES = {
+    "ln1": (None,),
+    "wq": ("embed", "heads", None),
+    "wk": ("embed", "kv", None),
+    "wv": ("embed", "kv", None),
+    "wo": ("heads", None, "embed"),
+    "ln2": (None,),
+    "mlp": dict(cm.MLP_AXES),
+}
+
+_DEC_AXES = dict(_ENC_AXES, **{
+    "ln_x": (None,),
+    "xq": ("embed", "heads", None),
+    "xk": ("embed", "kv", None),
+    "xv": ("embed", "kv", None),
+    "xo": ("heads", None, "embed"),
+})
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    n_enc = cfg.n_enc_layers or cfg.n_layers
+    ks = jax.random.split(key, 5)
+    return {
+        "frontend_proj": cm.dense_init(
+            ks[0], (cfg.frontend_dim, cfg.d_model), cfg.dtype),
+        "embed": cm.embed_init(ks[1], (cfg.vocab, cfg.d_model), cfg.dtype),
+        "enc": cm.stack_layer_params(_enc_layer_init(cfg), ks[2], n_enc),
+        "enc_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "dec": cm.stack_layer_params(_dec_layer_init(cfg), ks[3],
+                                     cfg.n_layers),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "lm_head": cm.dense_init(ks[4], (cfg.d_model, cfg.vocab), cfg.dtype),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    n_enc = cfg.n_enc_layers or cfg.n_layers
+    return {
+        "frontend_proj": jax.ShapeDtypeStruct(
+            (cfg.frontend_dim, cfg.d_model), cfg.dtype),
+        "embed": jax.ShapeDtypeStruct((cfg.vocab, cfg.d_model), cfg.dtype),
+        "enc": cm.stacked_specs(_enc_layer_specs(cfg), n_enc),
+        "enc_norm": jax.ShapeDtypeStruct((cfg.d_model,), cfg.dtype),
+        "dec": cm.stacked_specs(_dec_layer_specs(cfg), cfg.n_layers),
+        "final_norm": jax.ShapeDtypeStruct((cfg.d_model,), cfg.dtype),
+        "lm_head": jax.ShapeDtypeStruct((cfg.d_model, cfg.vocab), cfg.dtype),
+    }
+
+
+def logical_axes(cfg: ModelConfig) -> dict:
+    return {
+        "frontend_proj": (None, "embed"),
+        "embed": ("vocab", "embed"),
+        "enc": cm.stacked_axes(dict(_ENC_AXES)),
+        "enc_norm": (None,),
+        "dec": cm.stacked_axes(dict(_DEC_AXES)),
+        "final_norm": (None,),
+        "lm_head": ("embed", "vocab"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def encode(cfg: ModelConfig, params: dict,
+           frontend_embeds: jnp.ndarray) -> jnp.ndarray:
+    x = jnp.dot(frontend_embeds.astype(cfg.dtype), params["frontend_proj"])
+    positions = jnp.arange(x.shape[1])
+
+    def body(xc, lp):
+        h = cm.rms_norm(xc, lp["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"])
+        q = cm.apply_rope(q, positions, cfg.rope_theta)
+        k = cm.apply_rope(k, positions, cfg.rope_theta)
+        o = attn.multi_head_attention(q, k, v, causal=False)
+        xc = xc + jnp.einsum("bshk,hkd->bsd", o, lp["wo"])
+        h2 = cm.rms_norm(xc, lp["ln2"], cfg.norm_eps)
+        return xc + cm.mlp_forward(lp["mlp"], h2)
+
+    x = cm.scan_layers(body, x, params["enc"], cfg)
+    return cm.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_layer(cfg, lp, xc, enc_out, positions, enc_positions):
+    h = cm.rms_norm(xc, lp["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"])
+    q = cm.apply_rope(q, positions, cfg.rope_theta)
+    k = cm.apply_rope(k, positions, cfg.rope_theta)
+    o = attn.multi_head_attention(q, k, v, causal=True)
+    xc = xc + jnp.einsum("bshk,hkd->bsd", o, lp["wo"])
+    # cross attention
+    hx = cm.rms_norm(xc, lp["ln_x"], cfg.norm_eps)
+    qx = jnp.einsum("bsd,dhk->bshk", hx, lp["xq"])
+    kx = jnp.einsum("bsd,dhk->bshk", enc_out, lp["xk"])
+    vx = jnp.einsum("bsd,dhk->bshk", enc_out, lp["xv"])
+    ox = attn.multi_head_attention(qx, kx, vx, causal=False)
+    xc = xc + jnp.einsum("bshk,hkd->bsd", ox, lp["xo"])
+    h2 = cm.rms_norm(xc, lp["ln2"], cfg.norm_eps)
+    return xc + cm.mlp_forward(lp["mlp"], h2)
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
+            frontend_embeds: Optional[jnp.ndarray] = None,
+            return_aux: bool = False):
+    """tokens (B, S_dec); frontend_embeds (B, S_enc, F)."""
+    assert frontend_embeds is not None, "encdec requires frontend embeds"
+    enc_out = encode(cfg, params, frontend_embeds)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.arange(tokens.shape[1])
+    enc_positions = jnp.arange(enc_out.shape[1])
+
+    def body(xc, lp):
+        return _dec_layer(cfg, lp, xc, enc_out, positions, enc_positions)
+
+    x = cm.scan_layers(body, x, params["dec"], cfg)
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.dot(x, params["lm_head"]).astype(jnp.float32)
+    if return_aux:
+        return logits, jnp.float32(0.0)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    l, hkv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    se = enc_len(cfg, max_len)
+    return {
+        "k": jax.ShapeDtypeStruct((l, batch, max_len, hkv, hd), cfg.dtype),
+        "v": jax.ShapeDtypeStruct((l, batch, max_len, hkv, hd), cfg.dtype),
+        "xk": jax.ShapeDtypeStruct((l, batch, se, hkv, hd), cfg.dtype),
+        "xv": jax.ShapeDtypeStruct((l, batch, se, hkv, hd), cfg.dtype),
+        "len": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def cache_axes(cfg: ModelConfig) -> dict:
+    ax = ("layer", "batch", "kv_seq", "kv", None)
+    return {"k": ax, "v": ax, "xk": ax, "xv": ax, "len": ()}
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
+            frontend_embeds: Optional[jnp.ndarray] = None,
+            max_len: Optional[int] = None):
+    """Encoder pass + decoder prefill.  Cross-KV computed once."""
+    assert frontend_embeds is not None
+    enc_out = encode(cfg, params, frontend_embeds)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    s = tokens.shape[1]
+    positions = jnp.arange(s)
+
+    def body(xc, lp):
+        h = cm.rms_norm(xc, lp["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"])
+        q = cm.apply_rope(q, positions, cfg.rope_theta)
+        k = cm.apply_rope(k, positions, cfg.rope_theta)
+        o = attn.multi_head_attention(q, k, v, causal=True)
+        xc = xc + jnp.einsum("bshk,hkd->bsd", o, lp["wo"])
+        hx = cm.rms_norm(xc, lp["ln_x"], cfg.norm_eps)
+        qx = jnp.einsum("bsd,dhk->bshk", hx, lp["xq"])
+        kx = jnp.einsum("bsd,dhk->bshk", enc_out, lp["xk"])
+        vx = jnp.einsum("bsd,dhk->bshk", enc_out, lp["xv"])
+        ox = attn.multi_head_attention(qx, kx, vx, causal=False)
+        xc = xc + jnp.einsum("bshk,hkd->bsd", ox, lp["xo"])
+        h2 = cm.rms_norm(xc, lp["ln2"], cfg.norm_eps)
+        xc = xc + cm.mlp_forward(lp["mlp"], h2)
+        return xc, (k, v, kx, vx)
+
+    fn = cm.maybe_remat(body, cfg)
+    x, (ks, vs, xks, xvs) = cm.scan_or_unroll(fn, x, params["dec"],
+                                              cfg.scan_layers)
+    x = cm.rms_norm(x[:, -1:, :], params["final_norm"], cfg.norm_eps)
+    logits = jnp.dot(x[:, 0, :], params["lm_head"]).astype(jnp.float32)
+    cap = max_len if max_len is not None else s + 64
+    if cap > s:
+        pad = ((0, 0), (0, 0), (0, cap - s), (0, 0), (0, 0))
+        ks, vs = jnp.pad(ks, pad), jnp.pad(vs, pad)
+    cache = {"k": ks, "v": vs, "xk": xks, "xv": xvs, "len": jnp.int32(s)}
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, token: jnp.ndarray,
+                cache: dict):
+    x = jnp.take(params["embed"], token[:, None], axis=0)
+    positions = jnp.reshape(cache["len"], (1,))
+
+    def body(xc, layer_in):
+        lp, kc, vc, xk, xv = layer_in
+        h = cm.rms_norm(xc, lp["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"])
+        q = cm.apply_rope(q, positions, cfg.rope_theta)
+        k = cm.apply_rope(k, positions, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, cache["len"], axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, cache["len"], axis=1)
+        o = attn.decode_attention(q, kc, vc, cache["len"] + 1)
+        xc = xc + jnp.einsum("bshk,hkd->bsd", o, lp["wo"])
+        hx = cm.rms_norm(xc, lp["ln_x"], cfg.norm_eps)
+        qx = jnp.einsum("bsd,dhk->bshk", hx, lp["xq"])
+        ox = attn.decode_attention(qx, xk, xv, xk.shape[1])
+        xc = xc + jnp.einsum("bshk,hkd->bsd", ox, lp["xo"])
+        h2 = cm.rms_norm(xc, lp["ln2"], cfg.norm_eps)
+        xc = xc + cm.mlp_forward(lp["mlp"], h2)
+        return xc, (kc, vc)
+
+    x, (ks, vs) = cm.scan_or_unroll(
+        body, x, (params["dec"], cache["k"], cache["v"], cache["xk"],
+                  cache["xv"]), cfg.scan_layers)
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.dot(x[:, 0, :], params["lm_head"]).astype(jnp.float32)
+    return logits, {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"],
+                    "len": cache["len"] + 1}

@@ -1,0 +1,218 @@
+"""Token-choice top-k Mixture-of-Experts FFN (olmoe-1b-7b, moonshot-v1-16b-a3b).
+
+Two execution paths with identical dispatch semantics:
+
+* ``moe_ffn_reference`` — single-shard capacity dispatch (the oracle).
+* ``moe_ffn_sharded``  — expert-parallel ``shard_map``:
+     tokens resharded over the ``model`` axis (sequence-split) ->
+     local capacity dispatch (scatter, no (T,E,C) one-hot) ->
+     ``all_to_all`` over ``model`` (EP) -> per-expert SwiGLU
+     (weights FSDP-gathered over ``data``) -> ``all_to_all`` back ->
+     weighted combine.
+
+Capacity: ``C = clamp(ceil(top_k * T / E * capacity_factor), 8, T*top_k)``
+per shard; overflow tokens are dropped (GShard semantics) and their
+residual stream passes through unchanged.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import common as cm
+from repro.models.common import ModelConfig
+from repro.parallel import ctx as pctx
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def moe_params(key, cfg: ModelConfig) -> dict:
+    d, e, f, dt = cfg.d_model, cfg.n_experts, cfg.d_ff, cfg.dtype
+    ks = jax.random.split(key, 4)
+    return {
+        "router": cm.dense_init(ks[0], (d, e), jnp.float32),
+        "w_gate": cm.dense_init(ks[1], (e, d, f), dt, in_axis=1),
+        "w_up": cm.dense_init(ks[2], (e, d, f), dt, in_axis=1),
+        "w_down": cm.dense_init(ks[3], (e, f, d), dt, in_axis=1),
+    }
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    d, e, f, dt = cfg.d_model, cfg.n_experts, cfg.d_ff, cfg.dtype
+    return {
+        "router": jax.ShapeDtypeStruct((d, e), jnp.float32),
+        "w_gate": jax.ShapeDtypeStruct((e, d, f), dt),
+        "w_up": jax.ShapeDtypeStruct((e, d, f), dt),
+        "w_down": jax.ShapeDtypeStruct((e, f, d), dt),
+    }
+
+
+MOE_AXES = {
+    "router": (None, None),
+    "w_gate": ("expert", None, "expert_mlp"),
+    "w_up": ("expert", None, "expert_mlp"),
+    "w_down": ("expert", "expert_mlp", None),
+}
+
+
+# ---------------------------------------------------------------------------
+# Dispatch core (shared by both paths)
+# ---------------------------------------------------------------------------
+
+
+def _capacity(t: int, cfg: ModelConfig) -> int:
+    c = math.ceil(cfg.top_k * t / cfg.n_experts * cfg.capacity_factor)
+    return max(8, min(c, t * cfg.top_k))
+
+
+def _route(xt: jnp.ndarray, router: jnp.ndarray, cfg: ModelConfig):
+    """xt (T, D) -> top-k ids (T,k), weights fp32 (T,k), aux loss scalar."""
+    logits = jnp.dot(xt.astype(jnp.float32), router)          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(probs, cfg.top_k)                  # (T, k)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    # Switch-style load-balancing loss: E * sum_e f_e * p_e
+    f_e = jnp.mean(
+        jnp.sum(jax.nn.one_hot(ids, cfg.n_experts, dtype=jnp.float32),
+                axis=1), axis=0)
+    p_e = jnp.mean(probs, axis=0)
+    aux = cfg.n_experts * jnp.sum(f_e * p_e)
+    return ids, w, aux
+
+
+def _dispatch_indices(ids: jnp.ndarray, t: int, cap: int, cfg: ModelConfig):
+    """Position of each (token, slot) within its expert's capacity buffer.
+
+    Returns flat scatter indices (T*k,) into (E*cap) with dropped slots
+    mapped to E*cap (out of bounds -> scatter 'drop' mode)."""
+    flat = ids.reshape(-1)                                    # (T*k,) token-major
+    onehot = jax.nn.one_hot(flat, cfg.n_experts, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) * onehot - 1             # (T*k, E)
+    pos = jnp.sum(pos * onehot, axis=-1)                      # (T*k,)
+    keep = pos < cap
+    idx = flat * cap + pos
+    return jnp.where(keep, idx, cfg.n_experts * cap), keep
+
+
+def _expert_ffn(buf: jnp.ndarray, w_gate, w_up, w_down) -> jnp.ndarray:
+    """buf (E, C, D) x weights (E, D, F)/(E, F, D) -> (E, C, D)."""
+    g = jnp.einsum("ecd,edf->ecf", buf, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", buf, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(buf.dtype) * u
+    return jnp.einsum("ecf,efd->ecd", h, w_down)
+
+
+def _local_moe(xt, p, cfg: ModelConfig, cap: int,
+               ffn=_expert_ffn) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full dispatch->ffn->combine on local tokens xt (T, D)."""
+    t, d = xt.shape
+    e, k = cfg.n_experts, cfg.top_k
+    ids, w, aux = _route(xt, p["router"], cfg)
+    idx, keep = _dispatch_indices(ids, t, cap, cfg)
+    xt_rep = jnp.repeat(xt, k, axis=0)                        # (T*k, D)
+    buf = jnp.zeros((e * cap, d), xt.dtype)
+    buf = buf.at[idx].set(xt_rep, mode="drop")
+    buf = buf.reshape(e, cap, d)
+    out = ffn(buf, p["w_gate"], p["w_up"], p["w_down"])       # (E, C, D)
+    out = out.reshape(e * cap, d)
+    gathered = jnp.take(out, jnp.minimum(idx, e * cap - 1), axis=0)
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    y = (gathered.reshape(t, k, d).astype(jnp.float32)
+         * w[:, :, None]).sum(axis=1)
+    return y.astype(xt.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# Reference (single-shard) path
+# ---------------------------------------------------------------------------
+
+
+def moe_ffn_reference(cfg: ModelConfig, p: dict, x: jnp.ndarray):
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    y, aux = _local_moe(xt, p, cfg, _capacity(b * s, cfg))
+    return y.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Sharded (expert-parallel) path
+# ---------------------------------------------------------------------------
+
+
+def moe_ffn_sharded(cfg: ModelConfig, p: dict, x: jnp.ndarray):
+    """x (B, S, D) global.  Requires an active mesh (see parallel.ctx)."""
+    mesh = pctx.get_mesh()
+    axes = mesh.axis_names
+    batch_ax = pctx.batch_axes(mesh)          # ('pod','data') or ('data',)
+    mdl = "model"
+    m = mesh.shape[mdl]
+    b, s, d = x.shape
+    shard_seq = (s % m == 0) and s >= m and s > 1
+    # per-shard token count
+    dp = math.prod(mesh.shape[a] for a in batch_ax)
+    t_loc = (b // dp) * (s // m if shard_seq else s)
+    cap = _capacity(max(t_loc, 1), cfg)
+
+    x_spec = P(batch_ax, mdl, None) if shard_seq else P(batch_ax, None, None)
+    w_specs = {
+        "router": P(None, None),
+        "w_gate": P(mdl, None, "data"),
+        "w_up": P(mdl, None, "data"),
+        "w_down": P(mdl, "data", None),
+    }
+
+    def local_fn(xl, pl):
+        bl, sl, _ = xl.shape
+        xt = xl.reshape(bl * sl, d)
+        # FSDP-gather expert weights over 'data'
+        pg = dict(pl)
+        pg["w_gate"] = jax.lax.all_gather(pl["w_gate"], "data", axis=2,
+                                          tiled=True)
+        pg["w_up"] = jax.lax.all_gather(pl["w_up"], "data", axis=2,
+                                        tiled=True)
+        pg["w_down"] = jax.lax.all_gather(pl["w_down"], "data", axis=1,
+                                          tiled=True)
+
+        def ep_ffn(buf, wg, wu, wd):
+            # buf (E, C, D) -> a2a -> (E/m, C*m, D) -> ffn -> a2a back
+            buf = jax.lax.all_to_all(buf, mdl, split_axis=0, concat_axis=1,
+                                     tiled=True)
+            out = _expert_ffn(buf, wg, wu, wd)
+            return jax.lax.all_to_all(out, mdl, split_axis=1, concat_axis=0,
+                                      tiled=True)
+
+        y, aux = _local_moe(xt, pg, cfg, cap, ffn=ep_ffn)
+        # aux varies over the axes that shard tokens; pmean only those
+        # (when S is not sharded, aux is model-invariant already).
+        aux_axes = batch_ax + ((mdl,) if shard_seq else ())
+        aux = jax.lax.pmean(aux, aux_axes)
+        return y.reshape(bl, sl, d), aux
+
+    # check_vma=False: when S is not sharded (decode), every model rank
+    # computes identical dispatch and the a2a round trip reassembles the
+    # full (E, C, D) buffer identically on each rank — replicated by
+    # construction, but not statically inferable through all_to_all.
+    y, aux = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(x_spec, {"router": w_specs["router"],
+                           "w_gate": w_specs["w_gate"],
+                           "w_up": w_specs["w_up"],
+                           "w_down": w_specs["w_down"]}),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )(x, p)
+    return y, aux
+
+
+def moe_ffn(cfg: ModelConfig, p: dict, x: jnp.ndarray):
+    """Dispatch to sharded path when a mesh is active, else reference."""
+    if pctx.get_mesh() is not None:
+        return moe_ffn_sharded(cfg, p, x)
+    return moe_ffn_reference(cfg, p, x)

@@ -1,0 +1,75 @@
+"""Family dispatch: every architecture exposes one uniform interface."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+_FAMILY_MODULE = {}
+
+
+def _module(cfg: ModelConfig):
+    fam = cfg.family
+    if fam not in _FAMILY_MODULE:
+        if fam in ("dense", "moe", "vlm"):
+            from repro.models import transformer as mod
+        elif fam == "xlstm":
+            from repro.models import xlstm as mod
+        elif fam == "rglru":
+            from repro.models import rglru as mod
+        elif fam == "encdec":
+            from repro.models import encdec as mod
+        else:
+            raise ValueError(f"unknown family: {fam}")
+        _FAMILY_MODULE[fam] = mod
+    return _FAMILY_MODULE[fam]
+
+
+def init(cfg: ModelConfig, key):
+    return _module(cfg).init(cfg, key)
+
+
+def param_specs(cfg: ModelConfig):
+    return _module(cfg).param_specs(cfg)
+
+
+def logical_axes(cfg: ModelConfig):
+    return _module(cfg).logical_axes(cfg)
+
+
+def forward(cfg: ModelConfig, params, tokens, frontend_embeds=None,
+            return_aux: bool = False):
+    return _module(cfg).forward(cfg, params, tokens,
+                                frontend_embeds=frontend_embeds,
+                                return_aux=return_aux)
+
+
+def prefill(cfg: ModelConfig, params, tokens, frontend_embeds=None,
+            max_len=None):
+    return _module(cfg).prefill(cfg, params, tokens,
+                                frontend_embeds=frontend_embeds,
+                                max_len=max_len)
+
+
+def decode_step(cfg: ModelConfig, params, token, cache):
+    return _module(cfg).decode_step(cfg, params, token, cache)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    return _module(cfg).cache_specs(cfg, batch, max_len)
+
+
+def cache_axes(cfg: ModelConfig):
+    return _module(cfg).cache_axes(cfg)
+
+
+def has_frontend(cfg: ModelConfig) -> bool:
+    return bool(cfg.frontend)
+
+
+def sub_quadratic(cfg: ModelConfig) -> bool:
+    """True when decode state is O(1)/windowed in context length."""
+    return cfg.family in ("xlstm", "rglru")

@@ -1,0 +1,442 @@
+"""RecurrentGemma / Griffin hybrid (arXiv:2402.19427) — recurrentgemma-9b.
+
+38 residual layers in the pattern (recurrent, recurrent, attention) x 12
+plus 2 trailing recurrent layers.  Each layer = temporal-mixing block +
+GeGLU MLP block.
+
+* Recurrent block: LN -> two branches: main (D->W linear, causal conv(4),
+  RG-LRU) and gate (D->W linear, GeLU); merged elementwise, W->D out proj.
+  RG-LRU: r_t = sigma(W_a x + b_a); i_t = sigma(W_x x + b_x);
+  log a_t = -c * softplus(Lambda) * r_t (c=8);
+  h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+  -> parallelized over time with ``jax.lax.associative_scan``.
+* Attention block: sliding-window (2048) MQA (kv=1), RoPE, head_dim 256.
+
+Decode state: per recurrent layer h (B, W) fp32 + conv tail (B, 3, W);
+per attention layer a ring-buffer KV cache of size ``window``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import common as cm
+from repro.models.common import ModelConfig
+from repro.models.xlstm import causal_conv
+
+LRU_C = 8.0
+
+
+def layer_kinds(cfg: ModelConfig):
+    """List of 'rec' / 'attn' per layer index."""
+    kinds = []
+    for i in range(cfg.n_layers):
+        kinds.append("attn" if (i % 3) == 2 else "rec")
+    return kinds
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def _rec_init(cfg: ModelConfig):
+    d, dt = cfg.d_model, cfg.dtype
+    w = cfg.lru_width
+    f = cfg.d_ff
+
+    def init_one(key):
+        ks = jax.random.split(key, 8)
+        return {
+            "ln": jnp.zeros((d,), dt),
+            "w_main": cm.dense_init(ks[0], (d, w), dt),
+            "w_gate": cm.dense_init(ks[1], (d, w), dt),
+            "conv": cm.dense_init(ks[2], (4, w), dt),
+            "w_a": cm.dense_init(ks[3], (w, w), jnp.float32),
+            "b_a": jnp.zeros((w,), jnp.float32),
+            "w_i": cm.dense_init(ks[4], (w, w), jnp.float32),
+            "b_i": jnp.zeros((w,), jnp.float32),
+            "lam": jnp.full((w,), 0.7, jnp.float32),
+            "w_out": cm.dense_init(ks[5], (w, d), dt),
+            "ln2": jnp.zeros((d,), dt),
+            "ff1": cm.dense_init(ks[6], (d, 2 * f), dt),
+            "ff2": cm.dense_init(ks[7], (f, d), dt),
+        }
+
+    return init_one
+
+
+def _rec_specs(cfg: ModelConfig) -> dict:
+    d, dt, w, f = cfg.d_model, cfg.dtype, cfg.lru_width, cfg.d_ff
+    f32 = jnp.float32
+    return {
+        "ln": jax.ShapeDtypeStruct((d,), dt),
+        "w_main": jax.ShapeDtypeStruct((d, w), dt),
+        "w_gate": jax.ShapeDtypeStruct((d, w), dt),
+        "conv": jax.ShapeDtypeStruct((4, w), dt),
+        "w_a": jax.ShapeDtypeStruct((w, w), f32),
+        "b_a": jax.ShapeDtypeStruct((w,), f32),
+        "w_i": jax.ShapeDtypeStruct((w, w), f32),
+        "b_i": jax.ShapeDtypeStruct((w,), f32),
+        "lam": jax.ShapeDtypeStruct((w,), f32),
+        "w_out": jax.ShapeDtypeStruct((w, d), dt),
+        "ln2": jax.ShapeDtypeStruct((d,), dt),
+        "ff1": jax.ShapeDtypeStruct((d, 2 * f), dt),
+        "ff2": jax.ShapeDtypeStruct((f, d), dt),
+    }
+
+
+_REC_AXES = {
+    "ln": (None,),
+    "w_main": ("embed", "lru"),
+    "w_gate": ("embed", "lru"),
+    "conv": (None, "lru"),
+    "w_a": ("lru", None),
+    "b_a": (None,),
+    "w_i": ("lru", None),
+    "b_i": (None,),
+    "lam": (None,),
+    "w_out": ("lru", "embed"),
+    "ln2": (None,),
+    "ff1": ("embed", "mlp"),
+    "ff2": ("mlp", "embed"),
+}
+
+
+def _attn_init(cfg: ModelConfig):
+    d, dt = cfg.d_model, cfg.dtype
+    h, hkv, hd, f = cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.d_ff
+
+    def init_one(key):
+        ks = jax.random.split(key, 6)
+        return {
+            "ln": jnp.zeros((d,), dt),
+            "wq": cm.dense_init(ks[0], (d, h, hd), dt),
+            "wk": cm.dense_init(ks[1], (d, hkv, hd), dt),
+            "wv": cm.dense_init(ks[2], (d, hkv, hd), dt),
+            "wo": cm.dense_init(ks[3], (h, hd, d), dt, in_axis=(0, 1)),
+            "ln2": jnp.zeros((d,), dt),
+            "ff1": cm.dense_init(ks[4], (d, 2 * f), dt),
+            "ff2": cm.dense_init(ks[5], (f, d), dt),
+        }
+
+    return init_one
+
+
+def _attn_specs(cfg: ModelConfig) -> dict:
+    d, dt = cfg.d_model, cfg.dtype
+    h, hkv, hd, f = cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.d_ff
+    return {
+        "ln": jax.ShapeDtypeStruct((d,), dt),
+        "wq": jax.ShapeDtypeStruct((d, h, hd), dt),
+        "wk": jax.ShapeDtypeStruct((d, hkv, hd), dt),
+        "wv": jax.ShapeDtypeStruct((d, hkv, hd), dt),
+        "wo": jax.ShapeDtypeStruct((h, hd, d), dt),
+        "ln2": jax.ShapeDtypeStruct((d,), dt),
+        "ff1": jax.ShapeDtypeStruct((d, 2 * f), dt),
+        "ff2": jax.ShapeDtypeStruct((f, d), dt),
+    }
+
+
+_ATTN_AXES = {
+    "ln": (None,),
+    "wq": ("embed", "heads", None),
+    "wk": ("embed", "kv", None),
+    "wv": ("embed", "kv", None),
+    "wo": ("heads", None, "embed"),
+    "ln2": (None,),
+    "ff1": ("embed", "mlp"),
+    "ff2": ("mlp", "embed"),
+}
+
+
+def _counts(cfg: ModelConfig) -> Tuple[int, int]:
+    kinds = layer_kinds(cfg)
+    return kinds.count("rec"), kinds.count("attn")
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    n_rec, n_attn = _counts(cfg)
+    k_e, k_r, k_a, k_h = jax.random.split(key, 4)
+    return {
+        "embed": cm.embed_init(k_e, (cfg.vocab, cfg.d_model), cfg.dtype),
+        "rec": cm.stack_layer_params(_rec_init(cfg), k_r, n_rec),
+        "attn": cm.stack_layer_params(_attn_init(cfg), k_a, n_attn),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "lm_head": cm.dense_init(k_h, (cfg.d_model, cfg.vocab), cfg.dtype),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    n_rec, n_attn = _counts(cfg)
+    return {
+        "embed": jax.ShapeDtypeStruct((cfg.vocab, cfg.d_model), cfg.dtype),
+        "rec": cm.stacked_specs(_rec_specs(cfg), n_rec),
+        "attn": cm.stacked_specs(_attn_specs(cfg), n_attn),
+        "final_norm": jax.ShapeDtypeStruct((cfg.d_model,), cfg.dtype),
+        "lm_head": jax.ShapeDtypeStruct((cfg.d_model, cfg.vocab), cfg.dtype),
+    }
+
+
+def logical_axes(cfg: ModelConfig) -> dict:
+    return {
+        "embed": ("vocab", "embed"),
+        "rec": cm.stacked_axes(dict(_REC_AXES)),
+        "attn": cm.stacked_axes(dict(_ATTN_AXES)),
+        "final_norm": (None,),
+        "lm_head": ("embed", "vocab"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+
+def rglru_gates(p: dict, u: jnp.ndarray):
+    """u (B,S,W) conv output -> (log_a (B,S,W) fp32, gated input (B,S,W))."""
+    u32 = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.dot(u32, p["w_a"]) + p["b_a"])
+    i = jax.nn.sigmoid(jnp.dot(u32, p["w_i"]) + p["b_i"])
+    log_a = -LRU_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * (i * u32)
+    return log_a, gated
+
+
+def rglru_scan(log_a: jnp.ndarray, b: jnp.ndarray,
+               h0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Linear recurrence h_t = exp(log_a_t) h_{t-1} + b_t over axis 1."""
+    if h0 is not None:
+        # fold initial state into the first step
+        b = b.at[:, 0, :].add(jnp.exp(log_a[:, 0, :]) * h0)
+
+    def combine(x, y):
+        la1, b1 = x
+        la2, b2 = y
+        return la1 + la2, jnp.exp(la2) * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    return h
+
+
+def rec_block(cfg: ModelConfig, p: dict, x: jnp.ndarray,
+              state: Optional[Tuple] = None):
+    """Recurrent temporal block + MLP.  Returns (x_out, (h_last, conv_tail))."""
+    h_in = cm.rms_norm(x, p["ln"], cfg.norm_eps)
+    main = jnp.dot(h_in, p["w_main"])
+    gate = jax.nn.gelu(jnp.dot(h_in, p["w_gate"]).astype(jnp.float32))
+    conv_state = state[1] if state is not None else None
+    u, conv_tail = causal_conv(main, p["conv"], conv_state)
+    log_a, gated = rglru_gates(p, u)
+    h0 = state[0] if state is not None else None
+    hs = rglru_scan(log_a, gated, h0)                     # (B,S,W) fp32
+    y = (hs * gate).astype(x.dtype)
+    x = x + jnp.dot(y, p["w_out"])
+    xf = cm.rms_norm(x, p["ln2"], cfg.norm_eps)
+    g, uff = jnp.split(jnp.dot(xf, p["ff1"]), 2, axis=-1)
+    ff = jax.nn.gelu(g.astype(jnp.float32)).astype(x.dtype) * uff
+    return x + jnp.dot(ff, p["ff2"]), (hs[:, -1, :], conv_tail)
+
+
+def attn_block(cfg: ModelConfig, p: dict, x: jnp.ndarray,
+               positions: jnp.ndarray):
+    """Sliding-window MQA block + MLP.  Returns (x_out, (k, v))."""
+    h_in = cm.rms_norm(x, p["ln"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h_in, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h_in, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h_in, p["wv"])
+    q = cm.apply_rope(q, positions, cfg.rope_theta)
+    k = cm.apply_rope(k, positions, cfg.rope_theta)
+    o = attn.multi_head_attention(q, k, v, causal=True, window=cfg.window)
+    x = x + jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    xf = cm.rms_norm(x, p["ln2"], cfg.norm_eps)
+    g, uff = jnp.split(jnp.dot(xf, p["ff1"]), 2, axis=-1)
+    ff = jax.nn.gelu(g.astype(jnp.float32)).astype(x.dtype) * uff
+    return x + jnp.dot(ff, p["ff2"]), (k, v)
+
+
+# ---------------------------------------------------------------------------
+# Forward (training): scan over (rec, rec, attn) groups
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
+            frontend_embeds=None, return_aux: bool = False):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.arange(tokens.shape[1])
+    n_rec, n_attn = _counts(cfg)
+    n_groups = n_attn                                      # groups of (r,r,a)
+
+    def group_body(xc, gp):
+        rp, ap = gp
+        r0 = jax.tree.map(lambda a: a[0], rp)
+        r1 = jax.tree.map(lambda a: a[1], rp)
+        xc, _ = rec_block(cfg, r0, xc)
+        xc, _ = rec_block(cfg, r1, xc)
+        xc, _ = attn_block(cfg, ap, xc, positions)
+        return xc
+
+    grouped_rec = jax.tree.map(
+        lambda a: a[: n_groups * 2].reshape(n_groups, 2, *a.shape[1:]),
+        params["rec"])
+    gfn = cm.maybe_remat(group_body, cfg)
+    x, _ = cm.scan_or_unroll(lambda c, g: (gfn(c, g), None), x,
+                             (grouped_rec, params["attn"]),
+                             cfg.scan_layers)
+    rest = n_rec - n_groups * 2
+    if rest:
+        rest_p = jax.tree.map(lambda a: a[-rest:], params["rec"])
+        body = cm.maybe_remat(lambda c, lp: rec_block(cfg, lp, c)[0], cfg)
+        x, _ = cm.scan_or_unroll(lambda c, lp: (body(c, lp), None), x,
+                                 rest_p, cfg.scan_layers)
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.dot(x, params["lm_head"]).astype(jnp.float32)
+    if return_aux:
+        return logits, jnp.float32(0.0)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    n_rec, n_attn = _counts(cfg)
+    w = cfg.lru_width
+    win = cfg.window
+    return {
+        "h": jax.ShapeDtypeStruct((n_rec, batch, w), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((n_rec, batch, 3, w), cfg.dtype),
+        "k": jax.ShapeDtypeStruct((n_attn, batch, win, cfg.n_kv_heads,
+                                   cfg.hd), cfg.dtype),
+        "v": jax.ShapeDtypeStruct((n_attn, batch, win, cfg.n_kv_heads,
+                                   cfg.hd), cfg.dtype),
+        "len": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def cache_axes(cfg: ModelConfig) -> dict:
+    return {
+        "h": ("layer", "batch", "lru"),
+        "conv": ("layer", "batch", None, "lru"),
+        "k": ("layer", "batch", "kv_seq", "kv", None),
+        "v": ("layer", "batch", "kv_seq", "kv", None),
+        "len": (),
+    }
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
+            frontend_embeds=None, max_len=None):
+    # max_len ignored: window ring-buffer + recurrent state are O(window).
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.arange(s)
+    win = cfg.window
+    kinds = layer_kinds(cfg)
+    h_st, conv_st, k_st, v_st = [], [], [], []
+    ri = ai = 0
+    for kind in kinds:
+        if kind == "rec":
+            lp = jax.tree.map(lambda a: a[ri], params["rec"])
+            x, (hl, ct) = rec_block(cfg, lp, x)
+            h_st.append(hl)
+            conv_st.append(ct)
+            ri += 1
+        else:
+            lp = jax.tree.map(lambda a: a[ai], params["attn"])
+            x, (k, v) = attn_block(cfg, lp, x, positions)
+            # ring buffer: slot(p) = p % win, keep last `win` positions
+            if s >= win:
+                k_tail, v_tail = k[:, -win:], v[:, -win:]
+                shift = s % win
+                k_tail = jnp.roll(k_tail, shift, axis=1)
+                v_tail = jnp.roll(v_tail, shift, axis=1)
+            else:
+                pad = win - s
+                k_tail = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                v_tail = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            k_st.append(k_tail)
+            v_st.append(v_tail)
+            ai += 1
+    x = cm.rms_norm(x[:, -1:, :], params["final_norm"], cfg.norm_eps)
+    logits = jnp.dot(x[:, 0, :], params["lm_head"]).astype(jnp.float32)
+    empty_kv = jnp.zeros((0, b, win, cfg.n_kv_heads, cfg.hd), cfg.dtype)
+    cache = {
+        "h": jnp.stack(h_st),
+        "conv": jnp.stack(conv_st),
+        "k": jnp.stack(k_st) if k_st else empty_kv,
+        "v": jnp.stack(v_st) if v_st else empty_kv,
+        "len": jnp.int32(s),
+    }
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, token: jnp.ndarray,
+                cache: dict):
+    b = token.shape[0]
+    x = jnp.take(params["embed"], token[:, None], axis=0)
+    pos = cache["len"]
+    positions = jnp.reshape(pos, (1,))
+    win = cfg.window
+    kinds = layer_kinds(cfg)
+    h_out, conv_out, k_out, v_out = [], [], [], []
+    ri = ai = 0
+    for kind in kinds:
+        if kind == "rec":
+            lp = jax.tree.map(lambda a: a[ri], params["rec"])
+            h_in = cm.rms_norm(x, lp["ln"], cfg.norm_eps)
+            main = jnp.dot(h_in, lp["w_main"])
+            gate = jax.nn.gelu(
+                jnp.dot(h_in, lp["w_gate"]).astype(jnp.float32))
+            u, ct = causal_conv(main, lp["conv"], cache["conv"][ri])
+            log_a, gated = rglru_gates(lp, u)
+            h_new = (jnp.exp(log_a[:, 0]) * cache["h"][ri]
+                     + gated[:, 0])                        # (B,W)
+            y = (h_new[:, None, :] * gate).astype(x.dtype)
+            x = x + jnp.dot(y, lp["w_out"])
+            xf = cm.rms_norm(x, lp["ln2"], cfg.norm_eps)
+            g, uff = jnp.split(jnp.dot(xf, lp["ff1"]), 2, axis=-1)
+            ff = jax.nn.gelu(g.astype(jnp.float32)).astype(x.dtype) * uff
+            x = x + jnp.dot(ff, lp["ff2"])
+            h_out.append(h_new)
+            conv_out.append(ct)
+            ri += 1
+        else:
+            lp = jax.tree.map(lambda a: a[ai], params["attn"])
+            h_in = cm.rms_norm(x, lp["ln"], cfg.norm_eps)
+            q = jnp.einsum("bsd,dhk->bshk", h_in, lp["wq"])
+            k = jnp.einsum("bsd,dhk->bshk", h_in, lp["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", h_in, lp["wv"])
+            q = cm.apply_rope(q, positions, cfg.rope_theta)
+            k = cm.apply_rope(k, positions, cfg.rope_theta)
+            slot = jnp.mod(pos, win)
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"][ai], k, slot, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"][ai], v, slot, axis=1)
+            o = attn.decode_attention(q, kc, vc,
+                                      jnp.minimum(pos + 1, win))
+            x = x + jnp.einsum("bshk,hkd->bsd", o, lp["wo"])
+            xf = cm.rms_norm(x, lp["ln2"], cfg.norm_eps)
+            g, uff = jnp.split(jnp.dot(xf, lp["ff1"]), 2, axis=-1)
+            ff = jax.nn.gelu(g.astype(jnp.float32)).astype(x.dtype) * uff
+            x = x + jnp.dot(ff, lp["ff2"])
+            k_out.append(kc)
+            v_out.append(vc)
+            ai += 1
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.dot(x[:, 0, :], params["lm_head"]).astype(jnp.float32)
+    cache = {
+        "h": jnp.stack(h_out),
+        "conv": jnp.stack(conv_out),
+        "k": jnp.stack(k_out) if k_out else cache["k"],
+        "v": jnp.stack(v_out) if v_out else cache["v"],
+        "len": cache["len"] + 1,
+    }
+    return logits, cache

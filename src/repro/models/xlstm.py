@@ -1,0 +1,586 @@
+"""xLSTM (arXiv:2405.04517) — sLSTM + mLSTM blocks (xlstm-1.3b).
+
+Block layout (assignment: 48 blocks, d_model 2048, 4 heads, d_ff=0):
+  * mLSTM blocks (matrix memory, parallelizable): pre-LN -> up-proj to
+    2*d_inner (proj_factor 2.0) -> [u, z]; u -> causal depthwise conv(4)
+    -> silu -> q,k,v heads + scalar i/f gates; chunkwise-parallel gated
+    linear recurrence C_t = f_t C_{t-1} + i_t k_t v_t^T; h = (q·C)/
+    max(|q·n|,1); output gated by silu(z); down-proj.
+  * sLSTM blocks (scalar memory, strictly sequential): exponential gating
+    with the max-stabilizer, per-head recurrent matrices, then a GeGLU FF
+    (factor 4/3).  One sLSTM block every ``slstm_every`` (default 8).
+
+Numerics: gates/accumulators in fp32; the input gate uses
+``i = exp(min(i_raw, 8))`` so the chunkwise and the step-recurrent forms
+are algebraically identical without a cross-chunk max-stabilizer (see
+DESIGN.md deviations).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.common import ModelConfig
+
+I_CAP = 8.0
+CHUNK = 512
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return int(cfg.d_model * cfg.mlstm_proj_factor)
+
+
+def slstm_ff(cfg: ModelConfig) -> int:
+    d = int(cfg.d_model * cfg.slstm_ff_factor)
+    return ((d + 127) // 128) * 128
+
+
+def is_slstm(cfg: ModelConfig, layer_idx: int) -> bool:
+    se = cfg.slstm_every
+    return se > 0 and (layer_idx % se) == (se - 1)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block params
+# ---------------------------------------------------------------------------
+
+
+def _mlstm_init(cfg: ModelConfig):
+    d, dt = cfg.d_model, cfg.dtype
+    din = d_inner(cfg)
+    h = cfg.n_heads
+
+    def init_one(key):
+        ks = jax.random.split(key, 7)
+        return {
+            "ln": jnp.zeros((d,), dt),
+            "w_up": cm.dense_init(ks[0], (d, 2 * din), dt),
+            "conv": cm.dense_init(ks[1], (4, din), dt),
+            "wq": cm.dense_init(ks[2], (din, din), dt),
+            "wk": cm.dense_init(ks[3], (din, din), dt),
+            "wv": cm.dense_init(ks[4], (din, din), dt),
+            "w_gates": cm.dense_init(ks[5], (din, 2 * h), jnp.float32),
+            "b_gates": jnp.concatenate([
+                jnp.full((h,), -2.0, jnp.float32),     # input gate bias
+                jnp.full((h,), 3.0, jnp.float32),      # forget gate bias
+            ]),
+            "w_down": cm.dense_init(ks[6], (din, d), dt),
+        }
+
+    return init_one
+
+
+def _mlstm_specs(cfg: ModelConfig) -> dict:
+    d, dt = cfg.d_model, cfg.dtype
+    din = d_inner(cfg)
+    h = cfg.n_heads
+    return {
+        "ln": jax.ShapeDtypeStruct((d,), dt),
+        "w_up": jax.ShapeDtypeStruct((d, 2 * din), dt),
+        "conv": jax.ShapeDtypeStruct((4, din), dt),
+        "wq": jax.ShapeDtypeStruct((din, din), dt),
+        "wk": jax.ShapeDtypeStruct((din, din), dt),
+        "wv": jax.ShapeDtypeStruct((din, din), dt),
+        "w_gates": jax.ShapeDtypeStruct((din, 2 * h), jnp.float32),
+        "b_gates": jax.ShapeDtypeStruct((2 * h,), jnp.float32),
+        "w_down": jax.ShapeDtypeStruct((din, d), dt),
+    }
+
+
+_MLSTM_AXES = {
+    "ln": (None,),
+    "w_up": ("embed", "mlp"),
+    "conv": (None, "mlp"),
+    "wq": ("mlp", None),
+    "wk": ("mlp", None),
+    "wv": ("mlp", None),
+    "w_gates": ("mlp", None),
+    "b_gates": (None,),
+    "w_down": ("mlp", "embed"),
+}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block params
+# ---------------------------------------------------------------------------
+
+
+def _slstm_init(cfg: ModelConfig):
+    d, dt, h = cfg.d_model, cfg.dtype, cfg.n_heads
+    hd = d // h
+    ff = slstm_ff(cfg)
+
+    def init_one(key):
+        ks = jax.random.split(key, 8)
+        return {
+            "ln": jnp.zeros((d,), dt),
+            "w_in": cm.dense_init(ks[0], (d, 4 * d), dt),       # z,i,f,o
+            "r": cm.dense_init(ks[1], (4, h, hd, hd), jnp.float32,
+                               in_axis=2),
+            "b": jnp.zeros((4 * d,), jnp.float32),
+            "w_out": cm.dense_init(ks[2], (d, d), dt),
+            "ln2": jnp.zeros((d,), dt),
+            "ff1": cm.dense_init(ks[3], (d, 2 * ff), dt),
+            "ff2": cm.dense_init(ks[4], (ff, d), dt),
+        }
+
+    return init_one
+
+
+def _slstm_specs(cfg: ModelConfig) -> dict:
+    d, dt, h = cfg.d_model, cfg.dtype, cfg.n_heads
+    hd = d // h
+    ff = slstm_ff(cfg)
+    return {
+        "ln": jax.ShapeDtypeStruct((d,), dt),
+        "w_in": jax.ShapeDtypeStruct((d, 4 * d), dt),
+        "r": jax.ShapeDtypeStruct((4, h, hd, hd), jnp.float32),
+        "b": jax.ShapeDtypeStruct((4 * d,), jnp.float32),
+        "w_out": jax.ShapeDtypeStruct((d, d), dt),
+        "ln2": jax.ShapeDtypeStruct((d,), dt),
+        "ff1": jax.ShapeDtypeStruct((d, 2 * ff), dt),
+        "ff2": jax.ShapeDtypeStruct((ff, d), dt),
+    }
+
+
+_SLSTM_AXES = {
+    "ln": (None,),
+    "w_in": ("embed", "mlp"),
+    "r": (None, "heads", None, None),
+    "b": (None,),
+    "w_out": (None, "embed"),
+    "ln2": (None,),
+    "ff1": ("embed", "mlp"),
+    "ff2": ("mlp", "embed"),
+}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell — chunkwise parallel (training/prefill) and step (decode)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv(u: jnp.ndarray, w: jnp.ndarray,
+                state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv, kernel 4.  u (B,S,C), w (4,C).
+
+    Returns (out (B,S,C), new_state (B,3,C))."""
+    b, s, c = u.shape
+    if state is None:
+        state = jnp.zeros((b, 3, c), u.dtype)
+    xpad = jnp.concatenate([state, u], axis=1)           # (B, S+3, C)
+    out = sum(xpad[:, i:i + s, :] * w[i][None, None, :] for i in range(4))
+    return out, xpad[:, -3:, :]
+
+
+def mlstm_chunkwise(q, k, v, i_raw, f_raw, c0, n0, chunk: int = CHUNK):
+    """Chunkwise-parallel mLSTM.
+
+    q,k,v: (B,S,H,hd) ; i_raw,f_raw: (B,S,H) fp32
+    c0: (B,H,hd,hd) fp32 ; n0: (B,H,hd) fp32
+    Returns h (B,S,H,hd), (c_final, n_final).
+    """
+    b, s, h, hd = q.shape
+    if s % chunk != 0:
+        chunk = s  # single chunk fallback for small sequences
+    nc = s // chunk
+    scale = 1.0 / math.sqrt(hd)
+
+    li = jnp.minimum(i_raw, I_CAP)                        # log input gate
+    lf = jax.nn.log_sigmoid(f_raw)                        # log forget gate
+
+    def resh(x):
+        return x.reshape(b, nc, chunk, *x.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = resh(q), resh(k), resh(v)
+    lic, lfc = resh(li), resh(lf)
+
+    def body(carry, xs):
+        c, n = carry
+        qi, ki, vi, lii, lfi = xs                         # (B,L,H,...)
+        qi32 = qi.astype(jnp.float32) * scale
+        ki32 = ki.astype(jnp.float32)
+        vi32 = vi.astype(jnp.float32)
+        a = jnp.cumsum(lfi, axis=1)                       # (B,L,H)
+        a_l = a[:, -1:, :]                                # (B,1,H)
+        # inter-chunk: decay from chunk start
+        dec_q = jnp.exp(a)                                # <= 1
+        out = jnp.einsum("blhd,bhde->blhe", qi32 * dec_q[..., None], c)
+        den = jnp.einsum("blhd,bhd->blh", qi32 * dec_q[..., None], n)
+        # intra-chunk
+        w_kj = jnp.exp(lii - a)                           # i_j * exp(-A_j)
+        sc = jnp.einsum("blhd,bmhd->bhlm", qi32 * dec_q[..., None],
+                        ki32 * w_kj[..., None])
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        sc = jnp.where(mask[None, None], sc, 0.0)
+        out = out + jnp.einsum("bhlm,bmhd->blhd", sc, vi32)
+        den = den + jnp.sum(sc, axis=-1).swapaxes(1, 2)   # (B,L,H)
+        hm = out / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+        # state update
+        w_c = jnp.exp(a_l - a + lii)                      # (B,L,H)
+        c = c * jnp.exp(a_l).swapaxes(1, 2)[..., None] + jnp.einsum(
+            "blhd,blhe->bhde", ki32 * w_c[..., None], vi32)
+        n = n * jnp.exp(a_l).swapaxes(1, 2) + jnp.sum(
+            ki32 * w_c[..., None], axis=1)
+        return (c, n), hm
+
+    from repro.parallel import ctx as pctx
+
+    # NOTE: this is the CHUNK loop (S/chunk trips) — unrolled in counting
+    # mode so cost_analysis sees every chunk.  The sLSTM TIME scan (S
+    # trips) is never unrolled; costcount corrects it analytically.
+    (c_f, n_f), hs = cm.scan_or_unroll(body, (c0, n0),
+                                       (qc, kc, vc, lic, lfc),
+                                       not pctx.get_unroll())
+    hs = hs.swapaxes(0, 1).reshape(b, s, h, hd)
+    return hs.astype(q.dtype), (c_f, n_f)
+
+
+def mlstm_step(q, k, v, i_raw, f_raw, c, n):
+    """Single-token recurrent step.  q,k,v (B,H,hd); gates (B,H)."""
+    hd = q.shape[-1]
+    scale = 1.0 / math.sqrt(hd)
+    q32 = q.astype(jnp.float32) * scale
+    k32 = k.astype(jnp.float32)
+    v32 = v.astype(jnp.float32)
+    i_g = jnp.exp(jnp.minimum(i_raw, I_CAP))[..., None]   # (B,H,1)
+    f_g = jax.nn.sigmoid(f_raw)[..., None]
+    c = c * f_g[..., None] + i_g[..., None] * (k32[..., :, None]
+                                               * v32[..., None, :])
+    n = n * f_g + i_g * k32
+    out = jnp.einsum("bhd,bhde->bhe", q32, c)
+    den = jnp.einsum("bhd,bhd->bh", q32, n)
+    h = out / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    return h.astype(q.dtype), (c, n)
+
+
+def _mlstm_qkvg(cfg: ModelConfig, p: dict, x: jnp.ndarray,
+                conv_state: Optional[jnp.ndarray] = None):
+    """Shared projection pipeline.  x (B,S,D) -> q,k,v,(i,f),z, conv_state."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    din = d_inner(cfg)
+    hd = din // h
+    xin = cm.rms_norm(x, p["ln"], cfg.norm_eps)
+    uz = jnp.dot(xin, p["w_up"])
+    u, z = jnp.split(uz, 2, axis=-1)
+    uc, conv_state = causal_conv(u, p["conv"], conv_state)
+    uc = jax.nn.silu(uc.astype(jnp.float32)).astype(x.dtype)
+    q = jnp.dot(uc, p["wq"]).reshape(b, s, h, hd)
+    k = jnp.dot(uc, p["wk"]).reshape(b, s, h, hd)
+    v = jnp.dot(u, p["wv"]).reshape(b, s, h, hd)
+    gates = jnp.dot(uc.astype(jnp.float32), p["w_gates"]) + p["b_gates"]
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)           # (B,S,H)
+    return q, k, v, i_raw, f_raw, z, conv_state
+
+
+def mlstm_block(cfg: ModelConfig, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    din = d_inner(cfg)
+    hd = din // h
+    q, k, v, i_raw, f_raw, z, _ = _mlstm_qkvg(cfg, p, x)
+    c0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, h, hd), jnp.float32)
+    hs, _ = mlstm_chunkwise(q, k, v, i_raw, f_raw, c0, n0)
+    hs = hs.reshape(b, s, din) * jax.nn.silu(z.astype(jnp.float32)).astype(
+        x.dtype)
+    return x + jnp.dot(hs, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# sLSTM cell
+# ---------------------------------------------------------------------------
+
+
+def slstm_seq(p: dict, x_proj: jnp.ndarray, h0, c0, n0, m0):
+    """x_proj (B,S,4,H,hd) pre-computed input projections (z,i,f,o order).
+
+    Sequential scan with max-stabilized exponential gating."""
+    r = p["r"]                                            # (4,H,hd,hd)
+
+    def step(carry, xt):
+        hp, cp, np_, mp = carry                           # (B,H,hd) fp32
+        pre = xt.astype(jnp.float32) + jnp.einsum(
+            "bhd,ghde->gbhe", hp, r)                      # (4,B,H,hd)
+        z_t = jnp.tanh(pre[0])
+        i_t, f_t, o_t = pre[1], pre[2], pre[3]
+        m_t = jnp.maximum(f_t + mp, i_t)
+        i_p = jnp.exp(i_t - m_t)
+        f_p = jnp.exp(f_t + mp - m_t)
+        c_t = f_p * cp + i_p * z_t
+        n_t = f_p * np_ + i_p
+        h_t = jax.nn.sigmoid(o_t) * c_t / jnp.maximum(n_t, 1.0)
+        return (h_t, c_t, n_t, m_t), h_t
+
+    xs = x_proj.swapaxes(0, 1).swapaxes(1, 2)             # (S,4,B,H,hd)? no
+    xs = x_proj.transpose(1, 2, 0, 3, 4)                  # (S,4,B,H,hd)
+    (hf, cf, nf, mf), hs = jax.lax.scan(step, (h0, c0, n0, m0), xs)
+    return hs.transpose(1, 0, 2, 3), (hf, cf, nf, mf)     # (B,S,H,hd)
+
+
+def slstm_block(cfg: ModelConfig, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    b, s, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    xin = cm.rms_norm(x, p["ln"], cfg.norm_eps)
+    xp = (jnp.dot(xin, p["w_in"]).astype(jnp.float32)
+          + p["b"]).reshape(b, s, 4, h, hd)
+    zero = jnp.zeros((b, h, hd), jnp.float32)
+    hs, _ = slstm_seq(p, xp, zero, zero, zero, zero - 1e30)
+    hs = hs.reshape(b, s, d).astype(x.dtype)
+    x = x + jnp.dot(hs, p["w_out"])
+    # GeGLU feed-forward
+    xf = cm.rms_norm(x, p["ln2"], cfg.norm_eps)
+    g, u = jnp.split(jnp.dot(xf, p["ff1"]), 2, axis=-1)
+    ff = jax.nn.gelu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return x + jnp.dot(ff, p["ff2"])
+
+
+# ---------------------------------------------------------------------------
+# Model assembly
+# ---------------------------------------------------------------------------
+
+
+def _block_ids(cfg: ModelConfig):
+    m_ids = [i for i in range(cfg.n_layers) if not is_slstm(cfg, i)]
+    s_ids = [i for i in range(cfg.n_layers) if is_slstm(cfg, i)]
+    return m_ids, s_ids
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    m_ids, s_ids = _block_ids(cfg)
+    k_emb, k_m, k_s, k_h = jax.random.split(key, 4)
+    return {
+        "embed": cm.embed_init(k_emb, (cfg.vocab, cfg.d_model), cfg.dtype),
+        "mlstm": cm.stack_layer_params(_mlstm_init(cfg), k_m, len(m_ids)),
+        "slstm": cm.stack_layer_params(_slstm_init(cfg), k_s, len(s_ids)),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "lm_head": cm.dense_init(k_h, (cfg.d_model, cfg.vocab), cfg.dtype),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    m_ids, s_ids = _block_ids(cfg)
+    return {
+        "embed": jax.ShapeDtypeStruct((cfg.vocab, cfg.d_model), cfg.dtype),
+        "mlstm": cm.stacked_specs(_mlstm_specs(cfg), len(m_ids)),
+        "slstm": cm.stacked_specs(_slstm_specs(cfg), len(s_ids)),
+        "final_norm": jax.ShapeDtypeStruct((cfg.d_model,), cfg.dtype),
+        "lm_head": jax.ShapeDtypeStruct((cfg.d_model, cfg.vocab), cfg.dtype),
+    }
+
+
+def logical_axes(cfg: ModelConfig) -> dict:
+    return {
+        "embed": ("vocab", "embed"),
+        "mlstm": cm.stacked_axes(dict(_MLSTM_AXES)),
+        "slstm": cm.stacked_axes(dict(_SLSTM_AXES)),
+        "final_norm": (None,),
+        "lm_head": ("embed", "vocab"),
+    }
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
+            frontend_embeds=None, return_aux: bool = False):
+    """Alternating mLSTM/sLSTM stack.  sLSTM every ``slstm_every`` blocks.
+
+    Layout: scan over groups of (slstm_every-1) mLSTM blocks + 1 sLSTM.
+    Leftover mLSTM blocks (when n_layers % slstm_every != 0) run after."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    m_ids, s_ids = _block_ids(cfg)
+    n_groups = len(s_ids)
+    m_per_group = cfg.slstm_every - 1 if cfg.slstm_every else len(m_ids)
+
+    def group_body(xc, gp):
+        mp, sp = gp
+
+        def m_body(xc2, lp):
+            return mlstm_block(cfg, lp, xc2)
+
+        xc = cm.scan_layers(m_body, xc, mp, cfg)
+        return slstm_block(cfg, sp, xc)
+
+    if n_groups:
+        grouped_m = jax.tree.map(
+            lambda a: a[: n_groups * m_per_group].reshape(
+                n_groups, m_per_group, *a.shape[1:]), params["mlstm"])
+        gfn = cm.maybe_remat(group_body, cfg)
+        x, _ = cm.scan_or_unroll(lambda c, g: (gfn(c, g), None), x,
+                                 (grouped_m, params["slstm"]),
+                                 cfg.scan_layers)
+    rest = len(m_ids) - n_groups * m_per_group
+    if rest:
+        rest_m = jax.tree.map(lambda a: a[-rest:], params["mlstm"])
+        x = cm.scan_layers(lambda c, lp: mlstm_block(cfg, lp, c), x,
+                           rest_m, cfg)
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.dot(x, params["lm_head"]).astype(jnp.float32)
+    if return_aux:
+        return logits, jnp.float32(0.0)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Serving: recurrent state cache
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    m_ids, s_ids = _block_ids(cfg)
+    din = d_inner(cfg)
+    h = cfg.n_heads
+    hd_m = din // h
+    hd_s = cfg.d_model // h
+    f32 = jnp.float32
+    return {
+        "m_c": jax.ShapeDtypeStruct((len(m_ids), batch, h, hd_m, hd_m), f32),
+        "m_n": jax.ShapeDtypeStruct((len(m_ids), batch, h, hd_m), f32),
+        "m_conv": jax.ShapeDtypeStruct((len(m_ids), batch, 3, din),
+                                       cfg.dtype),
+        "s_h": jax.ShapeDtypeStruct((len(s_ids), 4, batch, h, hd_s), f32),
+        "len": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def cache_axes(cfg: ModelConfig) -> dict:
+    return {
+        "m_c": ("layer", "batch", None, None, "state_v"),
+        "m_n": ("layer", "batch", None, None),
+        "m_conv": ("layer", "batch", None, "mlp"),
+        "s_h": ("layer", None, "batch", None, None),
+        "len": (),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int) -> dict:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_specs(cfg, batch, 0))
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
+            frontend_embeds=None, max_len=None):
+    """Run the full sequence, returning last logits + recurrent state.
+
+    (``max_len`` is ignored: recurrent state is O(1) in context length.)"""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    m_ids, s_ids = _block_ids(cfg)
+    h = cfg.n_heads
+    din = d_inner(cfg)
+    hd = din // h
+
+    def m_body(xc, lp):
+        bq, kk, vv, ir, fr, z, conv_st = _mlstm_qkvg(cfg, lp, xc)
+        c0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, h, hd), jnp.float32)
+        hs, (cf, nf) = mlstm_chunkwise(bq, kk, vv, ir, fr, c0, n0)
+        hs = hs.reshape(b, s, din) * jax.nn.silu(
+            z.astype(jnp.float32)).astype(xc.dtype)
+        return xc + jnp.dot(hs, lp["w_down"]), (cf, nf, conv_st)
+
+    def s_body(xc, lp):
+        hd_s = cfg.d_model // h
+        xin = cm.rms_norm(xc, lp["ln"], cfg.norm_eps)
+        xp = (jnp.dot(xin, lp["w_in"]).astype(jnp.float32)
+              + lp["b"]).reshape(b, s, 4, h, hd_s)
+        zero = jnp.zeros((b, h, hd_s), jnp.float32)
+        hs, (hf, cf, nf, mf) = slstm_seq(lp, xp, zero, zero, zero,
+                                         zero - 1e30)
+        hs = hs.reshape(b, s, cfg.d_model).astype(xc.dtype)
+        xc = xc + jnp.dot(hs, lp["w_out"])
+        xf = cm.rms_norm(xc, lp["ln2"], cfg.norm_eps)
+        g, u = jnp.split(jnp.dot(xf, lp["ff1"]), 2, axis=-1)
+        ff = jax.nn.gelu(g.astype(jnp.float32)).astype(xc.dtype) * u
+        return xc + jnp.dot(ff, lp["ff2"]), jnp.stack([hf, cf, nf, mf])
+
+    # interleaved execution with state collection (python loop over groups,
+    # states collected per stacked type)
+    m_states, s_states = [], []
+    mi = si = 0
+    for li in range(cfg.n_layers):
+        if is_slstm(cfg, li):
+            lp = jax.tree.map(lambda a: a[si], params["slstm"])
+            x, st = s_body(x, lp)
+            s_states.append(st)
+            si += 1
+        else:
+            lp = jax.tree.map(lambda a: a[mi], params["mlstm"])
+            x, st = m_body(x, lp)
+            m_states.append(st)
+            mi += 1
+    x = cm.rms_norm(x[:, -1:, :], params["final_norm"], cfg.norm_eps)
+    logits = jnp.dot(x[:, 0, :], params["lm_head"]).astype(jnp.float32)
+    cache = {
+        "m_c": jnp.stack([st[0] for st in m_states]),
+        "m_n": jnp.stack([st[1] for st in m_states]),
+        "m_conv": jnp.stack([st[2] for st in m_states]),
+        "s_h": (jnp.stack(s_states) if s_states
+                else jnp.zeros((0, 4, b, h, cfg.d_model // h), jnp.float32)),
+        "len": jnp.int32(s),
+    }
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, token: jnp.ndarray,
+                cache: dict):
+    """One-token recurrent step."""
+    b = token.shape[0]
+    x = jnp.take(params["embed"], token[:, None], axis=0)  # (B,1,D)
+    h = cfg.n_heads
+    din = d_inner(cfg)
+    hd = din // h
+
+    def m_body(carry, layer_in):
+        xc = carry
+        lp, c_st, n_st, conv_st = layer_in
+        q, k, v, ir, fr, z, conv_st = _mlstm_qkvg(cfg, lp, xc, conv_st)
+        hs, (cf, nf) = mlstm_step(q[:, 0], k[:, 0], v[:, 0], ir[:, 0],
+                                  fr[:, 0], c_st, n_st)
+        hs = hs.reshape(b, 1, din) * jax.nn.silu(
+            z.astype(jnp.float32)).astype(xc.dtype)
+        return xc + jnp.dot(hs, lp["w_down"]), (cf, nf, conv_st)
+
+    def s_body(carry, layer_in):
+        xc = carry
+        lp, st = layer_in                                  # st (4,B,H,hd)
+        hd_s = cfg.d_model // h
+        xin = cm.rms_norm(xc, lp["ln"], cfg.norm_eps)
+        xp = (jnp.dot(xin, lp["w_in"]).astype(jnp.float32)
+              + lp["b"]).reshape(b, 1, 4, h, hd_s)
+        hs, (hf, cf, nf, mf) = slstm_seq(lp, xp, st[0], st[1], st[2], st[3])
+        hs = hs.reshape(b, 1, cfg.d_model).astype(xc.dtype)
+        xc = xc + jnp.dot(hs, lp["w_out"])
+        xf = cm.rms_norm(xc, lp["ln2"], cfg.norm_eps)
+        g, u = jnp.split(jnp.dot(xf, lp["ff1"]), 2, axis=-1)
+        ff = jax.nn.gelu(g.astype(jnp.float32)).astype(xc.dtype) * u
+        return xc + jnp.dot(ff, lp["ff2"]), jnp.stack([hf, cf, nf, mf])
+
+    m_out, s_out = [], []
+    mi = si = 0
+    for li in range(cfg.n_layers):
+        if is_slstm(cfg, li):
+            lp = jax.tree.map(lambda a: a[si], params["slstm"])
+            x, st = s_body(x, (lp, cache["s_h"][si]))
+            s_out.append(st)
+            si += 1
+        else:
+            lp = jax.tree.map(lambda a: a[mi], params["mlstm"])
+            x, st = m_body(x, (lp, cache["m_c"][mi], cache["m_n"][mi],
+                               cache["m_conv"][mi]))
+            m_out.append(st)
+            mi += 1
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.dot(x[:, 0, :], params["lm_head"]).astype(jnp.float32)
+    cache = {
+        "m_c": jnp.stack([st[0] for st in m_out]),
+        "m_n": jnp.stack([st[1] for st in m_out]),
+        "m_conv": jnp.stack([st[2] for st in m_out]),
+        "s_h": (jnp.stack(s_out) if s_out else cache["s_h"]),
+        "len": cache["len"] + 1,
+    }
+    return logits, cache

@@ -1,0 +1,3 @@
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               opt_state_specs, opt_state_axes)
+from repro.optim.schedule import lr_schedule

@@ -1,0 +1,1 @@
+from repro.parallel import ctx, sharding  # noqa: F401

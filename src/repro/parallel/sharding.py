@@ -1,0 +1,119 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+Every parameter/state leaf carries a tuple of logical axis names (see
+``repro.models.common``).  A ``Rules`` mapping turns those into
+``PartitionSpec``s for a concrete mesh.  Rules silently drop mesh axes
+that the mesh does not have (so single-pod / multi-pod / test meshes
+share one rule set).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Default rule set.  Values are mesh-axis names or tuples thereof.
+DEFAULT_RULES: Dict[str, object] = {
+    "embed": "data",          # FSDP: shard the d_model dim of weights
+    "heads": "model",         # TP over attention heads
+    "kv": "model",            # TP over kv heads (GSPMD pads if uneven)
+    "mlp": "model",           # TP over FFN hidden
+    "vocab": "model",         # TP over vocabulary
+    "expert": "model",        # EP over experts
+    "expert_mlp": "data",     # FSDP dim inside expert weights
+    "layer": None,            # never shard the stacked-layer dim
+    "batch": ("pod", "data"),  # data parallel over batch
+    "kv_seq": "model",        # decode KV cache: sequence-sharded (SP)
+    "seq": None,              # training activations: seq replicated
+    "lru": "model",           # recurrent state width
+    "state_v": "model",       # mLSTM matrix-memory value dim
+}
+
+
+def spec_from_axes(axes: Tuple[Optional[str], ...], mesh: Mesh,
+                   rules: Dict[str, object] | None = None,
+                   shape: Optional[Tuple[int, ...]] = None) -> P:
+    """Map logical axes to a PartitionSpec.
+
+    A mesh axis is applied to a dim only if (a) it exists in the mesh,
+    (b) it is not already used by another dim of this array, and (c) the
+    dim size is divisible by it (pjit argument shardings must divide
+    exactly — e.g. 8 GQA kv heads cannot shard over a 16-way model axis
+    and fall back to replication; the roofline surfaces the cost)."""
+    rules = rules or DEFAULT_RULES
+    parts = []
+    used = set()
+    for i, ax in enumerate(axes):
+        if ax is None:
+            parts.append(None)
+            continue
+        mapped = rules.get(ax)
+        if mapped is None:
+            parts.append(None)
+            continue
+        if isinstance(mapped, str):
+            mapped = (mapped,)
+        eff = []
+        dim = shape[i] if shape is not None else None
+        div = 1
+        for m in mapped:
+            if m not in mesh.axis_names or m in used:
+                continue
+            sz = mesh.shape[m]
+            if dim is not None and dim % (div * sz) != 0:
+                continue
+            eff.append(m)
+            div *= sz
+        used.update(eff)
+        if not eff:
+            parts.append(None)
+        elif len(eff) == 1:
+            parts.append(eff[0])
+        else:
+            parts.append(tuple(eff))
+    return P(*parts)
+
+
+def shardings_from_axes(axes_tree, mesh: Mesh,
+                        rules: Dict[str, object] | None = None,
+                        spec_tree=None):
+    """Pytree of logical-axis tuples (+ optional ShapeDtypeStruct tree for
+    divisibility checks) -> pytree of NamedShardings."""
+    is_ax = lambda x: isinstance(x, tuple)
+
+    def one(ax, sds=None):
+        if ax == () or ax is None:
+            return NamedSharding(mesh, P())
+        shape = sds.shape if sds is not None else None
+        return NamedSharding(mesh, spec_from_axes(ax, mesh, rules, shape))
+
+    if spec_tree is None:
+        return jax.tree.map(one, axes_tree, is_leaf=is_ax)
+    return jax.tree.map(one, axes_tree, spec_tree, is_leaf=is_ax)
+
+
+def batch_spec(mesh: Mesh, ndim: int = 2) -> P:
+    """(B, ...) inputs: batch over ('pod','data'), rest replicated."""
+    from repro.parallel.ctx import batch_axes
+
+    ba = batch_axes(mesh)
+    lead = ba[0] if len(ba) == 1 else ba
+    return P(lead, *([None] * (ndim - 1)))
+
+
+def batch_sharding(mesh: Mesh, ndim: int = 2) -> NamedSharding:
+    return NamedSharding(mesh, batch_spec(mesh, ndim))
+
+
+def size_of_spec(spec: P, shape, mesh: Mesh) -> int:
+    """Per-device element count under a PartitionSpec (for napkin math)."""
+    per = int(np.prod(shape))
+    for dim, ax in enumerate(spec):
+        if ax is None:
+            continue
+        axes = (ax,) if isinstance(ax, str) else ax
+        div = int(np.prod([mesh.shape[a] for a in axes]))
+        per //= max(1, div)
+    return per

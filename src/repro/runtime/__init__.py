@@ -1,0 +1,2 @@
+from repro.runtime.trainer import Trainer, TrainerConfig
+from repro.runtime.failures import FailureInjector, SimulatedHostFailure

@@ -1,0 +1,195 @@
+"""Fault-tolerant training runtime.
+
+Wires together: model zoo + sharded train step + synthetic data +
+AdamW (+ optional int8 gradient compression w/ error feedback) +
+checkpoint manager (async, atomic) + failure injection (restart from
+last commit, elastic re-mesh) + straggler monitor.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import CheckpointManager
+from repro.data import SyntheticLMData
+from repro.launch import shapes as shp
+from repro.models import registry
+from repro.models.common import ModelConfig
+from repro.optim import AdamWConfig, adamw_init
+from repro.optim.compress import compress_grads, ef_init
+from repro.parallel import ctx as pctx
+from repro.parallel import sharding as shd
+from repro.runtime.failures import (FailureInjector, SimulatedHostFailure,
+                                    StragglerMonitor)
+from repro.train.step import build_train_step, train_state_shardings
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    n_steps: int = 100
+    seq_len: int = 128
+    global_batch: int = 8
+    n_microbatch: int = 1
+    checkpoint_every: int = 20
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    checkpoint_async: bool = True
+    keep_checkpoints: int = 3
+    compress_grads: bool = False
+    log_every: int = 10
+    peak_lr: float = 3e-4
+    warmup: int = 20
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainerConfig, mesh=None,
+                 injector: Optional[FailureInjector] = None,
+                 log_fn: Callable[[str], None] = print):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.injector = injector or FailureInjector()
+        self.monitor = StragglerMonitor()
+        self.log = log_fn
+        self.ckpt = CheckpointManager(tcfg.checkpoint_dir,
+                                      keep=tcfg.keep_checkpoints)
+        self.data = SyntheticLMData(
+            vocab=cfg.vocab, seq_len=tcfg.seq_len,
+            global_batch=tcfg.global_batch, seed=tcfg.seed,
+            frontend_dim=cfg.frontend_dim,
+            frontend_tokens=shp.frontend_tokens(cfg, tcfg.seq_len))
+        self.history: list = []
+        self.restarts = 0
+        self._build()
+
+    # -- build/jit ------------------------------------------------------------
+    def _build(self) -> None:
+        tcfg = self.tcfg
+        step_fn = build_train_step(
+            self.cfg, n_microbatch=tcfg.n_microbatch,
+            lr_kwargs=dict(peak_lr=tcfg.peak_lr, warmup=tcfg.warmup,
+                           total=tcfg.n_steps))
+        if tcfg.compress_grads:
+            step_fn = self._with_compression(step_fn)
+        if self.mesh is not None:
+            p_sh, o_sh = train_state_shardings(self.cfg, self.mesh)
+            if tcfg.compress_grads:
+                o_sh = dict(o_sh, ef=p_sh)
+            rep = NamedSharding(self.mesh, P())
+            b_sh = shd.batch_sharding(self.mesh, 2)
+            in_sh = (p_sh, o_sh, rep, None)
+            self.step = jax.jit(step_fn, in_shardings=in_sh,
+                                out_shardings=(p_sh, o_sh, None),
+                                donate_argnums=(0, 1))
+            self.p_sh, self.o_sh = p_sh, o_sh
+        else:
+            self.step = jax.jit(step_fn, donate_argnums=(0, 1))
+            self.p_sh = self.o_sh = None
+
+    def _with_compression(self, step_fn):
+        cfg = self.cfg
+        tcfg = self.tcfg
+        from repro.models.common import softmax_cross_entropy
+        from repro.optim import adamw_update, lr_schedule
+        from repro.train.step import _loss_fn
+
+        def step(params, opt_state, step_idx, batch):
+            ef = opt_state["ef"]
+            inner = {k: v for k, v in opt_state.items() if k != "ef"}
+
+            def loss(p):
+                fe = batch.get("frontend_embeds")
+                l, ce = _loss_fn(cfg, p, batch["tokens"], batch["labels"],
+                                 fe)
+                return l, ce
+
+            (_, ce), grads = jax.value_and_grad(loss, has_aux=True)(params)
+            grads, ef = compress_grads(grads, ef)
+            lr = lr_schedule(step_idx, peak_lr=tcfg.peak_lr,
+                             warmup=tcfg.warmup, total=tcfg.n_steps)
+            params, inner, om = adamw_update(AdamWConfig(), grads, params,
+                                             inner, lr)
+            return params, dict(inner, ef=ef), {"loss": ce, **om}
+
+        return step
+
+    # -- state ------------------------------------------------------------------
+    def init_state(self):
+        key = jax.random.PRNGKey(self.tcfg.seed)
+        params = registry.init(self.cfg, key)
+        opt = adamw_init(params)
+        if self.tcfg.compress_grads:
+            opt = dict(opt, ef=ef_init(params))
+        if self.mesh is not None:
+            params = jax.device_put(params, self.p_sh)
+            opt = jax.device_put(opt, self.o_sh)
+        return params, opt
+
+    # -- loop --------------------------------------------------------------------
+    def run(self) -> Dict:
+        params, opt = self.init_state()
+        start = 0
+        ctx = (pctx.use_mesh(self.mesh) if self.mesh is not None
+               else _null_ctx())
+        with ctx:
+            step = start
+            while step < self.tcfg.n_steps:
+                try:
+                    params, opt, step = self._run_span(params, opt, step)
+                except SimulatedHostFailure as e:
+                    self.log(f"[trainer] {e}; elastic restart")
+                    self.restarts += 1
+                    params, opt, step = self._recover()
+        self.ckpt.wait()
+        return {"history": self.history, "restarts": self.restarts,
+                "stragglers": self.monitor.stragglers,
+                "final_step": step}
+
+    def _run_span(self, params, opt, start):
+        for step in range(start, self.tcfg.n_steps):
+            self.injector.check(step)
+            batch = self.data.batch(step)
+            t0 = time.perf_counter()
+            params, opt, metrics = self.step(
+                params, opt, jnp.int32(step), batch)
+            loss = float(metrics["loss"])
+            wall = time.perf_counter() - t0
+            if self.monitor.record(step, wall):
+                self.log(f"[trainer] straggler step {step}: {wall:.3f}s")
+            self.history.append({"step": step, "loss": loss,
+                                 "wall_s": wall})
+            if step % self.tcfg.log_every == 0:
+                self.log(f"[trainer] step {step} loss {loss:.4f} "
+                         f"({wall*1e3:.0f} ms)")
+            if (step + 1) % self.tcfg.checkpoint_every == 0:
+                self.ckpt.save({"params": params, "opt": opt}, step + 1,
+                               blocking=not self.tcfg.checkpoint_async)
+        return params, opt, self.tcfg.n_steps
+
+    def _recover(self):
+        """Elastic restart: rebuild state on the (possibly new) mesh and
+        resume from the last committed checkpoint."""
+        like = {"params": registry.param_specs(self.cfg), "opt": None}
+        params0, opt0 = self.init_state()          # fresh buffers/shardings
+        like = {"params": params0, "opt": opt0}
+        shardings = ({"params": self.p_sh, "opt": self.o_sh}
+                     if self.mesh is not None else None)
+        try:
+            state, step, _ = self.ckpt.restore_latest(like, shardings)
+        except FileNotFoundError:
+            self.log("[trainer] no checkpoint yet; restart from scratch")
+            return params0, opt0, 0
+        return state["params"], state["opt"], step
+
+
+class _null_ctx:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False

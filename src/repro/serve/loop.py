@@ -1,0 +1,78 @@
+"""Batched serving loop: prefill + decode with per-request bookkeeping.
+
+Single static batch per wave (continuous batching is a scheduling-layer
+concern that LiveStack simulates; the execution layer here provides the
+real prefill/decode steps with KV-cache reuse, EOS early-exit, and
+latency accounting per request).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import registry
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass
+class ServeStats:
+    prefill_s: float
+    decode_s: float
+    tokens_out: int
+    per_token_ms: float
+    throughput_tok_s: float
+
+
+class BatchServer:
+    def __init__(self, cfg: ModelConfig, params, max_new_tokens: int = 32,
+                 eos_id: Optional[int] = None):
+        self.cfg = cfg
+        self.params = params
+        self.max_new = max_new_tokens
+        self.eos_id = eos_id
+        self._prefill = jax.jit(
+            lambda p, t, fe: registry.prefill(
+                cfg, p, t, frontend_embeds=fe,
+                max_len=t.shape[1] + max_new_tokens))
+        self._decode = jax.jit(
+            lambda p, tok, cache: registry.decode_step(cfg, p, tok, cache))
+
+    def generate(self, prompts: jnp.ndarray,
+                 frontend_embeds=None) -> Dict:
+        """prompts (B, S) int32 -> dict with tokens (B, <=max_new) + stats."""
+        b = prompts.shape[0]
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, prompts,
+                                      frontend_embeds)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        jax.block_until_ready(tok)
+        t1 = time.perf_counter()
+        out = [np.asarray(tok)]
+        alive = np.ones(b, bool)
+        n_out = b
+        for _ in range(self.max_new - 1):
+            logits, cache = self._decode(self.params, tok, cache)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            t_np = np.asarray(tok)
+            out.append(t_np)
+            if self.eos_id is not None:
+                alive &= t_np != self.eos_id
+                n_out += int(alive.sum())
+                if not alive.any():
+                    break
+            else:
+                n_out += b
+        jax.block_until_ready(tok)
+        t2 = time.perf_counter()
+        tokens = np.stack(out, axis=1)
+        n_steps = tokens.shape[1]
+        stats = ServeStats(
+            prefill_s=t1 - t0, decode_s=t2 - t1, tokens_out=n_out,
+            per_token_ms=(t2 - t1) / max(n_steps - 1, 1) * 1e3,
+            throughput_tok_s=n_out / max(t2 - t0, 1e-9))
+        return {"tokens": tokens, "stats": stats}

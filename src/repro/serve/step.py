@@ -1,0 +1,55 @@
+"""Serve-step builders: prefill and single-token decode.
+
+Decode shards the KV-cache sequence dimension over ``model`` (SP /
+flash-decoding style) because GQA kv-head counts (1-10) rarely divide the
+TP axis; batch shards over DP axes when divisible, else replicates
+(long_500k has global_batch=1).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import registry
+from repro.models.common import ModelConfig
+from repro.parallel import ctx as pctx
+from repro.parallel import sharding as shd
+
+
+def build_prefill_step(cfg: ModelConfig) -> Callable:
+    def step(params, tokens, frontend_embeds=None):
+        return registry.prefill(cfg, params, tokens,
+                                frontend_embeds=frontend_embeds)
+
+    return step
+
+
+def build_decode_step(cfg: ModelConfig) -> Callable:
+    def step(params, token, cache):
+        return registry.decode_step(cfg, params, token, cache)
+
+    return step
+
+
+def serve_rules(cfg: ModelConfig, mesh, batch: int) -> dict:
+    """Rule overrides for serving shapes (batch may not divide DP)."""
+    rules = dict(shd.DEFAULT_RULES)
+    dp = pctx.dp_size(mesh)
+    if batch % dp != 0:
+        ba = [a for a in pctx.batch_axes(mesh)
+              if batch % mesh.shape[a] == 0]
+        rules["batch"] = tuple(ba) if ba else None
+    else:
+        rules["batch"] = tuple(pctx.batch_axes(mesh))
+    return rules
+
+
+def cache_shardings(cfg: ModelConfig, mesh, batch: int, max_len: int,
+                    rules: Optional[dict] = None):
+    rules = rules or serve_rules(cfg, mesh, batch)
+    axes = registry.cache_axes(cfg)
+    specs = registry.cache_specs(cfg, batch, max_len)
+    return shd.shardings_from_axes(axes, mesh, rules, specs)

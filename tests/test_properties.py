@@ -1,0 +1,242 @@
+"""Hypothesis property tests on the system's invariants."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Compute, Scheduler, Scope, State, US, VTask)
+from repro.core.engine_jax import (VecState, eligibility, hub_visibility,
+                                   hub_visibility_ref, run_vectorized,
+                                   scope_minima)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler invariants
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def compute_cluster(draw):
+    n_tasks = draw(st.integers(2, 12))
+    n_scopes = draw(st.integers(1, 4))
+    tasks = []
+    for i in range(n_tasks):
+        steps = draw(st.integers(1, 15))
+        dur = draw(st.integers(1, 200)) * US
+        memberships = draw(st.sets(st.integers(0, n_scopes - 1),
+                                   min_size=1, max_size=n_scopes))
+        tasks.append((steps, dur, sorted(memberships)))
+    skews = [draw(st.integers(1, 100)) * US for _ in range(n_scopes)]
+    return tasks, skews
+
+
+@given(compute_cluster())
+@settings(max_examples=60, deadline=None)
+def test_bounded_skew_never_violated_at_dispatch(cluster):
+    """INVARIANT (paper dispatch rule): whenever a vtask executes a
+    quantum, its vtime is within skew of every scope's runnable min."""
+    tasks_spec, skews = cluster
+    scopes = [Scope(f"s{i}", sk) for i, sk in enumerate(skews)]
+    sched = Scheduler(n_cpus=3)
+    violations = []
+
+    def body(steps, dur):
+        for _ in range(steps):
+            yield Compute(dur)
+
+    tasks = []
+    for i, (steps, dur, members) in enumerate(tasks_spec):
+        t = VTask(f"t{i}", body(steps, dur), kind="modeled")
+        for m in members:
+            t.join(scopes[m])
+        tasks.append(sched.spawn(t))
+
+    orig = sched._dispatch
+
+    def checked(t):
+        for s in t.scopes:
+            sv = s.vtime
+            if sv >= 0 and t.vtime > sv + s.skew_bound_ns:
+                violations.append((t.name, t.vtime, s.name, sv))
+        orig(t)
+
+    sched._dispatch = checked
+    sched.run(max_rounds=100_000)
+    assert not violations
+    assert all(t.state == State.DONE for t in tasks)
+
+
+@given(compute_cluster())
+@settings(max_examples=30, deadline=None)
+def test_scheduler_deterministic(cluster):
+    tasks_spec, skews = cluster
+
+    def build():
+        scopes = [Scope(f"s{i}", sk) for i, sk in enumerate(skews)]
+        sched = Scheduler(n_cpus=2)
+
+        def body(steps, dur):
+            for _ in range(steps):
+                yield Compute(dur)
+
+        out = []
+        for i, (steps, dur, members) in enumerate(tasks_spec):
+            t = VTask(f"t{i}", body(steps, dur), kind="modeled")
+            for m in members:
+                t.join(scopes[m])
+            out.append(sched.spawn(t))
+        sched.run(max_rounds=100_000)
+        return [(t.name, t.vtime) for t in out]
+
+    assert build() == build()
+
+
+@given(compute_cluster())
+@settings(max_examples=30, deadline=None)
+def test_vtime_conservation(cluster):
+    """Compute-only vtasks end at exactly steps x duration (no vtime is
+    lost or invented by scheduling)."""
+    tasks_spec, skews = cluster
+    scopes = [Scope(f"s{i}", sk) for i, sk in enumerate(skews)]
+    sched = Scheduler(n_cpus=4)
+
+    def body(steps, dur):
+        for _ in range(steps):
+            yield Compute(dur)
+
+    ts = []
+    for i, (steps, dur, members) in enumerate(tasks_spec):
+        t = VTask(f"t{i}", body(steps, dur), kind="modeled")
+        for m in members:
+            t.join(scopes[m])
+        ts.append((sched.spawn(t), steps * dur))
+    sched.run(max_rounds=100_000)
+    for t, expect in ts:
+        assert t.vtime == expect
+
+
+# ---------------------------------------------------------------------------
+# Vectorized engine == reference semantics (compute-only workloads)
+# ---------------------------------------------------------------------------
+
+
+@given(compute_cluster())
+@settings(max_examples=20, deadline=None)
+def test_vectorized_engine_matches_reference_final_vtimes(cluster):
+    """Same cluster, both engines: identical final vtimes (both implement
+    bounded-skew rounds; with per-task fixed durations the trajectories
+    coincide when n_cpus >= n_tasks)."""
+    tasks_spec, skews = cluster
+    n = len(tasks_spec)
+    s = len(skews)
+
+    # reference
+    scopes = [Scope(f"s{i}", sk) for i, sk in enumerate(skews)]
+    sched = Scheduler(n_cpus=n)
+
+    def body(steps, dur):
+        for _ in range(steps):
+            yield Compute(dur)
+
+    ref_tasks = []
+    for i, (steps, dur, members) in enumerate(tasks_spec):
+        t = VTask(f"t{i}", body(steps, dur), kind="modeled")
+        for m in members:
+            t.join(scopes[m])
+        ref_tasks.append(sched.spawn(t))
+    sched.run(max_rounds=200_000)
+
+    # vectorized
+    membership = np.zeros((n, s), bool)
+    for i, (_, _, members) in enumerate(tasks_spec):
+        membership[i, members] = True
+    st_ = VecState.create(
+        n, s,
+        durations=[d for _, d, _ in tasks_spec],
+        steps=[stp for stp, _, _ in tasks_spec],
+        membership=membership,
+        skews=skews)
+    st_, _ = run_vectorized(st_, max_rounds=200_000)
+    vec_vtimes = np.asarray(st_.vtime)
+    for i, t in enumerate(ref_tasks):
+        assert int(vec_vtimes[i]) == t.vtime, (i, tasks_spec[i])
+
+
+# ---------------------------------------------------------------------------
+# Eligibility math
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(2, 40), st.integers(1, 8), st.integers(0, 2**31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_global_min_always_eligible(n, s, seed):
+    rng = np.random.default_rng(seed)
+    vtime = rng.integers(0, 100_000, n).astype(np.int32)
+    runnable = rng.random(n) < 0.8
+    if not runnable.any():
+        runnable[0] = True
+    membership = rng.random((n, s)) < 0.4
+    membership[:, 0] |= ~membership.any(axis=1)   # everyone in >=1 scope
+    skew = rng.integers(1, 1000, s).astype(np.int32)
+    import jax.numpy as jnp
+
+    elig = eligibility(jnp.asarray(vtime), jnp.asarray(runnable),
+                       jnp.asarray(membership), jnp.asarray(skew))
+    elig = np.asarray(elig)
+    r_idx = np.where(runnable)[0]
+    gmin = r_idx[np.argmin(vtime[r_idx])]
+    assert elig[gmin], "globally minimal runnable vtask must be eligible"
+
+
+# ---------------------------------------------------------------------------
+# Hub FIFO visibility (max-plus scan) == sequential oracle
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 200), st.integers(1, 8), st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_hub_visibility_matches_oracle(m, n_links, seed):
+    rng = np.random.default_rng(seed)
+    link = np.sort(rng.integers(0, n_links, m)).astype(np.int32)
+    send = np.zeros(m, np.int64)
+    for l in range(n_links):
+        idx = np.where(link == l)[0]
+        send[idx] = np.sort(rng.integers(0, 1_000_000, len(idx)))
+    size = rng.integers(1, 100_000, m).astype(np.int32)
+    bw = rng.uniform(1e9, 100e9, n_links)
+    lat = rng.integers(0, 100_000, n_links).astype(np.int32)
+    import jax.numpy as jnp
+
+    out = hub_visibility(jnp.asarray(send, jnp.int32), jnp.asarray(size),
+                         jnp.asarray(link), jnp.asarray(bw, jnp.float32),
+                         jnp.asarray(lat))
+    ref = hub_visibility_ref(send, size, link, bw, lat)
+    np.testing.assert_allclose(np.asarray(out, np.int64), ref, atol=16)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint roundtrip property
+# ---------------------------------------------------------------------------
+
+
+@given(shapes=st.lists(st.tuples(st.integers(1, 5), st.integers(1, 5)),
+                       min_size=1, max_size=5),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_checkpoint_roundtrip_any_tree(shapes, seed):
+    import tempfile
+
+    import jax.numpy as jnp
+
+    from repro.checkpoint import restore, save
+
+    tmp = tempfile.mkdtemp(prefix="ckpt_prop_")
+    rng = np.random.default_rng(seed)
+    tree = {f"leaf{i}": jnp.asarray(rng.standard_normal(s), jnp.float32)
+            for i, s in enumerate(shapes)}
+    save(tmp, tree, step=1)
+    got, step, _ = restore(tmp, tree)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(got[k]),
+                                      np.asarray(tree[k]))

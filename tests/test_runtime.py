@@ -1,0 +1,162 @@
+"""Runtime integration: checkpoint/restart, failure injection, elastic
+re-shard, gradient compression, serving loop, data determinism."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.checkpoint import CheckpointManager, restore, save, latest_step
+from repro.data import SyntheticLMData
+from repro.launch.mesh import make_test_mesh
+from repro.models import registry
+from repro.runtime import FailureInjector, Trainer, TrainerConfig
+
+
+@pytest.fixture()
+def small_cfg():
+    return dataclasses.replace(configs.get_smoke("qwen3_4b"),
+                               remat=False)
+
+
+def test_data_pipeline_deterministic_and_step_indexed():
+    d1 = SyntheticLMData(vocab=64, seq_len=16, global_batch=4, seed=3)
+    d2 = SyntheticLMData(vocab=64, seq_len=16, global_batch=4, seed=3)
+    np.testing.assert_array_equal(d1.batch(7)["tokens"],
+                                  d2.batch(7)["tokens"])
+    assert not np.array_equal(d1.batch(7)["tokens"],
+                              d1.batch(8)["tokens"])
+
+
+def test_checkpoint_atomic_roundtrip(tmp_path, small_cfg):
+    params = registry.init(small_cfg, jax.random.PRNGKey(0))
+    save(tmp_path, {"params": params}, step=5, extra={"note": "x"})
+    assert latest_step(tmp_path) == 5
+    like = {"params": registry.init(small_cfg, jax.random.PRNGKey(1))}
+    got, step, extra = restore(tmp_path, like)
+    assert step == 5 and extra == {"note": "x"}
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(
+            {"params": params})):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_ignores_partial_writes(tmp_path, small_cfg):
+    params = {"w": jnp.ones((4, 4))}
+    save(tmp_path, params, step=1)
+    # simulate a crashed (uncommitted) later checkpoint
+    (tmp_path / "step_00000002.tmp").mkdir()
+    (tmp_path / "step_00000002.tmp" / "leaf_00000.npy").write_bytes(b"junk")
+    assert latest_step(tmp_path) == 1
+    got, step, _ = restore(tmp_path, params)
+    assert step == 1
+
+
+def test_trainer_loss_decreases(small_cfg, tmp_path):
+    tcfg = TrainerConfig(n_steps=30, seq_len=32, global_batch=4,
+                         checkpoint_every=1000,
+                         checkpoint_dir=str(tmp_path), log_every=1000)
+    tr = Trainer(small_cfg, tcfg, log_fn=lambda s: None)
+    out = tr.run()
+    losses = [h["loss"] for h in out["history"]]
+    assert len(losses) == 30
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+
+
+def test_trainer_failure_restart_resumes_from_checkpoint(small_cfg,
+                                                         tmp_path):
+    tcfg = TrainerConfig(n_steps=25, seq_len=16, global_batch=4,
+                         checkpoint_every=10, checkpoint_async=False,
+                         checkpoint_dir=str(tmp_path), log_every=1000)
+    inj = FailureInjector(fail_at_steps={17})
+    tr = Trainer(small_cfg, tcfg, injector=inj, log_fn=lambda s: None)
+    out = tr.run()
+    assert out["restarts"] == 1
+    # after failing at 17, resumed from the step-10 checkpoint
+    steps = [h["step"] for h in out["history"]]
+    assert steps.count(12) == 2          # re-executed after restore
+    assert out["final_step"] == 25
+    # deterministic data => the re-run of step 12 sees identical tokens
+    d = tr.data
+    np.testing.assert_array_equal(d.batch(12)["tokens"],
+                                  d.batch(12)["tokens"])
+
+
+def test_trainer_failure_without_checkpoint_restarts_fresh(small_cfg,
+                                                           tmp_path):
+    tcfg = TrainerConfig(n_steps=8, seq_len=16, global_batch=4,
+                         checkpoint_every=100, checkpoint_dir=str(tmp_path),
+                         log_every=1000)
+    inj = FailureInjector(fail_at_steps={3})
+    tr = Trainer(small_cfg, tcfg, injector=inj, log_fn=lambda s: None)
+    out = tr.run()
+    assert out["restarts"] == 1 and out["final_step"] == 8
+
+
+def test_elastic_restore_across_meshes(tmp_path):
+    """Save under a (2,1) mesh, restore under (1,2) — re-shard on load.
+
+    Needs >1 device, so it runs in a subprocess with its own XLA_FLAGS
+    (the main test process must keep the single real CPU device)."""
+    import subprocess
+    import sys
+
+    prog = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import dataclasses, jax, numpy as np
+from repro import configs
+from repro.checkpoint import restore, save
+from repro.launch.mesh import make_test_mesh
+from repro.models import registry
+from repro.train.step import train_state_shardings
+
+small_cfg = dataclasses.replace(configs.get_smoke("qwen3_4b"), remat=False)
+tmp = {str(tmp_path)!r}
+mesh_a = make_test_mesh(data=2, model=1)
+mesh_b = make_test_mesh(data=1, model=2)
+params = registry.init(small_cfg, jax.random.PRNGKey(0))
+p_sh_a, _ = train_state_shardings(small_cfg, mesh_a)
+params_a = jax.device_put(params, p_sh_a)
+save(tmp, params_a, step=1)
+p_sh_b, _ = train_state_shardings(small_cfg, mesh_b)
+like = registry.init(small_cfg, jax.random.PRNGKey(1))
+got, _, _ = restore(tmp, like, shardings=p_sh_b)
+for leaf, sh in zip(jax.tree.leaves(got), jax.tree.leaves(
+        p_sh_b, is_leaf=lambda x: hasattr(x, "spec"))):
+    assert leaf.sharding == sh, (leaf.sharding, sh)
+for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(params)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+print("ELASTIC_OK")
+"""
+    env = {**__import__("os").environ, "PYTHONPATH": "src"}
+    res = subprocess.run([sys.executable, "-c", prog], cwd="/root/repo",
+                         env=env, capture_output=True, text=True,
+                         timeout=300)
+    assert "ELASTIC_OK" in res.stdout, res.stderr[-2000:]
+
+
+def test_compressed_training_converges(small_cfg, tmp_path):
+    tcfg = TrainerConfig(n_steps=25, seq_len=32, global_batch=4,
+                         compress_grads=True, checkpoint_every=1000,
+                         checkpoint_dir=str(tmp_path), log_every=1000)
+    tr = Trainer(small_cfg, tcfg, log_fn=lambda s: None)
+    out = tr.run()
+    losses = [h["loss"] for h in out["history"]]
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+
+
+def test_serve_loop(small_cfg):
+    from repro.serve.loop import BatchServer
+
+    params = registry.init(small_cfg, jax.random.PRNGKey(0))
+    srv = BatchServer(small_cfg, params, max_new_tokens=8)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                                 small_cfg.vocab)
+    out = srv.generate(prompts)
+    assert out["tokens"].shape == (2, 8)
+    assert out["stats"].throughput_tok_s > 0
+    # greedy decode must be reproducible
+    out2 = srv.generate(prompts)
+    np.testing.assert_array_equal(out["tokens"], out2["tokens"])

@@ -1,0 +1,284 @@
+"""LiveStack scheduler semantics (paper §3.2)."""
+import pytest
+
+from repro.core import (Compute, DeadlockError, Endpoint, Event, Hub,
+                        LinkSpec, LiveCall, Recv, Scheduler, Scope, Send,
+                        State, US, MS, VTask, Yield, Await)
+
+
+def make_compute_task(name, n_steps, step_ns, scope=None):
+    def body():
+        for _ in range(n_steps):
+            yield Compute(step_ns)
+
+    t = VTask(name, body(), kind="modeled")
+    if scope is not None:
+        t.join(scope)
+    return t
+
+
+def test_bounded_skew_invariant():
+    """No vtask may start a quantum more than skew ahead of scope min."""
+    skew = 10 * US
+    sc = Scope("s", skew)
+    sched = Scheduler(n_cpus=1)
+    fast = sched.spawn(make_compute_task("fast", 100, 5 * US, sc))
+    slow = sched.spawn(make_compute_task("slow", 100, 50 * US, sc))
+
+    violations = []
+    orig = sched._dispatch
+
+    def checked(t):
+        sv = sc.vtime
+        if sv >= 0 and t.vtime > sv + skew:
+            violations.append((t.name, t.vtime, sv))
+        orig(t)
+
+    sched._dispatch = checked
+    sched.run()
+    assert not violations
+    assert fast.state == State.DONE and slow.state == State.DONE
+    # fast must have been stalled repeatedly waiting for slow
+    assert sched.stats.skew_stalls > 0
+
+
+def test_different_scopes_different_skew():
+    tight = Scope("tight", 1 * US)
+    loose = Scope("loose", 1 * MS)
+    sched = Scheduler(n_cpus=1)
+    a = sched.spawn(make_compute_task("a", 50, 2 * US, tight))
+    b = sched.spawn(make_compute_task("b", 50, 2 * US, tight))
+    c = sched.spawn(make_compute_task("c", 5, 100 * US, loose))
+    a.join(loose)
+    sched.run()
+    assert all(t.state == State.DONE for t in (a, b, c))
+
+
+def test_multi_scope_must_hold_everywhere():
+    """A vtask in two scopes is gated by the tighter of the two."""
+    s1 = Scope("s1", 5 * US)
+    s2 = Scope("s2", 500 * US)
+    sched = Scheduler(n_cpus=1)
+    shared = sched.spawn(make_compute_task("shared", 200, 10 * US))
+    shared.join(s1)
+    shared.join(s2)
+    anchor1 = sched.spawn(make_compute_task("anchor1", 10, 100 * US, s1))
+    anchor2 = sched.spawn(make_compute_task("anchor2", 10, 100 * US, s2))
+    violations = []
+    orig = sched._dispatch
+
+    def checked(t):
+        if t is shared:
+            for s in (s1, s2):
+                if s.vtime >= 0 and t.vtime > s.vtime + s.skew_bound_ns:
+                    violations.append(s.name)
+        orig(t)
+
+    sched._dispatch = checked
+    sched.run()
+    assert not violations
+
+
+def test_blocked_excluded_from_scope_min():
+    """Paper: a halted vCPU must not pin scope.vtime (VM-boot deadlock)."""
+    sc = Scope("boot", 10 * US)
+    sched = Scheduler(n_cpus=1)
+    ev = Event()
+
+    def sleeper():
+        yield Await(ev)
+        yield Compute(1 * US)
+
+    def bootstrap():
+        for _ in range(100):
+            yield Compute(5 * US)
+        ev.fire(500 * US)
+        yield Compute(5 * US)
+
+    s1 = sched.spawn(VTask("halted", sleeper(), kind="modeled"))
+    s2 = sched.spawn(VTask("bootstrap", bootstrap(), kind="modeled"))
+    s1.join(sc)
+    s2.join(sc)
+    sched.run()
+    assert s1.state == State.DONE and s2.state == State.DONE
+    # woken sleeper must have been forwarded, not dragged from vtime 0
+    assert s1.vtime >= 500 * US
+
+
+def test_wake_forwards_vtime():
+    sc = Scope("s", 10 * US)
+    sched = Scheduler(n_cpus=1)
+    ev = Event()
+
+    def sleeper():
+        yield Await(ev)
+        yield Compute(0)
+
+    def runner():
+        for i in range(10):
+            yield Compute(100 * US)
+        ev.fire(1 * MS)
+
+    sl = sched.spawn(VTask("sleeper", sleeper(), kind="modeled"))
+    rn = sched.spawn(VTask("runner", runner(), kind="modeled"))
+    sl.join(sc)
+    rn.join(sc)
+    sched.run()
+    # time causality: sleeper observed elapsed time on wake
+    assert sl.vtime >= 1 * MS
+
+
+def test_modeled_preemption_on_no_progress():
+    """Faulty component reporting no progress must not stall the sim."""
+    sc = Scope("s", 10 * US)
+    sched = Scheduler(n_cpus=1, preempt_after=10)
+
+    def faulty():
+        while True:
+            yield Compute(0)     # never reports progress
+
+    f = sched.spawn(VTask("faulty", faulty(), kind="modeled"))
+    g = sched.spawn(make_compute_task("good", 50, 5 * US))
+    f.join(sc)
+    g.join(sc)
+    sched.run(max_rounds=100_000)
+    assert f.state == State.FAULTY
+    assert g.state == State.DONE
+    assert sched.stats.preemptions == 1
+
+
+def test_live_call_clock_derived_vtime():
+    sched = Scheduler(n_cpus=1)
+    acc = []
+
+    def work():
+        acc.append(sum(range(1000)))
+        return acc[-1]
+
+    def body():
+        r = yield LiveCall(work)
+        assert r == sum(range(1000))
+        yield Compute(0)
+
+    t = VTask("live", body(), kind="live")
+    t.clock.calibration = 2.0
+    sched.spawn(t)
+    sched.run()
+    assert t.state == State.DONE
+    assert t.vtime > 0                       # measured, scaled
+    assert t.stats["live_ns"] == t.vtime
+    assert t.clock.total_vtime_ns == pytest.approx(
+        2.0 * t.clock.total_host_ns, rel=0.01)
+
+
+def test_live_call_cost_model_override():
+    sched = Scheduler(n_cpus=1)
+
+    def body():
+        yield LiveCall(lambda: 42, cost_ns=123 * US)
+
+    t = sched.spawn(VTask("live", body(), kind="live"))
+    sched.run()
+    assert t.vtime == 123 * US
+
+
+def test_no_livelock_minimum_always_eligible():
+    """The globally minimal runnable vtask is always eligible."""
+    sc1, sc2 = Scope("a", 1 * US), Scope("b", 1 * US)
+    sched = Scheduler(n_cpus=4)
+    ts = []
+    for i in range(6):
+        t = sched.spawn(make_compute_task(f"t{i}", 30, (i + 1) * US))
+        t.join(sc1 if i % 2 == 0 else sc2)
+        if i % 3 == 0:
+            t.join(sc2)
+        ts.append(t)
+    sched.run(max_rounds=100_000)
+    assert all(t.state == State.DONE for t in ts)
+
+
+def test_deadlock_detection():
+    sched = Scheduler(n_cpus=1)
+    ev = Event()   # never fired
+
+    def waiter():
+        yield Await(ev)
+
+    sched.spawn(VTask("w", waiter(), kind="modeled"))
+    with pytest.raises(DeadlockError):
+        sched.run()
+
+
+def test_figure2_timeline():
+    """Reproduce the paper's Fig. 2: two live vCPUs + one modeled I/O
+    device in one scope.  The device starts idle (blocked, excluded from
+    the scope min); the vCPUs advance; the device wakes on an I/O request,
+    is forwarded to the scope vtime, and its slow modeled progress then
+    holds the vCPUs at the skew bound."""
+    skew = 20 * US
+    sc = Scope("fig2", skew)
+    hub = Hub("h", LinkSpec(bandwidth_bps=80e9, latency_ns=1000))
+    sched = Scheduler(n_cpus=2)
+
+    dev_ep = hub.attach(Endpoint("dev"))
+    cpu0_ep = hub.attach(Endpoint("cpu0"))
+
+    def vcpu0():
+        # compute, then issue I/O, then more compute
+        for _ in range(5):
+            yield Compute(10 * US)
+        yield Send(cpu0_ep, "dev", 4096)
+        for _ in range(20):
+            yield Compute(10 * US)
+
+    def vcpu1():
+        for _ in range(25):
+            yield Compute(10 * US)
+
+    def device():
+        msg = yield Recv(dev_ep)
+        assert msg.size_bytes == 4096
+        for _ in range(10):
+            yield Compute(30 * US)       # slow modeled I/O processing
+
+    t0 = sched.spawn(VTask("vcpu0", vcpu0(), kind="modeled"))
+    t1 = sched.spawn(VTask("vcpu1", vcpu1(), kind="modeled"))
+    td = VTask("dev", device(), kind="modeled")
+    td.state = State.RUNNABLE
+    sched.spawn(td)
+    for t in (t0, t1, td):
+        t.join(sc)
+
+    sched.run()
+    assert all(t.state == State.DONE for t in (t0, t1, td))
+    # device woke at >= the I/O request time (forwarded, not from 0)
+    assert td.vtime >= 50 * US
+    # vCPUs were held at the skew bound while the device caught up
+    assert sched.stats.skew_stalls > 0
+    assert sched.stats.max_skew_seen <= skew
+
+
+def test_determinism():
+    def build():
+        sc = Scope("s", 10 * US)
+        hub = Hub("h")
+        sched = Scheduler(n_cpus=3)
+        eps = [hub.attach(Endpoint(f"e{i}")) for i in range(3)]
+
+        def pingpong(i):
+            def body():
+                for r in range(10):
+                    yield Compute((i + 1) * 3 * US)
+                    yield Send(eps[i], f"e{(i + 1) % 3}", 100 * (r + 1))
+                    msg = yield Recv(eps[i])
+                    yield Compute(msg.size_bytes)
+            return body
+
+        ts = [sched.spawn(VTask(f"t{i}", pingpong(i)(), kind="modeled"))
+              for i in range(3)]
+        for t in ts:
+            t.join(sc)
+        sched.run()
+        return [(t.name, t.vtime, t.stats["msgs_rx"]) for t in ts]
+
+    assert build() == build()
