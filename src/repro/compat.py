@@ -1,0 +1,56 @@
+"""JAX version-compatibility shims.
+
+The repo targets the modern JAX API surface, but must run on whatever
+JAX the container bakes in (currently 0.4.x).  Two drift points matter:
+
+* ``pltpu.CompilerParams`` was named ``pltpu.TPUCompilerParams`` before
+  JAX 0.6; ``tpu_compiler_params(...)`` resolves whichever exists.
+* ``jax.tree.leaves_with_path`` / ``jax.tree.flatten_with_path``
+  appeared in 0.4.34+ in the ``jax.tree`` namespace; older releases only
+  expose them under ``jax.tree_util`` with the ``tree_`` prefix.
+
+All kernels, the checkpoint manager, and the smoke tests route through
+this module instead of touching the drifting names directly.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+try:  # pltpu is importable on CPU-only installs; guard anyway.
+    from jax.experimental.pallas import tpu as _pltpu
+except ImportError:  # pragma: no cover - pallas always ships with jax
+    _pltpu = None
+
+_TPU_PARAMS_CLS = None
+if _pltpu is not None:
+    _TPU_PARAMS_CLS = (getattr(_pltpu, "CompilerParams", None)
+                       or getattr(_pltpu, "TPUCompilerParams", None))
+
+
+def tpu_compiler_params(**kwargs: Any):
+    """``pltpu.CompilerParams(**kwargs)`` under any JAX version.
+
+    Returns None when pallas-TPU is unavailable (pallas_call accepts
+    ``compiler_params=None``).
+    """
+    if _TPU_PARAMS_CLS is None:
+        return None
+    return _TPU_PARAMS_CLS(**kwargs)
+
+
+def tree_leaves_with_path(tree: Any, is_leaf=None):
+    """``jax.tree.leaves_with_path`` with a ``jax.tree_util`` fallback."""
+    fn = getattr(getattr(jax, "tree", None), "leaves_with_path", None)
+    if fn is None:
+        fn = jax.tree_util.tree_leaves_with_path
+    return fn(tree, is_leaf=is_leaf)
+
+
+def tree_flatten_with_path(tree: Any, is_leaf=None):
+    """``jax.tree.flatten_with_path`` with a ``jax.tree_util`` fallback."""
+    fn = getattr(getattr(jax, "tree", None), "flatten_with_path", None)
+    if fn is None:
+        fn = jax.tree_util.tree_flatten_with_path
+    return fn(tree, is_leaf=is_leaf)

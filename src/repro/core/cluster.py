@@ -169,6 +169,85 @@ def build_training_cluster(
     return sched, tasks, ctx
 
 
+def build_rack_cluster(
+    *,
+    n_racks: int = 2,
+    hosts_per_rack: int = 2,
+    n_iters: int = 200,
+    compute_ns: int = 5_000,
+    msg_bytes: int = 4096,
+    cross_every: int = 20,
+    intra_link: LinkSpec = LinkSpec(bandwidth_bps=80e9 * 8,
+                                    latency_ns=2_000),
+    cross_link: LinkSpec = LinkSpec(bandwidth_bps=25e9 * 8,
+                                    latency_ns=50_000),
+    rack_slowdown: Tuple[float, ...] = (),
+    skew_bound_ns: int = 0,
+    mode: str = "async",
+):
+    """Heterogeneous-latency multi-host topology (paper §3.5): one worker
+    vtask per host, hosts grouped into racks.  Intra-rack pairs share a
+    fast link, rack-to-rack pairs a slow one — the regime where per-link
+    lookahead beats a global-min-latency barrier, because racks only need
+    to synchronize at the slow-link granularity while the barrier engine
+    paces *everyone* at the fast-link window.
+
+    Per iteration each worker computes then exchanges ``msg_bytes`` with
+    its intra-rack ring neighbor; rack leaders additionally run a
+    cross-rack leader ring every ``cross_every`` iterations.
+    ``rack_slowdown`` scales per-rack compute (imbalanced racks), and a
+    ``skew_bound_ns`` > 0 adds one global scope over all workers
+    (exercising cross-host proxies + lazy sync).
+
+    Returns (orchestrator, tasks, ctx).
+    """
+    from repro.core.orchestrator import Orchestrator
+
+    n_hosts = n_racks * hosts_per_rack
+    orch = Orchestrator(n_hosts=n_hosts, n_cpus=4, mode=mode)
+    for a in range(n_hosts):
+        for b in range(a + 1, n_hosts):
+            same_rack = a // hosts_per_rack == b // hosts_per_rack
+            orch.connect_hosts(a, b,
+                               intra_link if same_rack else cross_link)
+    hubs = [orch.add_hub(h, Hub(f"hub{h}",
+                                LinkSpec(bandwidth_bps=80e9 * 8,
+                                         latency_ns=500)))
+            for h in range(n_hosts)]
+    eps = [hubs[h].attach(Endpoint(f"w{h}")) for h in range(n_hosts)]
+    xeps = {r: hubs[r * hosts_per_rack].attach(Endpoint(f"lead{r}"))
+            for r in range(n_racks)}
+    iters_done = np.zeros(n_hosts, dtype=np.int64)
+
+    def worker(h: int):
+        r = h // hosts_per_rack
+        slot = h % hosts_per_rack
+        right = r * hosts_per_rack + (slot + 1) % hosts_per_rack
+        mult = rack_slowdown[r] if r < len(rack_slowdown) else 1.0
+        is_leader = slot == 0
+        next_rack = (r + 1) % n_racks
+
+        def body():
+            for i in range(n_iters):
+                yield Compute(int(compute_ns * mult))
+                if hosts_per_rack > 1:
+                    yield Send(eps[h], f"w{right}", msg_bytes)
+                    yield Recv(eps[h])
+                if (is_leader and n_racks > 1
+                        and (i + 1) % cross_every == 0):
+                    yield Send(xeps[r], f"lead{next_rack}", msg_bytes)
+                    yield Recv(xeps[r])
+                iters_done[h] = i + 1
+
+        return orch.host(h).spawn(VTask(f"w{h}", body(), kind="modeled"))
+
+    tasks = [worker(h) for h in range(n_hosts)]
+    if skew_bound_ns > 0:
+        orch.global_scope("cluster", tasks, skew_bound_ns=skew_bound_ns)
+    ctx = {"hubs": hubs, "iters_done": iters_done, "endpoints": eps}
+    return orch, tasks, ctx
+
+
 def analytic_step_ns(spec: ClusterSpec, step_cost: StepCost) -> int:
     """Closed-form per-step time (the validation target for the sim)."""
     comm = step_cost.ici_bytes / spec.ici_bw_Bps * SEC + spec.ici_lat_ns

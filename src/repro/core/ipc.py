@@ -101,6 +101,11 @@ class Hub:
         self.peers: Dict[str, "Hub"] = {}         # distributed hub instances
         self.peer_link: LinkSpec = LinkSpec(bandwidth_bps=25e9 * 8,
                                             latency_ns=10_000)
+        # per-peer link specs (heterogeneous topologies) + per-link
+        # visibility-time accounting.  ``peer_link`` stays as the default
+        # for peers without an explicit entry (back-compat).
+        self.peer_links: Dict[str, LinkSpec] = {}
+        self.peer_stats: Dict[str, Dict[str, int]] = {}
 
     # wiring -----------------------------------------------------------------
     def attach(self, ep: Endpoint) -> Endpoint:
@@ -119,12 +124,27 @@ class Hub:
     def peer_with(self, other: "Hub", link: Optional[LinkSpec] = None):
         """Distributed hub instance (paper §3.5): one logical hub spanning
         hosts; cross-instance messages carry addressing+visibility
-        metadata over the host interconnect link."""
+        metadata over the host interconnect link.
+
+        ``link`` is recorded per peer pair, so different pairs may use
+        different interconnects (fast intra-rack vs slow cross-rack); the
+        per-pair latency is the conservative lookahead of that channel."""
         self.peers[other.name] = other
         other.peers[self.name] = self
         if link is not None:
             self.peer_link = link
             other.peer_link = link
+        # pin the pair's link at peering time (each direction from the
+        # sender's current default when none is given) so a later
+        # peer_with on some *other* pair cannot retroactively change
+        # this channel via the shared scalar
+        self.peer_links[other.name] = link or self.peer_link
+        other.peer_links[self.name] = link or other.peer_link
+
+    def lookahead_ns(self, peer_name: str) -> int:
+        """Guaranteed minimum delay of any message sent to ``peer_name``:
+        a message sent at t is never visible there before t + lookahead."""
+        return self.peer_links.get(peer_name, self.peer_link).latency_ns
 
     # data path ----------------------------------------------------------------
     def _link(self, src: str, dst: str) -> LinkSpec:
@@ -142,15 +162,22 @@ class Hub:
         extra = 0
         for hook in self.hooks:
             extra += int(hook(msg, self.state))
+        # hooks may only *add* latency: a negative total would let a
+        # message undercut the link's guaranteed lookahead and break
+        # conservative cross-host synchronization.
+        extra = max(0, extra)
         if msg.dst not in self.endpoints:
             # cross-host: forward to the distributed hub instance owning dst
             for peer in self.peers.values():
                 if msg.dst in peer.endpoints:
-                    link = self.peer_link
+                    link = self.peer_links.get(peer.name, self.peer_link)
+                    sent_at = msg.send_vtime
                     msg.send_vtime = self._serialize(msg, ("__peer__",
                                                            peer.name),
                                                      link, extra)
-                    return peer.route(msg)
+                    routed = peer.route(msg)
+                    self._account_peer(peer.name, routed, sent_at, link)
+                    return routed
             raise KeyError(f"hub {self.name}: unknown endpoint {msg.dst}")
         link = self._link(msg.src, msg.dst)
         msg.visibility_time = self._serialize(msg, (msg.src, msg.dst),
@@ -159,6 +186,22 @@ class Hub:
         self.stats["messages"] += 1
         self.stats["bytes"] += msg.size_bytes
         return msg
+
+    def _account_peer(self, peer_name: str, msg: Message, sent_at: int,
+                      link: LinkSpec) -> None:
+        """Per-link visibility-time accounting: every cross-host message
+        must satisfy visibility >= send + link latency (slack >= 0), which
+        is exactly the invariant the per-link lookahead relies on."""
+        st = self.peer_stats.setdefault(
+            peer_name, {"messages": 0, "bytes": 0,
+                        "min_slack_ns": None, "max_visibility_ns": 0})
+        st["messages"] += 1
+        st["bytes"] += msg.size_bytes
+        slack = msg.visibility_time - sent_at - link.latency_ns
+        st["min_slack_ns"] = (slack if st["min_slack_ns"] is None
+                              else min(st["min_slack_ns"], slack))
+        st["max_visibility_ns"] = max(st["max_visibility_ns"],
+                                      msg.visibility_time)
 
     def _serialize(self, msg: Message, link_key, link: LinkSpec,
                    extra_ns: int) -> int:

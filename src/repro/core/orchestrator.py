@@ -6,19 +6,51 @@ cluster-scale simulation while preserving local semantics:
 * **Proxy vtasks**: a synchronization scope may contain remote members;
   locally they appear as ``kind="proxy"`` vtasks participating in the
   bounded-skew arithmetic.  The orchestrator (the control-plane daemon of
-  the paper) refreshes proxy vtimes at sync epochs; between syncs the
+  the paper) refreshes proxy vtimes at sync points; between syncs the
   proxy is conservatively stale, so local tasks can never run ahead of a
   remote peer by more than skew_bound + sync staleness.
 * **Distributed hubs**: ``Hub.peer_with`` links hub instances; cross-host
   messages carry addressing + visibility-time metadata over a host-
-  interconnect ``LinkSpec``.
-* **Conservative epochs**: each epoch runs every host up to
-  ``global_min + window`` where ``window`` = the minimum cross-host link
-  latency (CMB-style lookahead) — a cross-host message sent at t is
-  visible no earlier than t + latency, so no host can miss one.
+  interconnect ``LinkSpec``.  Links may be heterogeneous (fast intra-rack
+  + slow cross-rack) — see ``connect_hosts``.
 * **Placement**: greedy co-location of frequently-interacting components
   (traffic-weighted) to cut cross-host coordination, plus utilization
   rebalancing hooks.
+
+Orchestration engines
+---------------------
+
+Two conservative engines share all of the wiring above; pick one with
+``Orchestrator(mode=...)``:
+
+``mode="async"`` (default) — per-link-lookahead conservative PDES.
+  Each host advances to its own *earliest-input time* (EIT): the
+  earliest vtime at which any peer could still make a message visible
+  here, computed per host pair from that pair's link ``latency_ns``
+  (the channel lookahead) rather than the global minimum.  Peer clock
+  lower bounds are propagated transitively through the host graph
+  (null-message-style LBTS relaxation), so a host only blocks on peers
+  that can actually affect it, and hosts on fast intra-rack links stop
+  gating hosts that only share a slow cross-rack link.  Proxy vtasks
+  are refreshed lazily: a proxy is synced only when the host's window
+  reaches past its scope pin bound (``vtime + skew_bound_ns``), i.e.
+  only when its staleness could pin the local scope minimum.  Progress
+  is guaranteed without wake heuristics: every link has lookahead
+  >= 1 ns, so the minimum-time host's EIT always lies strictly past the
+  global minimum.  A full round with no dispatch and no proxy change
+  means true deadlock (``DeadlockError``).
+
+``mode="barrier"`` — the legacy global-barrier epoch loop.  Every epoch
+  runs all hosts to ``global_min + window`` where ``window`` is the
+  *minimum* cross-host link latency, then barriers and syncs every
+  proxy.  Kept for head-to-head comparison (see
+  ``benchmarks/cluster_bench.py``); on heterogeneous-latency topologies
+  it pays one epoch per min-latency window and one proxy sync per proxy
+  per epoch, which the async engine mostly avoids.
+
+Both engines are conservative, so they produce identical simulation
+results (final vtimes, message counts); they differ only in how many
+synchronization rounds (``stats["epochs"]``) and proxy syncs they need.
 """
 from __future__ import annotations
 
@@ -30,6 +62,8 @@ from repro.core.scheduler import DeadlockError, Scheduler
 from repro.core.scope import Scope
 from repro.core.vtask import State, VTask
 
+_INF = 2**62
+
 
 class ProxyVTask(VTask):
     """Local stand-in for a remote scope member."""
@@ -40,14 +74,41 @@ class ProxyVTask(VTask):
         self.remote = remote
         self.state = State.RUNNABLE
         self.vtime = remote.vtime
+        # staleness bookkeeping (lazy sync): vtime of the mirrored source
+        # at the last sync, sync count, and the largest source-vs-mirror
+        # gap ever observed at a sync point.
+        self.sync_count = 0
+        self.last_sync_vtime = remote.vtime
+        self.max_staleness_ns = 0
 
-    def sync(self) -> None:
-        self.vtime = self.remote.vtime
-        # a finished/blocked remote must not pin the local scope minimum
-        self.state = (State.RUNNABLE if self.remote.state == State.RUNNABLE
-                      else State.BLOCKED)
-        for s in self.scopes:
-            s.invalidate()
+    def _mirror_state(self) -> State:
+        """A finished/blocked remote must not pin the local scope min."""
+        return (State.RUNNABLE if self.remote.state == State.RUNNABLE
+                else State.BLOCKED)
+
+    def is_stale(self) -> bool:
+        return (self.vtime != self.remote.vtime
+                or self.state != self._mirror_state())
+
+    def sync(self) -> bool:
+        """Refresh from the remote; returns True iff anything changed.
+
+        Staleness bookkeeping: ``max_staleness_ns`` records the largest
+        remote-vs-proxy vtime gap ever observed at a sync point (the
+        proxy can only *under*-report, so staleness tightens the skew
+        bound — a liveness cost, never a correctness one)."""
+        remote_v = self.remote.vtime
+        changed = self.is_stale()
+        self.max_staleness_ns = max(self.max_staleness_ns,
+                                    remote_v - self.vtime)
+        self.sync_count += 1
+        self.last_sync_vtime = remote_v
+        if changed:
+            self.vtime = remote_v
+            self.state = self._mirror_state()
+            for s in self.scopes:
+                s.invalidate()
+        return changed
 
 
 @dataclasses.dataclass
@@ -59,26 +120,47 @@ class HostSpec:
 class Orchestrator:
     def __init__(self, n_hosts: int = 1, n_cpus: int = 8,
                  dcn_link: LinkSpec = LinkSpec(bandwidth_bps=25e9 * 8,
-                                               latency_ns=10_000)):
+                                               latency_ns=10_000),
+                 mode: str = "async"):
+        assert mode in ("async", "barrier"), mode
+        self.mode = mode
         self.hosts: Dict[int, Scheduler] = {
             h: Scheduler(host=h, n_cpus=n_cpus, distributed=True)
             for h in range(n_hosts)}
         self.hubs: Dict[int, Hub] = {}
         self.dcn_link = dcn_link
+        # optional heterogeneous topology: (host_a, host_b) -> LinkSpec,
+        # consulted when hubs are peered; pairs without an entry use
+        # dcn_link.
+        self.host_links: Dict[Tuple[int, int], LinkSpec] = {}
         self.proxies: List[ProxyVTask] = []
+        self._host_proxies: Dict[int, List[ProxyVTask]] = {}
         self.global_scopes: List[Scope] = []
-        self.stats = {"epochs": 0, "proxy_syncs": 0, "cross_host_msgs": 0}
+        self.stats = {"epochs": 0, "proxy_syncs": 0, "cross_host_msgs": 0,
+                      "max_proxy_staleness_ns": 0, "max_window_ns": 0}
 
     # -- wiring -----------------------------------------------------------------
     def host(self, h: int) -> Scheduler:
         return self.hosts[h]
 
+    def connect_hosts(self, a: int, b: int, link: LinkSpec) -> None:
+        """Declare the interconnect between hosts ``a`` and ``b`` (both
+        directions); pairs not declared fall back to ``dcn_link``.
+        Per-pair latency becomes that pair's synchronization lookahead
+        in the async engine.  If both hosts already have hubs, the
+        existing channel is re-pinned to the new link."""
+        self.host_links[(a, b)] = link
+        self.host_links[(b, a)] = link
+        ha, hb = self.hubs.get(a), self.hubs.get(b)
+        if ha is not None and hb is not None:
+            ha.peer_with(hb, link)
+
+    def _link_for(self, a: int, b: int) -> LinkSpec:
+        return self.host_links.get((a, b), self.dcn_link)
+
     def add_hub(self, host: int, hub: Hub) -> Hub:
-        if host in self.hubs:
-            # peer the new hub with existing instances (distributed hub)
-            pass
-        for other in self.hubs.values():
-            hub.peer_with(other, self.dcn_link)
+        for other_host, other in self.hubs.items():
+            hub.peer_with(other, self._link_for(host, other_host))
         self.hubs[host] = hub
         return hub
 
@@ -100,6 +182,7 @@ class Orchestrator:
                     self.hosts[h].spawn(p)
                     p.join(s)
                     self.proxies.append(p)
+                    self._host_proxies.setdefault(h, []).append(p)
             scopes.append(s)
         self.global_scopes.extend(scopes)
         return scopes
@@ -150,6 +233,12 @@ class Orchestrator:
         for p in self.proxies:
             p.sync()
             self.stats["proxy_syncs"] += 1
+        self._note_staleness()
+
+    def _note_staleness(self) -> None:
+        for p in self.proxies:
+            self.stats["max_proxy_staleness_ns"] = max(
+                self.stats["max_proxy_staleness_ns"], p.max_staleness_ns)
 
     def unfinished(self) -> bool:
         return any(
@@ -168,35 +257,190 @@ class Orchestrator:
         return max((t.vtime for h in self.hosts.values()
                     for t in h.tasks if t.kind != "proxy"), default=0)
 
-    def run(self, max_epochs: int = 1_000_000) -> dict:
-        window = max(1, min((hub.peer_link.latency_ns
-                             for hub in self.hubs.values()), default=1000))
+    # -- async engine: per-link lookahead ----------------------------------------
+    def _lookahead(self, src: int, dst: int) -> Optional[int]:
+        """Guaranteed minimum delay of a src->dst cross-host message, or
+        None when no channel exists.  Read from the hubs' own routing
+        config (single source of truth with the data path).  Clamped to
+        >= 1 ns: a zero-latency link has no usable lookahead and would
+        stall conservative progress."""
+        shub, dhub = self.hubs.get(src), self.hubs.get(dst)
+        if shub is None or dhub is None or dhub.name not in shub.peers:
+            return None
+        return max(1, shub.lookahead_ns(dhub.name))
+
+    def _clock_bounds(self) -> Dict[int, int]:
+        """Null-message-style LBTS relaxation: lb[h] is a lower bound on
+        the vtime of *any* future action of host h, accounting for
+        transitive wake-up chains (h may be woken by a message from p,
+        which may first be woken by q, ...).  Fixpoint of
+
+            lb[h] = min(local_next(h), min_p lb[p] + lookahead(p, h))
+
+        over the host graph; converges in <= n_hosts passes because all
+        lookaheads are positive."""
+        lb = {}
+        for h, sched in self.hosts.items():
+            t = sched.next_time()
+            lb[h] = _INF if t is None else t
+        hosts = list(self.hosts)
+        for _ in range(len(hosts)):
+            changed = False
+            for dst in hosts:
+                for src in hosts:
+                    if src == dst:
+                        continue
+                    la = self._lookahead(src, dst)
+                    if la is None or lb[src] >= _INF:
+                        continue
+                    v = lb[src] + la
+                    if v < lb[dst]:
+                        lb[dst] = v
+                        changed = True
+            if not changed:
+                break
+        return lb
+
+    def _eit(self, host: int, lb: Dict[int, int]) -> Optional[int]:
+        """Earliest-input time of ``host``: no peer can make a message
+        visible here before this vtime, so every local event strictly
+        below it is safe to execute.  None = unbounded (no peer can
+        reach this host at all)."""
+        times = []
+        for src in self.hosts:
+            if src == host:
+                continue
+            la = self._lookahead(src, host)
+            if la is None or lb[src] >= _INF:
+                continue
+            times.append(lb[src] + la)
+        return min(times) if times else None
+
+    def _lazy_sync(self, host: int, bound: Optional[int]) -> bool:
+        """Sync a proxy only when its staleness could pin the local scope
+        minimum within this window: once the window reaches past
+        ``proxy.vtime + skew_bound`` (the scope pin bound), local members
+        would skew-stall on the stale value."""
+        changed = False
+        for p in self._host_proxies.get(host, ()):
+            if not p.is_stale():
+                continue
+            if bound is not None and p.scopes:
+                pin = min(s.pin_bound(p) for s in p.scopes)
+                if pin >= bound:
+                    continue                  # cannot stall anyone yet
+            if p.sync():
+                changed = True
+            self.stats["proxy_syncs"] += 1
+        return changed
+
+    def _run_async(self, max_rounds: int) -> None:
+        order = sorted(self.hosts)
+        for _ in range(max_rounds):
+            if not self.unfinished():
+                return
+            self.stats["epochs"] += 1
+            progressed = False
+            lb = self._clock_bounds()
+            for h in order:
+                sched = self.hosts[h]
+                bound = self._eit(h, lb)
+                if self._lazy_sync(h, bound):
+                    progressed = True
+                if bound is not None:
+                    start = sched.next_time()
+                    if start is not None and bound > start:
+                        self.stats["max_window_ns"] = max(
+                            self.stats["max_window_ns"], bound - start)
+                if sched.run_until(bound):
+                    progressed = True
+                    # freshen this host's clock bound so later hosts in
+                    # the same round see the larger lookahead window.
+                    # The transitive component (h may still be woken by a
+                    # peer that runs after it) must be re-applied: lb[h]
+                    # is min(local next event, earliest peer wake-up).
+                    t = sched.next_time()
+                    local = _INF if t is None else t
+                    # bound == _eit(h, lb) still: lb is untouched since
+                    # the top of this iteration (and _eit ignores lb[h])
+                    lb[h] = local if bound is None else min(local, bound)
+            if not progressed:
+                if self.unfinished():
+                    self._note_staleness()
+                    raise DeadlockError("distributed simulation wedged")
+                return
+        if self.unfinished():
+            self._note_staleness()
+            raise DeadlockError(
+                f"async engine exceeded {max_rounds} rounds "
+                f"without finishing")
+
+    # -- barrier engine (legacy, kept for head-to-head comparison) ---------------
+    def _run_barrier(self, max_epochs: int) -> None:
+        # CMB lookahead = the minimum latency over every cross-host
+        # channel (per-pair links where declared, the scalar default
+        # otherwise) — any single faster link bounds how far all hosts
+        # may conservatively run ahead.
+        lats = [link.latency_ns
+                for hub in self.hubs.values()
+                for link in (hub.peer_links.values() or [hub.peer_link])]
+        window = max(1, min(lats, default=1000))
+        stalled = 0
         for _ in range(max_epochs):
             if not self.unfinished():
                 break
             self.stats["epochs"] += 1
-            gmin = self.global_now()
             before = self.horizon()
             before_d = sum(h.stats.dispatches for h in self.hosts.values())
+            gmin = self.global_now()
             for h in self.hosts.values():
-                h.run(until_vtime=gmin + window)
+                # strict window drain: a wake-up at or past the gate
+                # could timestamp a receiver against a late slow-link
+                # message that an unsent fast-link message will undercut
+                h.run_until(gmin + window)
             self.sync_proxies()
             if not self.unfinished():
                 break
             after_d = sum(h.stats.dispatches for h in self.hosts.values())
             if self.horizon() == before and after_d == before_d:
-                # no progress in a full epoch: either everything is blocked
-                # on cross-host messages (hub routing is immediate, so the
-                # wake pass resolves it next epoch) or true deadlock.
+                # No progress in a full epoch: everything pending lies at
+                # or past the gate.  Since nothing below gmin + window
+                # could dispatch, any *future* send happens at
+                # >= gmin + window and becomes visible at
+                # >= gmin + 2*window — so waking blocked vtasks below
+                # that horizon is conservative; anything further out is
+                # reached by gmin itself advancing next epoch.
                 moved = False
                 for h in self.hosts.values():
-                    h._wake_pass()
+                    h._wake_pass(bound=gmin + 2 * window)
                     if h.runnable():
                         moved = True
                 if not moved:
-                    raise DeadlockError("distributed simulation wedged")
+                    if not any(h.next_time() is not None
+                               for h in self.hosts.values()):
+                        raise DeadlockError("distributed simulation wedged")
+                    # pending events exist beyond the wake horizon; gmin
+                    # itself advances next epoch.  Two stalled epochs in
+                    # a row means even that cannot make progress.
+                    stalled += 1
+                    if stalled >= 2:
+                        raise DeadlockError(
+                            "distributed simulation stalled with pending "
+                            "events beyond the wake horizon")
+            else:
+                stalled = 0
+
+    def run(self, max_epochs: int = 1_000_000) -> dict:
+        if self.mode == "barrier":
+            self._run_barrier(max_epochs)
+        else:
+            self._run_async(max_epochs)
+        self._note_staleness()
         total_msgs = sum(hub.stats["messages"]
                          for hub in self.hubs.values())
+        self.stats["cross_host_msgs"] = sum(
+            st["messages"] for hub in self.hubs.values()
+            for st in hub.peer_stats.values())
         return {"epochs": self.stats["epochs"],
                 "vtime_ns": self.horizon(),
                 "messages": total_msgs}

@@ -15,8 +15,9 @@ Deterministic in-process realization of LiveStack's scheduler:
   by reported latency (sync return or async RunPage), and are preempted
   to FAULTY after ``preempt_after`` consecutive zero-progress dispatches.
 * Blocked vtasks are excluded from scope minima; wake-up forwards their
-  vtime to the scope vtime (and to the message visibility time for
-  receive wake-ups).
+  vtime to the wake-up's causal timestamp (message visibility time /
+  event fire time) — deterministic regardless of how the orchestrator
+  windows execution, so every engine produces identical timings.
 * If nothing is runnable, the scheduler performs an idle jump to the
   earliest pending visibility/event time (a halted CPU observing elapsed
   time on resume).
@@ -42,6 +43,8 @@ class SchedStats:
     preemptions: int = 0
     skew_stalls: int = 0          # eligible-check rejections
     max_skew_seen: int = 0
+    window_runs: int = 0          # run_until invocations (orchestrator)
+    gate_deferrals: int = 0       # wake-ups deferred past a strict bound
 
 
 class DeadlockError(RuntimeError):
@@ -73,6 +76,11 @@ class Scheduler:
         self._cpu_free_at: List[int] = [0] * n_cpus
         self.stats = SchedStats()
         self._inbound: Dict[int, Message] = {}    # task.id -> pending recv
+        # strict window bound for the round being dispatched (async
+        # engine); read by _exec_action so Recv/Await cannot idle-advance
+        # a task past it.  Carried on the scheduler, not the _dispatch
+        # signature, so tests may still wrap _dispatch(task).
+        self._strict_gate: Optional[int] = None
 
     # -- registration --------------------------------------------------------
     def spawn(self, task: VTask) -> VTask:
@@ -120,7 +128,13 @@ class Scheduler:
         return max((t.vtime for t in self.tasks), default=0)
 
     # -- wake-ups -------------------------------------------------------------
-    def _try_wake(self, task: VTask) -> bool:
+    def _try_wake(self, task: VTask, bound: Optional[int] = None) -> bool:
+        """Wake a blocked task to its pending visibility/event time.
+
+        ``bound`` (async-engine strict window): a wake-up at or past the
+        bound is deferred — a peer that has not run yet could still make
+        an *earlier* message visible at the same endpoint, so waking past
+        the bound would timestamp the task against the wrong message."""
         reason = task._wait_reason
         if reason is None:
             return False
@@ -130,23 +144,27 @@ class Scheduler:
             vis = ep.head_visibility()
             if vis is None:
                 return False
-            scope_mod.wake(task)
-            task.vtime = max(task.vtime, vis)    # idle-until-interrupt
+            if bound is not None and vis >= bound:
+                self.stats.gate_deferrals += 1
+                return False
+            scope_mod.wake(task, at_vtime=vis)   # idle-until-interrupt
             task._wait_reason = None
             return True
         if kind == "event":
             if obj.set_at_vtime is None:
                 return False
-            scope_mod.wake(task)
-            task.vtime = max(task.vtime, obj.set_at_vtime)
+            if bound is not None and obj.set_at_vtime >= bound:
+                self.stats.gate_deferrals += 1
+                return False
+            scope_mod.wake(task, at_vtime=obj.set_at_vtime)
             task._wait_reason = None
             return True
         return False
 
-    def _wake_pass(self) -> None:
+    def _wake_pass(self, bound: Optional[int] = None) -> None:
         for t in self.tasks:
             if t.state == State.BLOCKED:
-                self._try_wake(t)
+                self._try_wake(t, bound=bound)
 
     # -- one action -----------------------------------------------------------
     def _advance(self, task: VTask, delta_ns: int) -> None:
@@ -168,8 +186,15 @@ class Scheduler:
         self._cpu_free_at[cpu] = end
         self._advance(task, end - task.vtime)
 
-    def _exec_action(self, task: VTask, action, send_value=None):
-        """Returns value to send into the generator on next dispatch."""
+    def _exec_action(self, task: VTask, action):
+        """Returns value to send into the generator on next dispatch.
+
+        ``self._strict_gate`` (strict window bound): a Recv/Await may not
+        idle-advance the task to a visibility/event time at or past the
+        gate — a peer that has not run yet could still produce an earlier
+        input, so the task blocks and is woken through the gated wake
+        path instead."""
+        gate = self._strict_gate
         if isinstance(action, Compute):
             progress = action.ns + task.run_page.drain()
             self._advance_on_cpu(task, progress)
@@ -211,12 +236,14 @@ class Scheduler:
                 task.stats["msgs_rx"] += 1
                 return msg
             vis = action.endpoint.head_visibility()
-            if vis is not None:
+            if vis is not None and (gate is None or vis < gate):
                 # message exists but not yet visible: idle until it is
                 self._advance(task, vis - task.vtime)
                 msg = action.endpoint.pop_visible(task.vtime)
                 task.stats["msgs_rx"] += 1
                 return msg
+            if vis is not None:
+                self.stats.gate_deferrals += 1
             task.state = State.BLOCKED
             task._wait_reason = ("recv", action.endpoint)
             for s in task.scopes:
@@ -224,9 +251,12 @@ class Scheduler:
             return None
         if isinstance(action, Await):
             ev = action.event
-            if ev.set_at_vtime is not None:
+            if ev.set_at_vtime is not None and (
+                    gate is None or ev.set_at_vtime < gate):
                 self._advance(task, max(0, ev.set_at_vtime - task.vtime))
                 return None
+            if ev.set_at_vtime is not None:
+                self.stats.gate_deferrals += 1
             task.state = State.BLOCKED
             task._wait_reason = ("event", ev)
             for s in task.scopes:
@@ -268,15 +298,21 @@ class Scheduler:
         task.result = value
 
     # -- main loop --------------------------------------------------------------
-    def step_round(self, until_vtime: Optional[int] = None) -> bool:
+    def step_round(self, until_vtime: Optional[int] = None,
+                   strict: bool = False) -> bool:
         """One dispatch round.  Returns False when nothing is left to do
         locally (all done, or stalled on remote proxy vtime / the epoch
         gate — the orchestrator then syncs proxies and resumes).
 
         ``until_vtime`` is the conservative epoch gate: only vtasks with
-        vtime < until_vtime may dispatch this round."""
+        vtime < until_vtime may dispatch this round.  With ``strict``
+        (async engine), the gate also applies to idle-jump wake-ups: a
+        blocked vtask whose pending visibility lies at or past the gate
+        stays blocked, because a not-yet-sent remote message could still
+        become visible *earlier* — waking past the gate would let the
+        vtask miss it."""
         self.stats.rounds += 1
-        self._wake_pass()
+        self._wake_pass(until_vtime if strict else None)
         all_runnable = [t for t in self.runnable() if t.kind != "proxy"]
         runnable = all_runnable
         if until_vtime is not None:
@@ -290,6 +326,7 @@ class Scheduler:
                 return False
             # idle jump: earliest pending visibility/event
             horizon = None
+            wakeable = []
             for t in blocked:
                 kind, obj = t._wait_reason or (None, None)
                 if kind == "recv":
@@ -298,17 +335,22 @@ class Scheduler:
                     v = obj.set_at_vtime
                 else:
                     v = None
-                if v is not None:
-                    horizon = v if horizon is None else min(horizon, v)
+                if v is None:
+                    continue
+                if strict and until_vtime is not None and v >= until_vtime:
+                    self.stats.gate_deferrals += 1
+                    continue
+                wakeable.append(t)
+                horizon = v if horizon is None else min(horizon, v)
             if horizon is None:
-                if self.distributed:
+                if self.distributed or (strict and until_vtime is not None):
                     # a remote host may still deliver; yield to orchestrator
                     return False
                 raise DeadlockError(
                     f"host {self.host}: all tasks blocked with no pending "
                     f"messages/events: {blocked}")
             self.stats.idle_jumps += 1
-            for t in blocked:
+            for t in wakeable:
                 self._try_wake(t)
             return True
         # bounded-skew eligibility, lowest-vtime first; ineligible vtasks
@@ -325,13 +367,17 @@ class Scheduler:
             # every dispatchable vtask is skew-bound behind a proxy (remote)
             # vtime: yield to the orchestrator for a proxy sync.
             return False
-        for t in picked:
-            for s in t.scopes:
-                sv = s.vtime
-                if sv >= 0:
-                    self.stats.max_skew_seen = max(
-                        self.stats.max_skew_seen, t.vtime - sv)
-            self._dispatch(t)
+        self._strict_gate = until_vtime if strict else None
+        try:
+            for t in picked:
+                for s in t.scopes:
+                    sv = s.vtime
+                    if sv >= 0:
+                        self.stats.max_skew_seen = max(
+                            self.stats.max_skew_seen, t.vtime - sv)
+                self._dispatch(t)
+        finally:
+            self._strict_gate = None
         return True
 
     def run(self, max_rounds: int = 10_000_000,
@@ -340,3 +386,15 @@ class Scheduler:
             if not self.step_round(until_vtime):
                 break
         return self.stats
+
+    def run_until(self, bound: Optional[int],
+                  max_rounds: int = 10_000_000) -> int:
+        """Async-engine hook: drain every action strictly below ``bound``
+        (None = no bound) without ever waking a vtask past it.  Returns
+        the number of dispatches performed in this window."""
+        self.stats.window_runs += 1
+        before = self.stats.dispatches
+        for _ in range(max_rounds):
+            if not self.step_round(until_vtime=bound, strict=True):
+                break
+        return self.stats.dispatches - before

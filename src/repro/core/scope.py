@@ -55,9 +55,30 @@ class Scope:
             return True
         return task.vtime <= sv + self.skew_bound_ns
 
+    @property
+    def local_vtime(self) -> int:
+        """Min vtime over runnable *non-proxy* members (-1 if none).
+        Proxies are conservatively stale mirrors whose vtime depends on
+        the orchestrator's sync schedule, so they must not influence
+        wake-up forwarding — otherwise different orchestration engines
+        would produce different timings for the same simulation."""
+        vs = [t.vtime for t in self.members
+              if t.state == State.RUNNABLE and t.kind != "proxy"]
+        return min(vs) if vs else -1
+
+    def pin_bound(self, task: VTask) -> int:
+        """The vtime up to which *other* members may advance while
+        ``task`` stays put: beyond task.vtime + skew_bound they become
+        ineligible.  Used by the orchestrator's lazy proxy sync — a stale
+        proxy needs a refresh only when the host's window reaches past
+        its pin bound."""
+        return task.vtime + self.skew_bound_ns
+
     def forward_on_wake(self, task: VTask) -> None:
-        """Paper: wake-up forwards vtime to the current scope vtime."""
-        sv = self.vtime
+        """Paper: wake-up forwards vtime to the current scope vtime (a
+        sleeper observes that time moved) — computed over real members
+        only, see ``local_vtime``."""
+        sv = self.local_vtime
         if sv >= 0 and task.vtime < sv:
             task.vtime = sv
 
@@ -66,10 +87,16 @@ def all_eligible(task: VTask) -> bool:
     return all(s.eligible(task) for s in task.scopes)
 
 
-def wake(task: VTask) -> None:
-    """Unblock + forward vtime across every scope (max of scope vtimes)."""
+def wake(task: VTask, at_vtime: Optional[int] = None) -> None:
+    """Unblock + forward vtime: the sleeper observes both that local time
+    moved (max of scope local vtimes — real members only, so forwarding
+    never depends on the orchestrator's proxy-sync schedule) and the
+    wake-up's causal timestamp ``at_vtime`` (message visibility / event
+    fire time), whichever is later."""
     for s in task.scopes:
         s.forward_on_wake(task)
+    if at_vtime is not None:
+        task.vtime = max(task.vtime, at_vtime)
     task.state = State.RUNNABLE
     for s in task.scopes:
         s.invalidate()

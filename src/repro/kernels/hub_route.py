@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 NEG = -(2**30)  # python int: jnp scalars would be captured as consts
 
 
@@ -106,7 +108,7 @@ def hub_route(send_vtime, size_bytes, link_id, link_bw_Bps, link_lat_ns,
         out_specs=pl.BlockSpec((block,), lambda j: (j,)),
         out_shape=jax.ShapeDtypeStruct((m_pad,), jnp.int32),
         scratch_shapes=[pltpu.SMEM((3,), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(send_vtime, ser, link_id, lat)

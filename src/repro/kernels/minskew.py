@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 INF = 2**30  # python int: jnp scalars would be captured as consts
 
 
@@ -89,7 +91,7 @@ def minskew(vtime, runnable, membership, skew, *, block_n=512,
         ],
         out_specs=pl.BlockSpec((block_s,), lambda i, j: (j,)),
         out_shape=jax.ShapeDtypeStruct((s_pad,), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary", "parallel")),
         interpret=interpret,
     )(vtime, runnable, membership)
@@ -107,7 +109,7 @@ def minskew(vtime, runnable, membership, skew, *, block_n=512,
         out_specs=pl.BlockSpec((block_n,), lambda i, j: (i,)),
         out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.int8),
         scratch_shapes=[pltpu.VMEM((block_n,), jnp.int8)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(vtime, runnable, membership, skew, minima)

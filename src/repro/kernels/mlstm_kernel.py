@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 I_CAP = 8.0
 
 
@@ -99,7 +101,7 @@ def mlstm_chunkwise(q, k, v, i_raw, f_raw, *, chunk=128, interpret=False):
             pltpu.VMEM((hd, hd), jnp.float32),
             pltpu.VMEM((hd,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v, i_raw, f_raw)

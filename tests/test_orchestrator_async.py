@@ -1,0 +1,273 @@
+"""Async per-link-lookahead orchestration engine (paper §3.5).
+
+Covers the conservative-PDES guarantees the engine is built on:
+cross-host visibility always respects the per-link latency, lazy proxy
+syncs keep staleness bounded, heterogeneous-latency topologies produce
+identical results in ``barrier`` and ``async`` modes (in fewer
+synchronization rounds), and a wedged cluster raises DeadlockError in
+both modes.
+"""
+import pytest
+
+from repro.core import (Compute, DeadlockError, Endpoint, Hub, LinkSpec,
+                        Orchestrator, Recv, Send, State, US, VTask)
+
+INTRA_NS = 2 * US           # fast intra-rack interconnect
+CROSS_NS = 50 * US          # slow cross-rack interconnect
+
+
+def fast_hub(name="hub", lat_ns=500):
+    return Hub(name, LinkSpec(bandwidth_bps=80e9 * 8, latency_ns=lat_ns))
+
+
+def make_rack_pair_orch(mode):
+    """4 hosts in 2 racks: (0,1) and (2,3) share fast links; rack-to-rack
+    pairs share slow links."""
+    orch = Orchestrator(n_hosts=4, n_cpus=2, mode=mode)
+    intra = LinkSpec(bandwidth_bps=80e9 * 8, latency_ns=INTRA_NS)
+    cross = LinkSpec(bandwidth_bps=25e9 * 8, latency_ns=CROSS_NS)
+    orch.connect_hosts(0, 1, intra)
+    orch.connect_hosts(2, 3, intra)
+    for a in (0, 1):
+        for b in (2, 3):
+            orch.connect_hosts(a, b, cross)
+    hubs = [orch.add_hub(h, fast_hub(f"hub{h}")) for h in range(4)]
+    return orch, hubs
+
+
+def spawn_pingpong(orch, hubs, a, b, n, tag, size=256):
+    """A request/response pair between hosts a and b."""
+    ep_a = hubs[a].attach(Endpoint(f"{tag}.a"))
+    ep_b = hubs[b].attach(Endpoint(f"{tag}.b"))
+
+    def client():
+        for i in range(n):
+            yield Compute(5 * US)
+            yield Send(ep_a, f"{tag}.b", size, payload=i)
+            yield Recv(ep_a)
+
+    def server():
+        for _ in range(n):
+            msg = yield Recv(ep_b)
+            yield Compute(1 * US)
+            yield Send(ep_b, f"{tag}.a", size, payload=msg.payload)
+
+    c = orch.host(a).spawn(VTask(f"{tag}.c", client(), kind="modeled"))
+    s = orch.host(b).spawn(VTask(f"{tag}.s", server(), kind="modeled"))
+    return c, s
+
+
+def build_hetero_workload(mode):
+    """Chatty intra-rack pingpong + occasional cross-rack pingpong: the
+    topology where per-link lookahead beats the global-min window."""
+    orch, hubs = make_rack_pair_orch(mode)
+    tasks = []
+    tasks += spawn_pingpong(orch, hubs, 0, 1, n=40, tag="r0")
+    tasks += spawn_pingpong(orch, hubs, 2, 3, n=40, tag="r1")
+    tasks += spawn_pingpong(orch, hubs, 0, 2, n=4, tag="xr")
+    return orch, hubs, tasks
+
+
+# -- per-link visibility ------------------------------------------------------
+
+def test_cross_host_never_visible_before_link_latency():
+    orch, hubs, tasks = build_hetero_workload("async")
+    orch.run()
+    assert all(t.state == State.DONE for t in tasks)
+    # per-link accounting: visibility >= send_vtime + that link's latency
+    checked = 0
+    for hub in hubs:
+        for peer, st in hub.peer_stats.items():
+            assert st["messages"] > 0
+            assert st["min_slack_ns"] >= 0, (hub.name, peer, st)
+            checked += 1
+    assert checked >= 4      # both rack pairs + the cross-rack pair, 2 dirs
+
+
+def test_receiver_vtime_includes_per_link_latency():
+    orch, hubs = make_rack_pair_orch("async")
+    c, s = spawn_pingpong(orch, hubs, 0, 2, n=3, tag="x")
+    orch.run()
+    # three round trips over the slow cross-rack link
+    assert c.vtime >= 3 * 2 * CROSS_NS
+
+
+# -- lazy proxy sync / staleness ---------------------------------------------
+
+def test_proxy_staleness_bounded_and_skew_preserved():
+    skew = 100 * US
+    step = 10 * US
+    orch, hubs = make_rack_pair_orch("async")
+
+    def worker(n):
+        def body():
+            for _ in range(n):
+                yield Compute(step)
+        return body()
+
+    members = [orch.host(h).spawn(
+        VTask(f"w{h}", worker(60), kind="modeled")) for h in range(4)]
+    orch.global_scope("g", members, skew_bound_ns=skew)
+    orch.run()
+    assert all(t.state == State.DONE for t in members)
+    for p in orch.proxies:
+        # a proxy mirror may lag its source but never lead it
+        assert p.vtime <= p.remote.vtime
+        assert p.last_sync_vtime is not None and p.sync_count > 0
+    # staleness at any sync is bounded by what the remote could cover
+    # between syncs: one lookahead window plus the skew slack plus one
+    # action granularity
+    assert orch.stats["max_proxy_staleness_ns"] <= \
+        skew + orch.stats["max_window_ns"] + step
+    # the bounded-skew contract itself held on every host
+    for sched in orch.hosts.values():
+        assert sched.stats.max_skew_seen <= skew
+
+
+def test_lazy_sync_does_fewer_proxy_syncs_than_barrier():
+    skew = 100 * US
+
+    def build(mode):
+        orch, hubs = make_rack_pair_orch(mode)
+        members = [orch.host(h).spawn(
+            VTask(f"w{h}", (Compute(10 * US) for _ in range(60)),
+                  kind="modeled")) for h in range(4)]
+        orch.global_scope("g", members, skew_bound_ns=skew)
+        return orch, members
+
+    res = {}
+    for mode in ("barrier", "async"):
+        orch, members = build(mode)
+        orch.run()
+        assert all(t.state == State.DONE for t in members)
+        res[mode] = orch.stats["proxy_syncs"]
+    assert res["async"] < res["barrier"]
+
+
+# -- mode equivalence on heterogeneous topologies -----------------------------
+
+def test_hetero_topology_identical_results_both_modes():
+    outcomes = {}
+    for mode in ("barrier", "async"):
+        orch, hubs, tasks = build_hetero_workload(mode)
+        res = orch.run()
+        assert all(t.state == State.DONE for t in tasks)
+        outcomes[mode] = {
+            "vtimes": [t.vtime for t in tasks],
+            "msgs": res["messages"],
+            "cross": orch.stats["cross_host_msgs"],
+            "epochs": res["epochs"],
+        }
+    b, a = outcomes["barrier"], outcomes["async"]
+    assert a["vtimes"] == b["vtimes"]
+    assert a["msgs"] == b["msgs"]
+    assert a["cross"] == b["cross"]
+    # per-link lookahead needs fewer synchronization rounds than the
+    # global-min-latency barrier on a heterogeneous topology
+    assert a["epochs"] < b["epochs"]
+
+
+def test_scope_only_coupling_no_hubs():
+    """Hosts coupled purely by a global scope (no hubs at all) still
+    complete in async mode — unbounded windows, lazy syncs only."""
+    orch = Orchestrator(n_hosts=2, n_cpus=1, mode="async")
+    fast = orch.host(0).spawn(VTask(
+        "fast", (Compute(10 * US) for _ in range(50)), kind="modeled"))
+    slow = orch.host(1).spawn(VTask(
+        "slow", (Compute(40 * US) for _ in range(50)), kind="modeled"))
+    orch.global_scope("g", [fast, slow], skew_bound_ns=80 * US)
+    orch.run()
+    assert fast.state == State.DONE and slow.state == State.DONE
+    assert fast.vtime == 50 * 10 * US
+    assert slow.vtime == 50 * 40 * US
+
+
+@pytest.mark.parametrize("rx_host", [0, 2])
+def test_multi_sender_endpoint_wakes_in_visibility_order(rx_host):
+    """A receiver with two senders over links of very different latency:
+    the slow message is *delivered* first (wall order) but the fast one
+    becomes *visible* first (virtual order).  A wake-up — or a runnable
+    Recv's idle-advance — past the strict window would timestamp the
+    receiver against the slow message; both engines must instead receive
+    the fast message at its own visibility.  ``rx_host`` places the
+    receiver before (0) or after (2) the senders in round order: the
+    former exercises the blocked-wake path, the latter the
+    dispatch-time Recv path."""
+    results = {}
+    for mode in ("barrier", "async"):
+        orch = Orchestrator(n_hosts=3, n_cpus=1, mode=mode)
+        fast = LinkSpec(bandwidth_bps=80e9 * 8, latency_ns=INTRA_NS)
+        slow = LinkSpec(bandwidth_bps=80e9 * 8, latency_ns=CROSS_NS)
+        f_host, s_host = [h for h in range(3) if h != rx_host]
+        orch.connect_hosts(rx_host, f_host, fast)
+        orch.connect_hosts(rx_host, s_host, slow)
+        orch.connect_hosts(f_host, s_host, slow)
+        hubs = [orch.add_hub(h, fast_hub(f"hub{h}", lat_ns=0))
+                for h in range(3)]
+        rx = hubs[rx_host].attach(Endpoint("rx"))
+        s1 = hubs[f_host].attach(Endpoint("s1"))
+        s2 = hubs[s_host].attach(Endpoint("s2"))
+        got = []
+
+        def receiver():
+            for _ in range(2):
+                msg = yield Recv(rx)
+                yield Compute(1 * US)   # timed work between receives:
+                # a premature wake would corrupt this intermediate vtime
+                # even when the final receive order converges
+                got.append((msg.payload, msg.visibility_time))
+
+        def slow_sender():          # sends at t=0 over the 50us link
+            yield Send(s2, "rx", 64, payload="slow")
+
+        def fast_sender():          # sends at t=5us over the 2us link
+            yield Compute(5 * US)
+            yield Send(s1, "rx", 64, payload="fast")
+
+        r = orch.host(rx_host).spawn(
+            VTask("r", receiver(), kind="modeled"))
+        orch.host(f_host).spawn(VTask("f", fast_sender(), kind="modeled"))
+        orch.host(s_host).spawn(VTask("s", slow_sender(), kind="modeled"))
+        for h in orch.hosts.values():
+            h.send_overhead_ns = 0
+        orch.run()
+        assert r.state == State.DONE
+        results[mode] = {"order": [p for p, _ in got],
+                         "rx_vtime": r.vtime}
+        # fast message first, despite the slow one being sent earlier
+        assert results[mode]["order"] == ["fast", "slow"], (mode, got)
+        # the receiver's intermediate Compute ran right after the fast
+        # receive (~7us), not at the slow message's 50us visibility
+        assert r.vtime == CROSS_NS + 1 * US, (mode, r.vtime)
+        got.clear()
+    assert results["barrier"] == results["async"]
+
+
+def test_connect_hosts_after_add_hub_repins_link():
+    orch = Orchestrator(n_hosts=2, n_cpus=1, mode="async")
+    h0 = orch.add_hub(0, fast_hub("h0"))
+    h1 = orch.add_hub(1, fast_hub("h1"))
+    assert h0.peer_links["h1"].latency_ns == orch.dcn_link.latency_ns
+    late = LinkSpec(bandwidth_bps=80e9 * 8, latency_ns=INTRA_NS)
+    orch.connect_hosts(0, 1, late)      # after add_hub: must re-pin
+    assert h0.peer_links["h1"].latency_ns == INTRA_NS
+    assert h1.peer_links["h0"].latency_ns == INTRA_NS
+
+
+# -- deadlock ----------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["barrier", "async"])
+def test_wedged_cluster_raises_deadlock(mode):
+    orch = Orchestrator(n_hosts=2, n_cpus=1, mode=mode)
+    hub0 = orch.add_hub(0, fast_hub("hub0"))
+    hub1 = orch.add_hub(1, fast_hub("hub1"))
+    ep0 = hub0.attach(Endpoint("w0"))
+    ep1 = hub1.attach(Endpoint("w1"))
+
+    def waiter(ep):
+        yield Recv(ep)      # nobody ever sends
+
+    orch.host(0).spawn(VTask("w0t", waiter(ep0), kind="modeled"))
+    orch.host(1).spawn(VTask("w1t", waiter(ep1), kind="modeled"))
+    with pytest.raises(DeadlockError):
+        orch.run()
