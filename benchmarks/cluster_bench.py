@@ -1,6 +1,7 @@
 """Cluster-scale simulation benchmark: 512-chip training of the assigned
 architectures under LiveStack, validated against the closed-form roofline
-and exercised with stragglers/failures (what closed forms cannot do).
+and exercised with stragglers/failures (what closed forms cannot do) —
+driven through the declarative `repro.sim` facade.
 
 Also the orchestration-engine head-to-head (``simulate_multihost`` /
 ``main_multihost``): a >=4-host heterogeneous-latency topology (fast
@@ -9,12 +10,19 @@ intra-rack + slow cross-rack links) run under both ``mode="barrier"``
 conservative PDES).  Both must produce identical simulation results; the
 async engine must need fewer synchronization rounds and far fewer proxy
 syncs, at no wall-clock cost.
+
+Outputs:
+  results/orchestrator_bench.json — engine head-to-head summary (legacy)
+  BENCH_cluster.json              — machine-readable SimReports for the
+                                    whole run, committed at the repo
+                                    root so the perf trajectory is
+                                    tracked PR-over-PR (results/ is
+                                    gitignored)
 """
 from __future__ import annotations
 
 import json
 import pathlib
-import time
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 
@@ -24,27 +32,28 @@ def simulate_multihost(mode: str, *, n_racks: int = 2,
                        rack_slowdown=(1.0, 3.0),
                        skew_bound_ns: int = 2_000_000) -> dict:
     """One engine run on the heterogeneous rack topology."""
-    from repro.core import State
-    from repro.core.cluster import build_rack_cluster
+    from repro.sim import RackRing, Scenario, Simulation, Topology
 
-    orch, tasks, ctx = build_rack_cluster(
-        mode=mode, n_racks=n_racks, hosts_per_rack=hosts_per_rack,
-        n_iters=n_iters, rack_slowdown=rack_slowdown,
-        skew_bound_ns=skew_bound_ns)
-    t0 = time.perf_counter()
-    res = orch.run()
-    wall = time.perf_counter() - t0
-    assert all(t.state == State.DONE for t in tasks)
+    wl = RackRing(n_racks=n_racks, hosts_per_rack=hosts_per_rack,
+                  n_iters=n_iters, skew_bound_ns=skew_bound_ns)
+    report = Simulation(
+        Topology.racks(n_racks, hosts_per_rack), wl,
+        Scenario("imbalanced racks", wl.stragglers(rack_slowdown)),
+        placement=wl.default_placement(), mode=mode,
+    ).run(on_deadlock="raise")
+    assert all(t["state"] == "done" for t in report.tasks.values())
     return {
         "mode": mode, "n_hosts": n_racks * hosts_per_rack,
-        "sync_rounds": res["epochs"],
-        "proxy_syncs": orch.stats["proxy_syncs"],
-        "cross_host_msgs": orch.stats["cross_host_msgs"],
-        "messages": res["messages"],
-        "vtime_ns": res["vtime_ns"],
-        "final_vtimes": [t.vtime for t in tasks],
-        "wall_s": wall,
-        "dispatches": sum(h.stats.dispatches for h in orch.hosts.values()),
+        "sync_rounds": report.sync_rounds,
+        "proxy_syncs": report.proxy_syncs,
+        "cross_host_msgs": report.cross_host_msgs,
+        "messages": report.messages,
+        "vtime_ns": report.vtime_ns,
+        "final_vtimes": [report.tasks[f"w{h}"]["vtime"]
+                         for h in range(wl.n_workers)],
+        "wall_s": report.wall_s,
+        "dispatches": sum(h.dispatches for h in report.hosts),
+        "report": report.to_dict(),
     }
 
 
@@ -70,7 +79,8 @@ def main_multihost() -> dict:
           f"proxy syncs, identical results")
     out = ROOT / "results" / "orchestrator_bench.json"
     out.parent.mkdir(exist_ok=True)
-    slim = {m: {k: v for k, v in r.items() if k != "final_vtimes"}
+    slim = {m: {k: v for k, v in r.items()
+                if k not in ("final_vtimes", "report")}
             for m, r in rows.items()}
     out.write_text(json.dumps(slim, indent=2))
     return rows
@@ -79,10 +89,11 @@ def main_multihost() -> dict:
 def simulate(arch: str = "qwen3_4b", shape: str = "train_4k",
              n_steps: int = 5, straggler: bool = False,
              multi_pod: bool = True) -> dict:
-    from repro.core.cluster import (ClusterSpec, StepCost, StragglerSpec,
-                                    analytic_step_ns,
-                                    build_training_cluster)
+    from repro.core.cluster import (ClusterSpec, StepCost,
+                                    analytic_step_ns)
     from repro.core.vtime import SEC
+    from repro.sim import (ChipRingTraining, Scenario, Simulation,
+                           Straggler, Topology)
 
     spec = ClusterSpec(n_pods=2 if multi_pod else 1, chips_per_pod=256)
     try:
@@ -91,30 +102,29 @@ def simulate(arch: str = "qwen3_4b", shape: str = "train_4k",
     except Exception:
         cost = StepCost(compute_ns=5_000_000, ici_bytes=50_000_000)
     cost.dcn_bytes = cost.ici_bytes // 8
-    stragglers = (StragglerSpec(chip=7, slowdown=2.0),) if straggler \
-        else ()
-    sched, tasks, ctx = build_training_cluster(
-        spec, cost, n_steps, stragglers=stragglers)
-    t0 = time.perf_counter()
-    sched.run()
-    wall = time.perf_counter() - t0
-    sim_ns = max(t.vtime for t in tasks)
+    scenario = Scenario("straggler" if straggler else "baseline",
+                        (Straggler("chip7", 2.0),) if straggler else ())
+    wl = ChipRingTraining(spec, cost, n_steps, skew_bound_ns=1_000_000)
+    report = Simulation(Topology.single_host(n_cpus=64), wl,
+                        scenario).run(on_deadlock="raise")
     analytic_ns = analytic_step_ns(spec, cost) * n_steps
+    done = report.progress["train"]["done_steps"]
     return {
         "arch": arch, "n_chips": spec.n_chips, "n_steps": n_steps,
         "straggler": straggler,
-        "sim_step_ms": sim_ns / n_steps / 1e6,
+        "sim_step_ms": report.vtime_ns / n_steps / 1e6,
         "analytic_step_ms": analytic_ns / n_steps / 1e6,
-        "ratio": sim_ns / max(analytic_ns, 1),
-        "wall_s": wall,
-        "sim_speed": (sim_ns / SEC) / wall,     # simulated s per wall s
-        "messages": sum(h.stats["messages"] for h in ctx["hubs"]),
-        "done_steps_min": int(ctx["done_steps"].min()),
+        "ratio": report.vtime_ns / max(analytic_ns, 1),
+        "wall_s": report.wall_s,
+        "sim_speed": (report.vtime_ns / SEC) / max(report.wall_s, 1e-9),
+        "messages": report.messages,
+        "done_steps_min": int(min(done)),
+        "report": report.to_dict(),
     }
 
 
 def main():
-    main_multihost()
+    multihost = main_multihost()
     print()
     rows = []
     for arch in ("qwen3_4b", "olmoe_1b_7b"):
@@ -122,7 +132,25 @@ def main():
         rows.append(simulate(arch, straggler=True))
     out = ROOT / "results" / "cluster_bench.json"
     out.parent.mkdir(exist_ok=True)
-    out.write_text(json.dumps(rows, indent=2))
+    out.write_text(json.dumps(
+        [{k: v for k, v in r.items() if k != "report"} for r in rows],
+        indent=2))
+    # machine-readable perf trajectory: full SimReports for every run
+    bench = {
+        "schema": "BENCH_cluster/v1",
+        "multihost": {m: multihost[m]["report"]
+                      for m in ("barrier", "async")},
+        "training": [{"arch": r["arch"], "straggler": r["straggler"],
+                      "sim_step_ms": r["sim_step_ms"],
+                      "analytic_step_ms": r["analytic_step_ms"],
+                      "wall_s": r["wall_s"],
+                      # the 512-entry per-task map is redundant with the
+                      # progress arrays for trajectory tracking
+                      "report": {k: v for k, v in r["report"].items()
+                                 if k != "tasks"}} for r in rows],
+    }
+    (ROOT / "BENCH_cluster.json").write_text(
+        json.dumps(bench, indent=2))
     print(f"{'arch':16s} {'strag':>6s} {'sim ms/step':>12s} "
           f"{'analytic':>9s} {'ratio':>6s} {'msgs':>8s} {'wall_s':>7s}")
     for r in rows:

@@ -1,25 +1,26 @@
 """Flagship example: simulate 512-chip training of an assigned
 architecture BEFORE owning the pods (the paper's use case pointed at ML
-systems).
+systems) — now written against the declarative `repro.sim` facade.
 
 The per-chip step cost comes from the multi-pod dry-run artifact (the
-cost-derived vtime model); the ICI/DCN fabrics are LiveStack hubs; every
-chip is a vtask in one bounded-skew scope.  Then we do what closed-form
-rooflines cannot: inject a straggler and a chip failure and watch the
-end-to-end effect.
+cost-derived vtime model); the ICI/DCN fabrics, placement, engines, and
+fault injections are all declared, not hand-wired.  Then we do what
+closed-form rooflines cannot: inject stragglers, chip/host deaths,
+degraded links, and co-located interference, and read the end-to-end
+effect off a structured SimReport.
 
 Run:  PYTHONPATH=src python examples/cluster_sim.py [--arch qwen3_4b]
+      (--smoke shrinks everything for CI)
 """
 import argparse
-import time
 
-from repro.core.cluster import (ClusterSpec, StepCost, StragglerSpec,
-                                analytic_step_ns, build_training_cluster)
-from repro.core.vtime import SEC
+from repro.core.cluster import ClusterSpec, StepCost, analytic_step_ns
+from repro.sim import (ChipRingTraining, DegradeLink, FailHost, FailTask,
+                       ModeledServe, RackRing, Scenario, Simulation,
+                       Straggler, Topology)
 
 
-def run(arch: str, n_steps: int = 4, variant: str = ""):
-    spec = ClusterSpec(n_pods=2, chips_per_pod=256)
+def resolve_cost(arch: str, variant: str = "") -> StepCost:
     try:
         cost = StepCost.from_dryrun(arch, "train_4k", "2x16x16",
                                     variant=variant)
@@ -36,33 +37,36 @@ def run(arch: str, n_steps: int = 4, variant: str = ""):
     print(f"[{arch}] per-chip step cost from {src}: "
           f"compute={cost.compute_ns/1e6:.2f} ms, "
           f"ici={cost.ici_bytes/1e6:.1f} MB")
+    return cost
 
-    scenarios = [
-        ("baseline", dict()),
-        ("straggler 2x on chip 7",
-         dict(stragglers=(StragglerSpec(chip=7, slowdown=2.0),))),
-        ("chip 300 dies at step 2", dict(fail_at=(300, 2))),
-    ]
+
+def run(arch: str, n_steps: int = 4, variant: str = "",
+        chips_per_pod: int = 256):
+    spec = ClusterSpec(n_pods=2, chips_per_pod=chips_per_pod)
+    cost = resolve_cost(arch, variant)
     analytic = analytic_step_ns(spec, cost)
     print(f"  closed-form step time: {analytic/1e6:.2f} ms")
-    for name, kw in scenarios:
-        sched, tasks, ctx = build_training_cluster(
-            spec, cost, n_steps, skew_bound_ns=2_000_000, **kw)
-        t0 = time.perf_counter()
-        try:
-            sched.run()
-            status = "ok"
-        except Exception as e:       # failure propagates as a stall
-            status = type(e).__name__
-        wall = time.perf_counter() - t0
-        sim = max(t.vtime for t in tasks)
-        done = ctx["done_steps"]
-        print(f"  {name:28s}: {sim/n_steps/1e6:9.2f} ms/step "
-              f"(analytic x{sim/n_steps/analytic:.2f}) "
-              f"steps done [{done.min()}..{done.max()}] "
-              f"wall={wall:.1f}s "
-              f"msgs={sum(h.stats['messages'] for h in ctx['hubs'])} "
-              f"[{status}]")
+
+    fail_chip = spec.n_chips * 3 // 5          # 300 of 512, scales down
+    fail_step = n_steps // 2
+    scenarios = [
+        Scenario("baseline"),
+        Scenario("straggler 2x on chip 7", (Straggler("chip7", 2.0),)),
+        Scenario(f"chip {fail_chip} dies at step {fail_step}",
+                 (FailTask(f"chip{fail_chip}", at_compute=fail_step),)),
+    ]
+    for scenario in scenarios:
+        wl = ChipRingTraining(spec, cost, n_steps,
+                              skew_bound_ns=2_000_000)
+        report = Simulation(Topology.single_host(n_cpus=64), wl,
+                            scenario).run()
+        done = report.progress["train"]["done_steps"]
+        print(f"  {scenario.name:28s}: "
+              f"{report.vtime_ns/n_steps/1e6:9.2f} ms/step "
+              f"(analytic x{report.vtime_ns/n_steps/analytic:.2f}) "
+              f"steps done [{min(done)}..{max(done)}] "
+              f"wall={report.wall_s:.1f}s msgs={report.messages} "
+              f"[{report.status}]")
 
 
 def run_multihost(n_racks: int = 2, hosts_per_rack: int = 2,
@@ -73,32 +77,99 @@ def run_multihost(n_racks: int = 2, hosts_per_rack: int = 2,
     per-link-lookahead async engine lets each rack advance at its own
     link granularity instead of creeping at the global minimum latency,
     while producing bit-identical simulation results."""
-    from repro.core import State
-    from repro.core.cluster import build_rack_cluster
-
     print(f"\nmulti-host orchestration: {n_racks} racks x "
           f"{hosts_per_rack} hosts, 2us intra-rack / 50us cross-rack, "
           f"rack 1 is 3x slower")
     results = {}
     for mode in ("barrier", "async"):
-        orch, tasks, ctx = build_rack_cluster(
-            mode=mode, n_racks=n_racks, hosts_per_rack=hosts_per_rack,
-            n_iters=n_iters, rack_slowdown=(1.0, 3.0),
-            skew_bound_ns=2_000_000)
-        t0 = time.perf_counter()
-        res = orch.run()
-        wall = time.perf_counter() - t0
-        assert all(t.state == State.DONE for t in tasks)
-        results[mode] = (res, [t.vtime for t in tasks])
-        print(f"  {mode:8s}: {res['epochs']:5d} sync rounds, "
-              f"{orch.stats['proxy_syncs']:5d} proxy syncs, "
-              f"{res['messages']} msgs, sim={res['vtime_ns']/1e6:.2f} ms, "
-              f"wall={wall*1e3:.0f} ms")
-    assert results["barrier"][1] == results["async"][1], \
-        "engines must agree on simulation results"
-    rb = results["barrier"][0]["epochs"]
-    ra = results["async"][0]["epochs"]
-    print(f"  identical results; async needed {rb/ra:.2f}x fewer rounds")
+        wl = RackRing(n_racks=n_racks, hosts_per_rack=hosts_per_rack,
+                      n_iters=n_iters, skew_bound_ns=2_000_000)
+        report = Simulation(
+            Topology.racks(n_racks, hosts_per_rack), wl,
+            Scenario("imbalanced racks", wl.stragglers((1.0, 3.0))),
+            placement=wl.default_placement(), mode=mode,
+        ).run(on_deadlock="raise")
+        results[mode] = report
+        print(f"  {mode:8s}: {report.sync_rounds:5d} sync rounds, "
+              f"{report.proxy_syncs:5d} proxy syncs, "
+              f"{report.messages} msgs, sim={report.vtime_ns/1e6:.2f} ms, "
+              f"wall={report.wall_s*1e3:.0f} ms")
+    b, a = results["barrier"], results["async"]
+    assert a.tasks == b.tasks, "engines must agree on simulation results"
+    assert a.messages == b.messages
+    print(f"  identical results; async needed "
+          f"{b.sync_rounds/a.sync_rounds:.2f}x fewer rounds")
+    return results
+
+
+def run_scenarios(n_iters: int = 120, n_steps: int = 20,
+                  multihost: bool = True):
+    """Three scenarios only the declarative API can express.  The first
+    two are multi-host (skipped with --skip-multihost); the third is
+    single-host."""
+    print("\nscenario gallery (repro.sim injections):")
+
+    if multihost:
+        # 1. straggler + mid-run host failure: blast radius, not a crash
+        wl = RackRing(n_iters=n_iters, skew_bound_ns=2_000_000)
+        report = Simulation(
+            Topology.racks(2, 2), wl,
+            Scenario("straggler + host 3 dies",
+                     (Straggler("w1", 2.0),
+                      FailHost(host=3, at_vtime=n_iters * 4_000))),
+            placement=wl.default_placement(), mode="async").run()
+        done = report.progress["rack"]["iters_done"]
+        print(f"  straggler + host death      : [{report.status}] "
+              f"iters/worker {done} — the dead host's ring partner "
+              f"wedges; the report records how far everyone got")
+
+        # 2. mid-run degraded cross-rack link
+        outs = {}
+        for name, inj in (("healthy", ()),
+                          ("link 0<->2 8x latency",
+                           (DegradeLink(hosts=(0, 2), latency_factor=8.0,
+                                        from_vtime=n_iters * 1_000),))):
+            wl = RackRing(n_iters=n_iters, skew_bound_ns=2_000_000)
+            outs[name] = Simulation(
+                Topology.racks(2, 2), wl, Scenario(name, inj),
+                placement=wl.default_placement(), mode="async").run()
+        h, d = outs["healthy"], outs["link 0<->2 8x latency"]
+        print(f"  degraded cross-rack link    : [{d.status}] sim time "
+              f"{h.vtime_ns/1e6:.2f} -> {d.vtime_ns/1e6:.2f} ms "
+              f"(+{(d.vtime_ns/h.vtime_ns - 1) * 100:.0f}% from the "
+              f"slow link, same {d.messages} msgs)")
+
+    # 3. co-located serving + training, coupled through simulated CPUs.
+    # The tightly-synced train ring keeps low vtimes and wins the
+    # virtual-time-ordered CPU queue, so serving takes the brunt — the
+    # kind of asymmetry closed-form models miss.
+    spec = ClusterSpec(n_pods=1, chips_per_pod=4)
+    cost = StepCost(compute_ns=500_000, ici_bytes=1_000_000)
+
+    def train():
+        return ChipRingTraining(spec, cost, n_steps,
+                                skew_bound_ns=5_000_000)
+
+    def serve():
+        return ModeledServe(n_clients=4, n_requests=n_steps,
+                            service_ns=500_000)
+
+    alone_t = Simulation(Topology.single_host(n_cpus=1), train(),
+                         cpu_resource=True).run()
+    alone_s = Simulation(Topology.single_host(n_cpus=1), serve(),
+                         cpu_resource=True).run()
+    both = Simulation(Topology.single_host(n_cpus=1),
+                      [train(), serve()], cpu_resource=True).run()
+    t0 = alone_t.tasks["chip0"]["vtime"]
+    t1 = both.tasks["chip0"]["vtime"]
+    s0 = alone_s.tasks["serve.client0"]["vtime"]
+    s1 = both.tasks["serve.client0"]["vtime"]
+    print(f"  co-located serve + train    : [{both.status}] train "
+          f"{t0/n_steps/1e6:.2f} -> {t1/n_steps/1e6:.2f} ms/step "
+          f"(+{(t1/t0 - 1) * 100:.0f}%), serving "
+          f"{s0/1e6:.1f} -> {s1/1e6:.1f} ms "
+          f"(+{(s1/s0 - 1) * 100:.0f}%) for "
+          f"{sum(both.progress['serve']['served'])} requests")
 
 
 if __name__ == "__main__":
@@ -108,7 +179,17 @@ if __name__ == "__main__":
     ap.add_argument("--variant", default="",
                     help="optimized cost variant, e.g. gather_causal")
     ap.add_argument("--skip-multihost", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for CI")
     args = ap.parse_args()
-    run(args.arch, args.steps, args.variant)
-    if not args.skip_multihost:
-        run_multihost()
+    if args.smoke:
+        run(args.arch, n_steps=2, variant=args.variant, chips_per_pod=16)
+        if not args.skip_multihost:
+            run_multihost(n_iters=60)
+        run_scenarios(n_iters=40, n_steps=8,
+                      multihost=not args.skip_multihost)
+    else:
+        run(args.arch, args.steps, args.variant)
+        if not args.skip_multihost:
+            run_multihost()
+        run_scenarios(multihost=not args.skip_multihost)

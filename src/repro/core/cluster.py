@@ -7,25 +7,26 @@ durations come from the dry-run roofline terms (``results/dryrun``) — the
 cost-derived vtime model of DESIGN.md — optionally calibrated by really
 executing a reduced-config step on the host (live calibration).
 
-This is the paper's use case pointed at our workloads: "what will this
-unmodified training stack do on the 512-chip cluster I don't have yet?"
-— including stragglers, failures, and interference, which closed-form
-rooflines cannot express.
+Since the `repro.sim` facade landed, this module holds the *specs*
+(:class:`ClusterSpec`, :class:`StepCost`, :class:`StragglerSpec`) plus
+two thin adapters kept for the legacy call sites:
+``build_training_cluster`` and ``build_rack_cluster`` construct their
+simulations through :class:`repro.sim.Simulation` and are verified
+bit-identical to direct hand-wiring (``tests/test_sim_equivalence.py``).
+New code should use `repro.sim` directly — declarative
+topology/placement/workloads/fault injection, structured
+:class:`~repro.sim.report.SimReport` results.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
+import math
 import pathlib
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Optional, Tuple
 
-import numpy as np
-
-from repro.core.ipc import Endpoint, Hub, LinkSpec
-from repro.core.scheduler import Scheduler
-from repro.core.scope import Scope
-from repro.core.vtask import Compute, LiveCall, Recv, Send, VTask
-from repro.core.vtime import SEC, US, CostModel
+from repro.core.ipc import LinkSpec
+from repro.core.vtime import SEC, CostModel
 
 RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
 
@@ -99,74 +100,85 @@ def build_training_cluster(
     fail_at: Optional[Tuple[int, int]] = None,   # (chip, step) -> dies
     live_step_fn: Optional[Callable] = None,     # executed natively per step
     chips_per_host: int = 0,                     # 0 = all on one scheduler
-) -> Tuple[Scheduler, List[VTask], Dict]:
-    """Build a data-parallel training simulation.
+    mode: str = "async",                         # engine when sharded
+):
+    """Build a data-parallel training simulation (adapter over
+    `repro.sim`).
 
-    Per step each chip: compute (roofline-derived or live-measured), then
-    exchanges its per-step collective bytes with its ring neighbor through
-    the pod hub (reduce-scatter + all-gather ring), with cross-pod
-    gradient reduction over the DCN once per step.
+    ``chips_per_host == 0`` keeps every chip on one Scheduler (the
+    legacy shape).  ``chips_per_host > 0`` shards chips across
+    ``ceil(n_chips / chips_per_host)`` orchestrated hosts: placement
+    routes through ``Orchestrator.co_locate`` on the ring-traffic
+    matrix (so ring neighbors co-locate), host pairs that share a pod
+    get an ICI-class interconnect and pod-disjoint pairs a DCN-class
+    one, and ``mode`` picks the orchestration engine.
+
+    Returns ``(engine, tasks, ctx)`` where ``engine`` is a Scheduler
+    (single-host) or an Orchestrator (sharded) — both have ``.run()``.
+    ``ctx`` additionally carries the built ``repro.sim.Simulation`` as
+    ``ctx["sim"]``.
     """
-    sched = Scheduler(n_cpus=64)
-    pod_hubs = [Hub(f"ici{p}", LinkSpec(bandwidth_bps=spec.ici_bw_Bps * 8,
-                                        latency_ns=spec.ici_lat_ns))
-                for p in range(spec.n_pods)]
-    dcn = Hub("dcn", LinkSpec(bandwidth_bps=spec.dcn_bw_Bps * 8,
-                              latency_ns=spec.dcn_lat_ns))
-    scope = Scope("train", skew_bound_ns)
+    from repro.sim import (ChipRingTraining, FailTask, Scenario,
+                           Simulation, Straggler, Topology)
+
+    wl = ChipRingTraining(spec, step_cost, n_steps,
+                          skew_bound_ns=skew_bound_ns,
+                          live_step_fn=live_step_fn)
+    # legacy semantics: duplicate straggler specs for one chip override
+    # (dict last-wins), they do not compound like stacked injections
     slowdown = {s.chip: s.slowdown for s in stragglers}
+    injections = tuple(Straggler(f"chip{c}", m)
+                       for c, m in slowdown.items())
+    if fail_at is not None:
+        injections += (FailTask(f"chip{fail_at[0]}",
+                                at_compute=fail_at[1]),)
+    scenario = Scenario("training", injections)
 
-    endpoints = []
-    dcn_eps = []
-    for c in range(spec.n_chips):
-        p = c // spec.chips_per_pod
-        ep = pod_hubs[p].attach(Endpoint(f"chip{c}"))
-        endpoints.append(ep)
-        if c % spec.chips_per_pod == 0:      # pod leader joins the DCN
-            dcn_eps.append(dcn.attach(Endpoint(f"pod{p}")))
+    if chips_per_host <= 0:
+        sim = Simulation(Topology.single_host(n_cpus=64), wl, scenario,
+                         mode="single")
+    else:
+        from repro.core.orchestrator import Orchestrator
 
-    tasks: List[VTask] = []
-    done_steps = np.zeros(spec.n_chips, dtype=np.int64)
-
-    def chip_body(c: int):
-        p = c // spec.chips_per_pod
-        right = p * spec.chips_per_pod + (c + 1) % spec.chips_per_pod
-        ep = endpoints[c]
-        mult = slowdown.get(c, 1.0)
-
-        def body():
-            for step in range(n_steps):
-                if fail_at is not None and fail_at == (c, step):
-                    return                    # chip dies silently
-                # 1. compute (live or cost-derived)
-                if live_step_fn is not None:
-                    yield LiveCall(live_step_fn,
-                                   cost_ns=int(step_cost.compute_ns * mult))
-                else:
-                    yield Compute(int(step_cost.compute_ns * mult))
-                # 2. ring exchange: send grad shard to right neighbor,
-                #    receive from left (models RS+AG wire bytes per chip)
-                yield Send(ep, f"chip{right}", step_cost.ici_bytes)
-                yield Recv(ep)
-                # 3. pod leader: cross-pod all-reduce over DCN
-                if spec.n_pods > 1 and c % spec.chips_per_pod == 0:
-                    other = (p + 1) % spec.n_pods
-                    yield Send(dcn_eps[p], f"pod{other}",
-                               step_cost.dcn_bytes)
-                    yield Recv(dcn_eps[p])
-                done_steps[c] = step + 1
-
-        t = VTask(f"chip{c}", body(),
-                  kind="live" if live_step_fn else "modeled")
-        t.join(scope)
-        return t
-
-    for c in range(spec.n_chips):
-        tasks.append(sched.spawn(chip_body(c)))
-
-    ctx = {"scope": scope, "hubs": pod_hubs + [dcn],
-           "done_steps": done_steps, "endpoints": endpoints}
-    return sched, tasks, ctx
+        n_hosts = math.ceil(spec.n_chips / chips_per_host)
+        # placement first (routed through co_locate on the ring-traffic
+        # matrix), then host links derived from where chips actually
+        # landed: hosts sharing a pod get an ICI-class interconnect,
+        # pod-disjoint hosts a DCN-class one.  Deriving from the real
+        # placement (not an assumed contiguous sharding) keeps the link
+        # classes consistent even when heavy cross-pod traffic makes
+        # co_locate merge leaders across pods.
+        placement = Orchestrator.co_locate(
+            [f"chip{c}" for c in range(spec.n_chips)], wl.traffic(),
+            n_hosts, chips_per_host)
+        host_pods = {}
+        for c in range(spec.n_chips):
+            host_pods.setdefault(placement[f"chip{c}"], set()).add(
+                c // spec.chips_per_pod)
+        topo = Topology(n_hosts=n_hosts,
+                        n_cpus=max(1, min(64, chips_per_host)))
+        ici = LinkSpec(bandwidth_bps=spec.ici_bw_Bps * 8,
+                       latency_ns=spec.ici_lat_ns)
+        dcn = LinkSpec(bandwidth_bps=spec.dcn_bw_Bps * 8,
+                       latency_ns=spec.dcn_lat_ns)
+        for a in range(n_hosts):
+            for b in range(a + 1, n_hosts):
+                shared_pod = (host_pods.get(a, set())
+                              & host_pods.get(b, set()))
+                topo.link(a, b, ici if shared_pod else dcn)
+        sim = Simulation(topo, wl, scenario, mode=mode,
+                         placement=placement)
+    sim.build()
+    engine = sim.scheduler if sim.scheduler is not None \
+        else sim.orchestrator
+    ctx = {"scope": sim.scopes[0] if len(sim.scopes) == 1
+           else sim.scopes,
+           "hubs": list(sim.hubs.values()),
+           "done_steps": wl.done_steps,
+           "endpoints": [sim.endpoints[f"chip{c}"]
+                         for c in range(spec.n_chips)],
+           "sim": sim}
+    return engine, sim.tasks, ctx
 
 
 def build_rack_cluster(
@@ -185,67 +197,33 @@ def build_rack_cluster(
     skew_bound_ns: int = 0,
     mode: str = "async",
 ):
-    """Heterogeneous-latency multi-host topology (paper §3.5): one worker
-    vtask per host, hosts grouped into racks.  Intra-rack pairs share a
-    fast link, rack-to-rack pairs a slow one — the regime where per-link
-    lookahead beats a global-min-latency barrier, because racks only need
-    to synchronize at the slow-link granularity while the barrier engine
-    paces *everyone* at the fast-link window.
+    """Heterogeneous-latency multi-host topology (paper §3.5), adapter
+    over `repro.sim`: a :class:`~repro.sim.workloads.RackRing` workload
+    on a :meth:`~repro.sim.topology.Topology.racks` topology, one worker
+    pinned per host.  ``rack_slowdown`` becomes per-worker Straggler
+    injections (imbalanced racks).
 
-    Per iteration each worker computes then exchanges ``msg_bytes`` with
-    its intra-rack ring neighbor; rack leaders additionally run a
-    cross-rack leader ring every ``cross_every`` iterations.
-    ``rack_slowdown`` scales per-rack compute (imbalanced racks), and a
-    ``skew_bound_ns`` > 0 adds one global scope over all workers
-    (exercising cross-host proxies + lazy sync).
-
-    Returns (orchestrator, tasks, ctx).
+    Returns (orchestrator, tasks, ctx); ``ctx["sim"]`` carries the
+    built Simulation.
     """
-    from repro.core.orchestrator import Orchestrator
+    from repro.sim import RackRing, Scenario, Simulation, Topology
 
-    n_hosts = n_racks * hosts_per_rack
-    orch = Orchestrator(n_hosts=n_hosts, n_cpus=4, mode=mode)
-    for a in range(n_hosts):
-        for b in range(a + 1, n_hosts):
-            same_rack = a // hosts_per_rack == b // hosts_per_rack
-            orch.connect_hosts(a, b,
-                               intra_link if same_rack else cross_link)
-    hubs = [orch.add_hub(h, Hub(f"hub{h}",
-                                LinkSpec(bandwidth_bps=80e9 * 8,
-                                         latency_ns=500)))
-            for h in range(n_hosts)]
-    eps = [hubs[h].attach(Endpoint(f"w{h}")) for h in range(n_hosts)]
-    xeps = {r: hubs[r * hosts_per_rack].attach(Endpoint(f"lead{r}"))
-            for r in range(n_racks)}
-    iters_done = np.zeros(n_hosts, dtype=np.int64)
-
-    def worker(h: int):
-        r = h // hosts_per_rack
-        slot = h % hosts_per_rack
-        right = r * hosts_per_rack + (slot + 1) % hosts_per_rack
-        mult = rack_slowdown[r] if r < len(rack_slowdown) else 1.0
-        is_leader = slot == 0
-        next_rack = (r + 1) % n_racks
-
-        def body():
-            for i in range(n_iters):
-                yield Compute(int(compute_ns * mult))
-                if hosts_per_rack > 1:
-                    yield Send(eps[h], f"w{right}", msg_bytes)
-                    yield Recv(eps[h])
-                if (is_leader and n_racks > 1
-                        and (i + 1) % cross_every == 0):
-                    yield Send(xeps[r], f"lead{next_rack}", msg_bytes)
-                    yield Recv(xeps[r])
-                iters_done[h] = i + 1
-
-        return orch.host(h).spawn(VTask(f"w{h}", body(), kind="modeled"))
-
-    tasks = [worker(h) for h in range(n_hosts)]
-    if skew_bound_ns > 0:
-        orch.global_scope("cluster", tasks, skew_bound_ns=skew_bound_ns)
-    ctx = {"hubs": hubs, "iters_done": iters_done, "endpoints": eps}
-    return orch, tasks, ctx
+    wl = RackRing(n_racks=n_racks, hosts_per_rack=hosts_per_rack,
+                  n_iters=n_iters, compute_ns=compute_ns,
+                  msg_bytes=msg_bytes, cross_every=cross_every,
+                  skew_bound_ns=skew_bound_ns)
+    topo = Topology.racks(n_racks, hosts_per_rack, intra_link,
+                          cross_link, n_cpus=4)
+    sim = Simulation(topo, wl,
+                     Scenario("rack", wl.stragglers(rack_slowdown)),
+                     mode=mode, placement=wl.default_placement())
+    sim.build()
+    ctx = {"hubs": list(sim.hubs.values()),
+           "iters_done": wl.iters_done,
+           "endpoints": [sim.endpoints[f"w{h}"]
+                         for h in range(wl.n_workers)],
+           "sim": sim}
+    return sim.orchestrator, sim.tasks, ctx
 
 
 def analytic_step_ns(spec: ClusterSpec, step_cost: StepCost) -> int:

@@ -51,6 +51,12 @@ Two conservative engines share all of the wiring above; pick one with
 Both engines are conservative, so they produce identical simulation
 results (final vtimes, message counts); they differ only in how many
 synchronization rounds (``stats["epochs"]``) and proxy syncs they need.
+
+Most callers should not wire an Orchestrator by hand: the `repro.sim`
+facade (:class:`repro.sim.Simulation`) builds hosts, hubs, links,
+scopes, and placement from a declarative Topology/Workload/Scenario
+description, picks the engine automatically, and returns a structured
+:class:`repro.sim.SimReport`.
 """
 from __future__ import annotations
 
@@ -193,7 +199,12 @@ class Orchestrator:
                   traffic: Dict[Tuple[str, str], float],
                   n_hosts: int, capacity: int) -> Dict[str, int]:
         """Greedy traffic-weighted placement: heaviest edges first, merge
-        into the same host while capacity permits."""
+        into the same host while capacity permits.
+
+        Self-edges are ignored, ``capacity < 2`` degenerates to
+        balanced singletons, components without traffic get their own
+        group, and more groups than hosts simply stack on the
+        least-loaded host."""
         placement: Dict[str, int] = {}
         groups: List[List[str]] = []
         edges = sorted(traffic.items(), key=lambda kv: -kv[1])
@@ -205,8 +216,12 @@ class Orchestrator:
             return None
 
         for (a, b), _w in edges:
+            if a == b:
+                continue
             ga, gb = group_of(a), group_of(b)
             if ga is None and gb is None:
+                if capacity < 2:
+                    continue        # singletons; placed by the tail loop
                 groups.append([a, b])
             elif ga is not None and gb is None and len(ga) < capacity:
                 ga.append(b)
@@ -352,7 +367,14 @@ class Orchestrator:
                     if start is not None and bound > start:
                         self.stats["max_window_ns"] = max(
                             self.stats["max_window_ns"], bound - start)
-                if sched.run_until(bound):
+                wakes_before = sched.stats.wakes
+                if (sched.run_until(bound)
+                        or sched.stats.wakes != wakes_before):
+                    # dispatches are progress; so is a wake that consumed
+                    # a pending visibility/event even when scope
+                    # forwarding pushed the woken vtask past this round's
+                    # window (no dispatch yet) — the next round's clock
+                    # bounds see the new vtime.
                     progressed = True
                     # freshen this host's clock bound so later hosts in
                     # the same round see the larger lookahead window.

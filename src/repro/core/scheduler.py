@@ -45,6 +45,7 @@ class SchedStats:
     max_skew_seen: int = 0
     window_runs: int = 0          # run_until invocations (orchestrator)
     gate_deferrals: int = 0       # wake-ups deferred past a strict bound
+    wakes: int = 0                # successful blocked->runnable wake-ups
 
 
 class DeadlockError(RuntimeError):
@@ -149,6 +150,7 @@ class Scheduler:
                 return False
             scope_mod.wake(task, at_vtime=vis)   # idle-until-interrupt
             task._wait_reason = None
+            self.stats.wakes += 1
             return True
         if kind == "event":
             if obj.set_at_vtime is None:
@@ -158,6 +160,7 @@ class Scheduler:
                 return False
             scope_mod.wake(task, at_vtime=obj.set_at_vtime)
             task._wait_reason = None
+            self.stats.wakes += 1
             return True
         return False
 

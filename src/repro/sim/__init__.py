@@ -1,0 +1,48 @@
+"""`repro.sim` — the declarative scenario API (single public facade).
+
+One import gives everything needed to compose and run a simulation:
+
+* :class:`Topology` — hosts, per-pair interconnect links, CPU budget.
+* :class:`Workload` — reusable vtask program factories (components +
+  endpoints + fabrics + traffic + scopes).  Ports of the repo's
+  workloads ship in :mod:`repro.sim.workloads`:
+  :class:`ChipRingTraining`, :class:`RackRing`, :class:`ModeledServe`.
+* :class:`Scenario` — declarative fault/interference injection:
+  :class:`Straggler`, :class:`FailTask`, :class:`FailHost`,
+  :class:`DegradeLink`, :class:`Interference`.
+* :class:`Simulation` — materializes the above into a single-host
+  :class:`~repro.core.scheduler.Scheduler` or a multi-host
+  :class:`~repro.core.orchestrator.Orchestrator` (picked automatically),
+  places components via ``Orchestrator.co_locate`` when
+  ``placement="auto"``, and returns a structured :class:`SimReport`.
+
+Quickstart::
+
+    from repro.core.cluster import ClusterSpec, StepCost
+    from repro.sim import (ChipRingTraining, Scenario, Simulation,
+                           Straggler, Topology)
+
+    wl = ChipRingTraining(ClusterSpec(n_pods=1, chips_per_pod=8),
+                          StepCost(compute_ns=5_000_000,
+                                   ici_bytes=1_000_000), n_steps=4)
+    report = Simulation(
+        Topology.single_host(n_cpus=8), wl,
+        Scenario("slow chip", (Straggler("chip3", 2.0),))).run()
+    print(report.to_json())
+"""
+from repro.sim.topology import FabricSpec, Topology
+from repro.sim.workload import (EndpointSpec, Program, ScopeSpec,
+                                Workload)
+from repro.sim.scenario import (DegradeLink, FailHost, FailTask,
+                                Injection, Interference, Scenario,
+                                Straggler)
+from repro.sim.report import HostReport, SimReport
+from repro.sim.simulation import Simulation
+from repro.sim.workloads import ChipRingTraining, ModeledServe, RackRing
+
+__all__ = [
+    "ChipRingTraining", "DegradeLink", "EndpointSpec", "FabricSpec",
+    "FailHost", "FailTask", "HostReport", "Injection", "Interference",
+    "ModeledServe", "Program", "RackRing", "Scenario", "ScopeSpec",
+    "SimReport", "Simulation", "Straggler", "Topology", "Workload",
+]

@@ -1,0 +1,83 @@
+"""Structured simulation results.
+
+:class:`SimReport` replaces the ad-hoc ``(sched, tasks, ctx)`` tuples of
+the hand-wired builders: one JSON-serializable record with per-host
+dispatch/sync statistics, proxy staleness, per-link visibility slack,
+per-task outcomes, and workload progress arrays.  ``status`` is
+``"ok"`` or ``"deadlock"`` — fault injections that wedge the cluster
+(e.g. a dead ring partner) are a *result*, not a crash.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class HostReport:
+    """Per-host scheduler statistics (see SchedStats)."""
+    host: int
+    dispatches: int
+    rounds: int
+    idle_jumps: int
+    skew_stalls: int
+    max_skew_seen: int
+    gate_deferrals: int
+    window_runs: int
+    preemptions: int
+    live_calls: int
+
+    @classmethod
+    def from_sched(cls, host: int, stats) -> "HostReport":
+        return cls(host=host, dispatches=stats.dispatches,
+                   rounds=stats.rounds, idle_jumps=stats.idle_jumps,
+                   skew_stalls=stats.skew_stalls,
+                   max_skew_seen=stats.max_skew_seen,
+                   gate_deferrals=stats.gate_deferrals,
+                   window_runs=stats.window_runs,
+                   preemptions=stats.preemptions,
+                   live_calls=stats.live_calls)
+
+
+def _jsonable(value: Any) -> Any:
+    if isinstance(value, np.ndarray):
+        return value.tolist()
+    if isinstance(value, (np.integer, np.floating)):
+        return value.item()
+    if isinstance(value, dict):
+        return {k: _jsonable(v) for k, v in value.items()}
+    if isinstance(value, (list, tuple)):
+        return [_jsonable(v) for v in value]
+    return value
+
+
+@dataclasses.dataclass
+class SimReport:
+    status: str                      # "ok" | "deadlock"
+    mode: str                        # "single" | "async" | "barrier"
+    n_hosts: int
+    vtime_ns: int                    # simulated horizon
+    wall_s: float
+    messages: int
+    bytes: int
+    sync_rounds: int                 # orchestrator epochs (0 single-host)
+    proxy_syncs: int
+    cross_host_msgs: int
+    max_proxy_staleness_ns: int
+    max_window_ns: int
+    hosts: List[HostReport]
+    links: Dict[str, Dict[str, Any]]     # "hub->peer" -> peer_stats
+    tasks: Dict[str, Dict[str, Any]]     # name -> {vtime, state, host}
+    progress: Dict[str, Any]             # workload -> named arrays
+    scenario: str = "baseline"
+    detail: str = ""                     # deadlock detail, if any
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        return _jsonable(d)
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)

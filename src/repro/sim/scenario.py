@@ -1,0 +1,144 @@
+"""Declarative fault/interference injection.
+
+A :class:`Scenario` is a named tuple of :class:`Injection`\\ s applied at
+build time by :class:`~repro.sim.simulation.Simulation` — workload
+bodies are never edited.  Mechanisms:
+
+* :class:`Straggler` / :class:`FailTask` / :class:`FailHost` wrap the
+  target program's generator: compute actions are scaled, or the body is
+  closed at a given compute index / virtual time (the vtask finishes
+  early, exactly like the legacy ``fail_at`` chip death — downstream
+  effects, including a wedged cluster, propagate through the engines
+  and surface as ``SimReport.status == "deadlock"``).
+* :class:`DegradeLink` installs a hub hook (the eBPF analogue) on the
+  sending side that adds latency to matching messages from a given
+  virtual time on.  Hooks may only *add* latency, so conservative
+  cross-host lookahead is preserved by construction.
+* :class:`Interference` spawns a co-located load program; with
+  ``Simulation(cpu_resource=True)`` its compute queues for the same
+  simulated CPUs as the victim's, coupling their timing in virtual
+  time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional, Tuple
+
+from repro.core.vtask import Compute, LiveCall
+
+
+class Injection:
+    """Marker base class for scenario injections."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Straggler(Injection):
+    """Scale the target program's modeled compute (and cost-derived live
+    calls) by ``slowdown``.  Measured (cost-less) live calls are
+    unaffected — their duration comes from the host clock.  Multiple
+    stragglers on the same task compound multiplicatively."""
+    task: str
+    slowdown: float = 2.0
+
+
+@dataclasses.dataclass(frozen=True)
+class FailTask(Injection):
+    """Kill one program: before its ``at_compute``-th compute action
+    (0-based — the legacy ``fail_at=(chip, step)`` semantics for bodies
+    with one compute per step), or at the first dispatch boundary once
+    its vtime reaches ``at_vtime``."""
+    task: str
+    at_compute: Optional[int] = None
+    at_vtime: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class FailHost(Injection):
+    """Kill every program placed on ``host`` once their vtime reaches
+    ``at_vtime`` (a machine dying mid-run)."""
+    host: int
+    at_vtime: int
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradeLink(Injection):
+    """Add latency to messages on a fabric or between a host pair.
+
+    ``latency_factor`` multiplies the base link latency (1.0 = none),
+    ``extra_ns`` adds a flat term, and only messages sent at
+    ``from_vtime`` or later are affected (mid-run degradation)."""
+    fabric: Optional[str] = None
+    hosts: Optional[Tuple[int, int]] = None
+    latency_factor: float = 1.0
+    extra_ns: int = 0
+    from_vtime: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Interference(Injection):
+    """Co-located load: ``bursts`` x ``burst_ns`` of modeled compute on
+    ``host`` (or wherever ``co_locate_with`` was placed).  Requires
+    ``Simulation(cpu_resource=True)`` to contend with the victim."""
+    host: Optional[int] = None
+    co_locate_with: Optional[str] = None
+    bursts: int = 100
+    burst_ns: int = 5_000
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str = "baseline"
+    injections: Tuple[Injection, ...] = ()
+
+
+# -- body wrappers (build-time machinery, used by Simulation) ----------------
+
+
+class TaskHandle:
+    """Late-bound reference to the wrapped program's VTask (the VTask is
+    created *around* the wrapped generator, so wrappers that need its
+    vtime get it via this mutable cell)."""
+    __slots__ = ("task",)
+
+    def __init__(self):
+        self.task = None
+
+
+def scaled_body(body: Iterator, factor: float) -> Iterator:
+    """Forward the action stream, scaling Compute ns and cost-derived
+    LiveCall cost_ns by ``factor``."""
+    result = None
+    while True:
+        try:
+            action = body.send(result)
+        except StopIteration:
+            return
+        if isinstance(action, Compute):
+            action = dataclasses.replace(action, ns=int(action.ns * factor))
+        elif isinstance(action, LiveCall) and action.cost_ns is not None:
+            action = dataclasses.replace(
+                action, cost_ns=int(action.cost_ns * factor))
+        result = yield action
+
+
+def fail_gated_body(body: Iterator, handle: TaskHandle,
+                    at_compute: Optional[int],
+                    at_vtime: Optional[int]) -> Iterator:
+    """Forward the action stream until the failure point, then return
+    (the vtask completes early — it died)."""
+    computes = 0
+    result = None
+    while True:
+        try:
+            action = body.send(result)
+        except StopIteration:
+            return
+        if (at_vtime is not None and handle.task is not None
+                and handle.task.vtime >= at_vtime):
+            return
+        if at_compute is not None and isinstance(action,
+                                                 (Compute, LiveCall)):
+            if computes >= at_compute:
+                return
+            computes += 1
+        result = yield action

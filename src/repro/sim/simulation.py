@@ -1,0 +1,413 @@
+"""Simulation: materialize (Topology, Workloads, Scenario) and run.
+
+Single entry point of the facade.  ``build()`` turns the declarative
+pieces into the concrete substrate — Scheduler or Orchestrator, hubs,
+endpoints, scopes, injection wrappers — in a deterministic order, so a
+facade-built simulation is bit-identical to careful hand-wiring (see
+``tests/test_sim_equivalence.py``).  ``run()`` executes it and returns
+a :class:`~repro.sim.report.SimReport`.
+
+Engine selection: ``mode="auto"`` runs single-host topologies on a
+plain :class:`~repro.core.scheduler.Scheduler` and multi-host ones on
+the async :class:`~repro.core.orchestrator.Orchestrator`; ``"single"``,
+``"async"``, and ``"barrier"`` force an engine (the orchestrator modes
+work for ``n_hosts == 1`` too, which the legacy rack adapter relies
+on).
+
+Placement: ``placement="auto"`` routes component->host assignment
+through ``Orchestrator.co_locate`` on the merged workload traffic
+matrix; a dict pins components explicitly; ``"round_robin"`` spreads
+them.
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.core.ipc import Endpoint, Hub, Message
+from repro.core.orchestrator import Orchestrator
+from repro.core.scheduler import DeadlockError, Scheduler
+from repro.core.scope import Scope
+from repro.core.vtask import Compute, State, VTask
+from repro.sim.report import HostReport, SimReport, _jsonable
+from repro.sim.scenario import (DegradeLink, FailHost, FailTask,
+                                Interference, Scenario, Straggler,
+                                TaskHandle, fail_gated_body, scaled_body)
+from repro.sim.topology import FabricSpec, Topology
+from repro.sim.workload import Program, Workload
+
+PlacementSpec = Union[str, Dict[str, int]]
+
+
+def _load_body(bursts: int, burst_ns: int):
+    for _ in range(bursts):
+        yield Compute(burst_ns)
+
+
+class Simulation:
+    def __init__(self, topology: Topology,
+                 workloads: Union[Workload, Sequence[Workload]],
+                 scenario: Optional[Scenario] = None, *,
+                 placement: PlacementSpec = "auto",
+                 mode: str = "auto",
+                 capacity: Optional[int] = None,
+                 cpu_resource: bool = False):
+        self.topology = topology
+        self.workloads: List[Workload] = (
+            [workloads] if isinstance(workloads, Workload)
+            else list(workloads))
+        self.scenario = scenario or Scenario()
+        self.placement_spec = placement
+        self.capacity = capacity
+        self.cpu_resource = cpu_resource
+        if mode == "auto":
+            mode = "single" if topology.n_hosts == 1 else "async"
+        if mode not in ("single", "async", "barrier"):
+            raise ValueError(f"unknown mode {mode!r}")
+        if mode == "single" and topology.n_hosts > 1:
+            raise ValueError("mode='single' needs a 1-host topology")
+        self.mode = mode
+        # populated by build()
+        self.scheduler: Optional[Scheduler] = None
+        self.orchestrator: Optional[Orchestrator] = None
+        self.hubs: Dict[str, Hub] = {}          # fabric- or host-keyed
+        self.endpoints: Dict[str, Endpoint] = {}
+        self.tasks: List[VTask] = []            # workload programs, in order
+        self.task_by_name: Dict[str, VTask] = {}
+        self.scopes: List[Scope] = []
+        self.placement: Dict[str, int] = {}
+        self._built = False
+
+    # -- introspection helpers ----------------------------------------------
+    def _programs(self) -> List[Tuple[Workload, Program]]:
+        out = []
+        seen = set()
+        for wl in self.workloads:
+            for prog in wl.programs():
+                if prog.name in seen:
+                    raise ValueError(f"duplicate program {prog.name!r}")
+                seen.add(prog.name)
+                out.append((wl, prog))
+        return out
+
+    def _fabrics(self) -> List[FabricSpec]:
+        out: List[FabricSpec] = []
+        by_name: Dict[str, FabricSpec] = {}
+        for wl in self.workloads:
+            for fab in wl.fabrics():
+                prev = by_name.get(fab.name)
+                if prev is None:
+                    by_name[fab.name] = fab
+                    out.append(fab)
+                elif prev.link != fab.link:
+                    raise ValueError(
+                        f"fabric {fab.name!r} declared with two links")
+        return out
+
+    def _merged_traffic(self) -> Dict[Tuple[str, str], float]:
+        traffic: Dict[Tuple[str, str], float] = {}
+        for wl in self.workloads:
+            for pair, w in wl.traffic().items():
+                traffic[pair] = traffic.get(pair, 0.0) + w
+        return traffic
+
+    def _resolve_placement(self, names: List[str]) -> Dict[str, int]:
+        n_hosts = self.topology.n_hosts
+        spec = self.placement_spec
+        if n_hosts == 1 and not isinstance(spec, dict):
+            return {n: 0 for n in names}
+        if isinstance(spec, dict):
+            missing = [n for n in names if n not in spec]
+            if missing:
+                raise ValueError(f"placement missing {missing}")
+            bad = [n for n in names
+                   if not 0 <= spec[n] < n_hosts]
+            if bad:
+                raise ValueError(f"placement out of range for {bad}")
+            return {n: spec[n] for n in names}
+        if spec == "round_robin":
+            return {n: i % n_hosts for i, n in enumerate(names)}
+        if spec == "auto":
+            capacity = self.capacity or max(
+                1, math.ceil(len(names) / n_hosts))
+            return Orchestrator.co_locate(
+                names, self._merged_traffic(), n_hosts, capacity)
+        raise ValueError(f"unknown placement {spec!r}")
+
+    # -- build ---------------------------------------------------------------
+    def build(self) -> "Simulation":
+        if self._built:
+            return self
+        topo = self.topology
+        programs = self._programs()
+        fabrics = self._fabrics()
+        names = [p.name for _, p in programs]
+        self.placement = self._resolve_placement(names)
+
+        # engine + hubs
+        single = self.mode == "single"
+        fabric_eps: Dict[str, List[str]] = {f.name: [] for f in fabrics}
+        if single:
+            self.scheduler = Scheduler(n_cpus=topo.n_cpus)
+            for fab in fabrics:
+                self.hubs[fab.name] = Hub(fab.name, fab.link)
+
+            def hub_for(fabric: str, host: int) -> Hub:
+                return self.hubs[fabric]
+        else:
+            self.orchestrator = Orchestrator(
+                n_hosts=topo.n_hosts, n_cpus=topo.n_cpus,
+                dcn_link=topo.default_host_link, mode=self.mode)
+            for (a, b), link in topo.host_links.items():
+                self.orchestrator.connect_hosts(a, b, link)
+            host_hubs: Dict[int, Hub] = {}
+            if fabrics:
+                host_fab = fabrics[0]
+                for h in range(topo.n_hosts):
+                    hub = Hub(f"{host_fab.name}{h}", host_fab.link)
+                    host_hubs[h] = self.orchestrator.add_hub(h, hub)
+                    self.hubs[hub.name] = hub
+
+            def hub_for(fabric: str, host: int) -> Hub:
+                if fabric not in fabric_eps:
+                    raise KeyError(f"unknown fabric {fabric!r}")
+                return host_hubs[host]
+
+        # scenario: per-task wrappers
+        scale: Dict[str, float] = {}
+        fails: Dict[str, FailTask] = {}
+        for inj in self.scenario.injections:
+            if isinstance(inj, Straggler):
+                scale[inj.task] = scale.get(inj.task, 1.0) * inj.slowdown
+            elif isinstance(inj, FailTask):
+                if inj.task in fails:
+                    raise ValueError(f"two failures for {inj.task!r}")
+                fails[inj.task] = inj
+            elif isinstance(inj, FailHost):
+                if not 0 <= inj.host < topo.n_hosts:
+                    raise ValueError(
+                        f"FailHost host {inj.host} outside "
+                        f"0..{topo.n_hosts - 1}")
+                for n, h in self.placement.items():
+                    if h == inj.host and n not in fails:
+                        fails[n] = FailTask(n, at_vtime=inj.at_vtime)
+        unknown = [(t, "Straggler") for t in scale if t not in names] + \
+                  [(t, "FailTask") for t in fails if t not in names]
+        if unknown:
+            raise ValueError(f"injections target unknown programs: "
+                             f"{unknown}")
+
+        # spawn, in declaration order (determinism: vtask ids, scope and
+        # task-list order all follow this loop)
+        ep_host: Dict[str, int] = {}
+        for wl, prog in programs:
+            host = self.placement[prog.name]
+            eps: Dict[str, Endpoint] = {}
+            for es in prog.endpoints:
+                if es.name in self.endpoints:
+                    raise ValueError(f"duplicate endpoint {es.name!r}")
+                ep = hub_for(es.fabric, host).attach(Endpoint(es.name))
+                eps[es.name] = ep
+                self.endpoints[es.name] = ep
+                ep_host[es.name] = host
+                fabric_eps[es.fabric].append(es.name)
+            body = prog.make_body(eps)
+            if prog.name in scale:
+                body = scaled_body(body, scale[prog.name])
+            handle = None
+            if prog.name in fails:
+                f = fails[prog.name]
+                handle = TaskHandle()
+                body = fail_gated_body(body, handle, f.at_compute,
+                                       f.at_vtime)
+            task = VTask(prog.name, body, kind=prog.kind, cell=prog.cell)
+            if handle is not None:
+                handle.task = task
+            self._sched_for(host).spawn(task)
+            self.tasks.append(task)
+            self.task_by_name[prog.name] = task
+
+        # non-host fabrics on shared host hubs: per-endpoint-pair link
+        # overrides (skipped when the link equals the host fabric's —
+        # indistinguishable)
+        if not single and fabrics:
+            host_link = fabrics[0].link
+            for fab in fabrics[1:]:
+                if fab.link == host_link:
+                    continue
+                members = fabric_eps[fab.name]
+                for i, a in enumerate(members):
+                    for b in members[i + 1:]:
+                        for h in {ep_host[a], ep_host[b]}:
+                            host_hubs[h].connect(a, b, fab.link)
+
+        # scopes
+        names_by_wl: Dict[int, List[str]] = {}
+        for wl, prog in programs:
+            names_by_wl.setdefault(id(wl), []).append(prog.name)
+        for wl in self.workloads:
+            wl_names = names_by_wl.get(id(wl), [])
+            for ss in wl.scopes():
+                members = [self.task_by_name[m]
+                           for m in (ss.members or tuple(wl_names))]
+                if single:
+                    s = Scope(ss.name, ss.skew_bound_ns)
+                    for t in members:
+                        t.join(s)
+                    self.scopes.append(s)
+                else:
+                    self.scopes.extend(self.orchestrator.global_scope(
+                        ss.name, members, skew_bound_ns=ss.skew_bound_ns))
+
+        # link degradation hooks + interference load
+        n_loads = 0
+        for inj in self.scenario.injections:
+            if isinstance(inj, DegradeLink):
+                self._install_degrade(inj, fabrics, fabric_eps, ep_host)
+            elif isinstance(inj, Interference):
+                host = inj.host
+                if host is not None and not 0 <= host < topo.n_hosts:
+                    raise ValueError(
+                        f"Interference host {host} outside "
+                        f"0..{topo.n_hosts - 1}")
+                if host is None:
+                    if inj.co_locate_with is None:
+                        raise ValueError(
+                            "Interference needs host or co_locate_with")
+                    if inj.co_locate_with not in self.placement:
+                        raise ValueError(
+                            f"Interference co_locate_with targets "
+                            f"unknown program {inj.co_locate_with!r}")
+                    host = self.placement[inj.co_locate_with]
+                load = VTask(f"load{n_loads}",
+                             _load_body(inj.bursts, inj.burst_ns),
+                             kind="modeled")
+                self._sched_for(host).spawn(load)
+                n_loads += 1
+
+        if self.cpu_resource:
+            for sched in self._scheds():
+                sched.cpu_resource = True
+
+        self._built = True
+        return self
+
+    def _scheds(self) -> List[Scheduler]:
+        if self.scheduler is not None:
+            return [self.scheduler]
+        return [self.orchestrator.hosts[h]
+                for h in sorted(self.orchestrator.hosts)]
+
+    def _sched_for(self, host: int) -> Scheduler:
+        if self.scheduler is not None:
+            return self.scheduler
+        return self.orchestrator.host(host)
+
+    def _install_degrade(self, inj: DegradeLink,
+                         fabrics: List[FabricSpec],
+                         fabric_eps: Dict[str, List[str]],
+                         ep_host: Dict[str, int]) -> None:
+        if (inj.fabric is None) == (inj.hosts is None):
+            raise ValueError("DegradeLink needs exactly one of "
+                             "fabric= or hosts=")
+        if inj.fabric is not None:
+            fab = next((f for f in fabrics if f.name == inj.fabric), None)
+            if fab is None:
+                raise ValueError(f"unknown fabric {inj.fabric!r}")
+            members = set(fabric_eps[inj.fabric])
+            extra = inj.extra_ns + int(
+                (inj.latency_factor - 1.0) * fab.link.latency_ns)
+
+            def match(msg: Message) -> bool:
+                return msg.src in members and msg.dst in members
+        else:
+            a, b = inj.hosts
+            pair_link = self.topology.host_links.get(
+                (min(a, b), max(a, b)), self.topology.default_host_link)
+            extra = inj.extra_ns + int(
+                (inj.latency_factor - 1.0) * pair_link.latency_ns)
+
+            def match(msg: Message) -> bool:
+                return {ep_host.get(msg.src), ep_host.get(msg.dst)} \
+                    == {a, b}
+        if extra < 0:
+            raise ValueError("DegradeLink may only add latency "
+                             "(conservative lookahead)")
+
+        for hub in self.hubs.values():
+            def hook(msg, _state, hub=hub):
+                # sender-side only: a forwarded cross-host message runs
+                # the destination hub's hooks too — charge it once
+                if msg.src not in hub.endpoints:
+                    return 0
+                if msg.send_vtime < inj.from_vtime or not match(msg):
+                    return 0
+                return extra
+            hub.add_hook(hook)
+
+    # -- run -----------------------------------------------------------------
+    def run(self, *, on_deadlock: str = "report",
+            max_rounds: Optional[int] = None) -> SimReport:
+        """Execute and return a SimReport.  ``max_rounds`` bounds the
+        engine's dispatch rounds / sync epochs; None keeps each
+        engine's own (generous) default."""
+        if on_deadlock not in ("report", "raise"):
+            raise ValueError(f"on_deadlock must be 'report' or 'raise', "
+                             f"got {on_deadlock!r}")
+        if not self._built:
+            self.build()
+        status, detail = "ok", ""
+        t0 = time.perf_counter()
+        try:
+            if self.scheduler is not None:
+                if max_rounds is None:
+                    self.scheduler.run()
+                else:
+                    self.scheduler.run(max_rounds=max_rounds)
+            elif max_rounds is None:
+                self.orchestrator.run()
+            else:
+                self.orchestrator.run(max_epochs=max_rounds)
+        except DeadlockError as e:
+            if on_deadlock == "raise":
+                raise
+            status, detail = "deadlock", str(e)
+        wall = time.perf_counter() - t0
+        return self._report(status, detail, wall)
+
+    def _report(self, status: str, detail: str, wall: float) -> SimReport:
+        msgs = sum(h.stats["messages"] for h in self.hubs.values())
+        byts = sum(h.stats["bytes"] for h in self.hubs.values())
+        links = {f"{hub.name}->{peer}": dict(st)
+                 for hub in self.hubs.values()
+                 for peer, st in hub.peer_stats.items()}
+        hosts = [HostReport.from_sched(s.host, s.stats)
+                 for s in self._scheds()]
+        if self.orchestrator is not None:
+            ost = self.orchestrator.stats
+            vtime = self.orchestrator.horizon()
+            sync_rounds = ost["epochs"]
+            proxy_syncs = ost["proxy_syncs"]
+            cross = sum(st["messages"] for hub in self.hubs.values()
+                        for st in hub.peer_stats.values())
+            staleness = ost["max_proxy_staleness_ns"]
+            window = ost["max_window_ns"]
+        else:
+            vtime = self.scheduler.horizon()
+            sync_rounds = proxy_syncs = cross = staleness = window = 0
+        return SimReport(
+            status=status, mode=self.mode, n_hosts=self.topology.n_hosts,
+            vtime_ns=vtime, wall_s=wall, messages=msgs, bytes=byts,
+            sync_rounds=sync_rounds, proxy_syncs=proxy_syncs,
+            cross_host_msgs=cross, max_proxy_staleness_ns=staleness,
+            max_window_ns=window, hosts=hosts, links=links,
+            tasks={t.name: {"vtime": t.vtime, "state": t.state.value,
+                            "host": t.host} for t in self.tasks},
+            progress={wl.name: _jsonable(wl.progress())
+                      for wl in self.workloads},
+            scenario=self.scenario.name, detail=detail)
+
+    # -- conveniences --------------------------------------------------------
+    def done(self) -> bool:
+        return all(t.state == State.DONE for t in self.tasks)

@@ -1,0 +1,87 @@
+"""Declarative cluster topology for `repro.sim`.
+
+A :class:`Topology` names the *machines*: how many hosts run the
+simulation, how many simulated CPUs each host's scheduler gets, and the
+interconnect :class:`~repro.core.ipc.LinkSpec` of every host pair.  The
+logical message *fabrics* (ICI rings, DCN, service networks) belong to
+the workloads (see :class:`repro.sim.workload.Workload.fabrics`); the
+topology only says what hardware they are mapped onto.
+
+Host-pair links double as the conservative synchronization lookahead of
+the async orchestration engine — see ``Orchestrator.connect_hosts``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+from repro.core.ipc import LinkSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricSpec:
+    """A named message fabric a workload communicates over.
+
+    Single-host simulations materialize each fabric as its own
+    :class:`~repro.core.ipc.Hub`.  Multi-host simulations give every
+    host one hub (default link = the first declared fabric) and express
+    the remaining fabrics as per-endpoint-pair link overrides on it.
+    """
+    name: str
+    link: LinkSpec
+
+
+class Topology:
+    """Hosts + host-interconnect links + per-host CPU budget."""
+
+    def __init__(self, n_hosts: int = 1, n_cpus: int = 8,
+                 default_host_link: LinkSpec = LinkSpec(
+                     bandwidth_bps=25e9 * 8, latency_ns=10_000)):
+        if n_hosts < 1:
+            raise ValueError("n_hosts must be >= 1")
+        self.n_hosts = n_hosts
+        self.n_cpus = n_cpus
+        self.default_host_link = default_host_link
+        # insertion order is preserved and becomes the connect order
+        self.host_links: Dict[Tuple[int, int], LinkSpec] = {}
+
+    def link(self, a: int, b: int, spec: LinkSpec) -> "Topology":
+        """Declare the interconnect between hosts ``a`` and ``b``."""
+        if not (0 <= a < self.n_hosts and 0 <= b < self.n_hosts):
+            raise ValueError(f"link({a}, {b}) outside 0..{self.n_hosts-1}")
+        if a == b:
+            raise ValueError("a host needs no link to itself")
+        self.host_links[(min(a, b), max(a, b))] = spec
+        return self
+
+    # -- canned shapes -------------------------------------------------------
+    @classmethod
+    def single_host(cls, n_cpus: int = 8) -> "Topology":
+        return cls(n_hosts=1, n_cpus=n_cpus)
+
+    @classmethod
+    def full_mesh(cls, n_hosts: int, link: LinkSpec,
+                  n_cpus: int = 8) -> "Topology":
+        topo = cls(n_hosts=n_hosts, n_cpus=n_cpus)
+        for a in range(n_hosts):
+            for b in range(a + 1, n_hosts):
+                topo.link(a, b, link)
+        return topo
+
+    @classmethod
+    def racks(cls, n_racks: int, hosts_per_rack: int,
+              intra_link: LinkSpec = LinkSpec(bandwidth_bps=80e9 * 8,
+                                              latency_ns=2_000),
+              cross_link: LinkSpec = LinkSpec(bandwidth_bps=25e9 * 8,
+                                              latency_ns=50_000),
+              n_cpus: int = 4) -> "Topology":
+        """Hosts grouped into racks: fast intra-rack links, slow
+        cross-rack links — the heterogeneous-latency regime where the
+        per-link-lookahead async engine beats the global barrier."""
+        n_hosts = n_racks * hosts_per_rack
+        topo = cls(n_hosts=n_hosts, n_cpus=n_cpus)
+        for a in range(n_hosts):
+            for b in range(a + 1, n_hosts):
+                same = a // hosts_per_rack == b // hosts_per_rack
+                topo.link(a, b, intra_link if same else cross_link)
+        return topo

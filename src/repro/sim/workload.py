@@ -1,0 +1,80 @@
+"""The Workload protocol: reusable vtask program factories.
+
+A workload declares *what runs*, independent of where it runs and what
+faults are injected:
+
+* :meth:`Workload.fabrics` — the logical message fabrics it needs.
+* :meth:`Workload.programs` — one :class:`Program` per vtask: a body
+  factory plus the endpoints it owns (name + fabric).
+* :meth:`Workload.traffic` — program-pair traffic weights, consumed by
+  declarative placement (``Orchestrator.co_locate``).
+* :meth:`Workload.scopes` — bounded-skew synchronization scopes.
+* :meth:`Workload.progress` — named progress arrays surfaced in the
+  :class:`~repro.sim.report.SimReport` (and the observable blast radius
+  of fault injections).
+
+Bodies never reference hosts, hubs, or schedulers — the
+:class:`~repro.sim.simulation.Simulation` wires those, so the same
+workload runs single-host, sharded across an orchestrated cluster, or
+under any :class:`~repro.sim.scenario.Scenario` without modification.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
+
+from repro.core.ipc import Endpoint
+from repro.sim.topology import FabricSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class EndpointSpec:
+    """An endpoint a program owns: attach ``name`` to fabric ``fabric``."""
+    name: str
+    fabric: str
+
+
+#: A body factory: receives the program's own endpoints (name -> Endpoint)
+#: and returns the vtask generator.
+BodyFactory = Callable[[Dict[str, Endpoint]], Iterator]
+
+
+@dataclasses.dataclass
+class Program:
+    """One vtask, declaratively: name, body factory, owned endpoints."""
+    name: str
+    make_body: BodyFactory
+    endpoints: Tuple[EndpointSpec, ...] = ()
+    kind: str = "modeled"            # "modeled" | "live"
+    cell: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ScopeSpec:
+    """A bounded-skew scope over ``members`` (None = every program of the
+    declaring workload).  Spanning hosts it becomes a global scope with
+    proxy vtasks; on one host, a plain :class:`~repro.core.scope.Scope`."""
+    name: str
+    skew_bound_ns: int
+    members: Optional[Tuple[str, ...]] = None
+
+
+class Workload:
+    """Base class; subclasses override :meth:`programs` at minimum."""
+
+    name: str = "workload"
+
+    def fabrics(self) -> List[FabricSpec]:
+        return []
+
+    def programs(self) -> List[Program]:
+        raise NotImplementedError
+
+    def traffic(self) -> Dict[Tuple[str, str], float]:
+        return {}
+
+    def scopes(self) -> List[ScopeSpec]:
+        return []
+
+    def progress(self) -> Dict[str, Any]:
+        return {}

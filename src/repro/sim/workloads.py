@@ -1,0 +1,306 @@
+"""Workload ports: chip-ring training, rack-ring, and modeled serving.
+
+These are the repo's hand-wired simulations re-expressed against the
+:class:`~repro.sim.workload.Workload` protocol.  Bodies are kept
+action-for-action identical to the legacy builders so the thin adapters
+in :mod:`repro.core.cluster` produce bit-identical results (verified by
+``tests/test_sim_equivalence.py``); stragglers/failures moved out of the
+bodies and into :class:`~repro.sim.scenario.Scenario` injections.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.cluster import ClusterSpec, StepCost
+from repro.core.ipc import LinkSpec
+from repro.core.vtask import Compute, LiveCall, Recv, Send
+from repro.sim.topology import FabricSpec
+from repro.sim.workload import (EndpointSpec, Program, ScopeSpec,
+                                Workload)
+
+
+class ChipRingTraining(Workload):
+    """Data-parallel training: one vtask per chip.
+
+    Per step each chip computes (cost-derived or live), exchanges its
+    per-step collective bytes with its pod-ring neighbor over the pod
+    ICI fabric, and pod leaders all-reduce over the DCN fabric.  Chips
+    are oblivious to placement: single-host they share one scheduler;
+    with ``chips_per_host`` sharding (see ``build_training_cluster``)
+    the same bodies run across orchestrated hosts and ring edges that
+    cross hosts ride the host interconnect.
+    """
+
+    name = "train"
+
+    def __init__(self, spec: ClusterSpec, step_cost: StepCost,
+                 n_steps: int, *, skew_bound_ns: int = 1_000_000,
+                 live_step_fn: Optional[Callable] = None):
+        self.spec = spec
+        self.step_cost = step_cost
+        self.n_steps = n_steps
+        self.skew_bound_ns = skew_bound_ns
+        self.live_step_fn = live_step_fn
+        self.done_steps = np.zeros(spec.n_chips, dtype=np.int64)
+
+    def fabrics(self) -> List[FabricSpec]:
+        spec = self.spec
+        ici = LinkSpec(bandwidth_bps=spec.ici_bw_Bps * 8,
+                       latency_ns=spec.ici_lat_ns)
+        dcn = LinkSpec(bandwidth_bps=spec.dcn_bw_Bps * 8,
+                       latency_ns=spec.dcn_lat_ns)
+        return [FabricSpec(f"ici{p}", ici) for p in range(spec.n_pods)] \
+            + [FabricSpec("dcn", dcn)]
+
+    def _chip_body(self, c: int):
+        spec, cost = self.spec, self.step_cost
+        p = c // spec.chips_per_pod
+        right = p * spec.chips_per_pod + (c + 1) % spec.chips_per_pod
+        leader = spec.n_pods > 1 and c % spec.chips_per_pod == 0
+        other = (p + 1) % spec.n_pods
+        live_fn = self.live_step_fn
+
+        def make_body(eps):
+            ep = eps[f"chip{c}"]
+            dep = eps.get(f"pod{p}")
+
+            def body():
+                for step in range(self.n_steps):
+                    if live_fn is not None:
+                        yield LiveCall(live_fn, cost_ns=cost.compute_ns)
+                    else:
+                        yield Compute(cost.compute_ns)
+                    yield Send(ep, f"chip{right}", cost.ici_bytes)
+                    yield Recv(ep)
+                    if leader:
+                        yield Send(dep, f"pod{other}", cost.dcn_bytes)
+                        yield Recv(dep)
+                    self.done_steps[c] = step + 1
+            return body()
+        return make_body
+
+    def programs(self) -> List[Program]:
+        spec = self.spec
+        out = []
+        for c in range(spec.n_chips):
+            p = c // spec.chips_per_pod
+            eps: Tuple[EndpointSpec, ...] = (
+                EndpointSpec(f"chip{c}", f"ici{p}"),)
+            if c % spec.chips_per_pod == 0:
+                eps += (EndpointSpec(f"pod{p}", "dcn"),)
+            out.append(Program(
+                name=f"chip{c}", make_body=self._chip_body(c),
+                endpoints=eps,
+                kind="live" if self.live_step_fn else "modeled"))
+        return out
+
+    def traffic(self) -> Dict[Tuple[str, str], float]:
+        spec, cost = self.spec, self.step_cost
+        t: Dict[Tuple[str, str], float] = {}
+        for c in range(spec.n_chips):
+            p = c // spec.chips_per_pod
+            right = p * spec.chips_per_pod + (c + 1) % spec.chips_per_pod
+            t[(f"chip{c}", f"chip{right}")] = float(max(cost.ici_bytes, 1))
+        if spec.n_pods > 1:
+            for p in range(spec.n_pods):
+                a = p * spec.chips_per_pod
+                b = ((p + 1) % spec.n_pods) * spec.chips_per_pod
+                t[(f"chip{a}", f"chip{b}")] = float(
+                    max(cost.dcn_bytes, 1))
+        return t
+
+    def scopes(self) -> List[ScopeSpec]:
+        return [ScopeSpec("train", self.skew_bound_ns)]
+
+    def progress(self) -> Dict[str, np.ndarray]:
+        return {"done_steps": self.done_steps}
+
+
+class RackRing(Workload):
+    """Heterogeneous-latency multi-host ring (paper §3.5): one worker
+    per host, hosts grouped into racks; intra-rack ring every iteration,
+    cross-rack leader ring every ``cross_every`` iterations.  Natural
+    placement is one worker per host (``build_rack_cluster`` pins it);
+    rack compute imbalance is a Scenario concern (Straggler injections).
+    """
+
+    name = "rack"
+
+    def __init__(self, *, n_racks: int = 2, hosts_per_rack: int = 2,
+                 n_iters: int = 200, compute_ns: int = 5_000,
+                 msg_bytes: int = 4096, cross_every: int = 20,
+                 skew_bound_ns: int = 0,
+                 local_link: LinkSpec = LinkSpec(bandwidth_bps=80e9 * 8,
+                                                 latency_ns=500)):
+        self.n_racks = n_racks
+        self.hosts_per_rack = hosts_per_rack
+        self.n_workers = n_racks * hosts_per_rack
+        self.n_iters = n_iters
+        self.compute_ns = compute_ns
+        self.msg_bytes = msg_bytes
+        self.cross_every = cross_every
+        self.skew_bound_ns = skew_bound_ns
+        self.local_link = local_link
+        self.iters_done = np.zeros(self.n_workers, dtype=np.int64)
+
+    def fabrics(self) -> List[FabricSpec]:
+        return [FabricSpec("hub", self.local_link)]
+
+    def _worker_body(self, h: int):
+        r = h // self.hosts_per_rack
+        slot = h % self.hosts_per_rack
+        right = r * self.hosts_per_rack + (slot + 1) % self.hosts_per_rack
+        is_leader = slot == 0
+        next_rack = (r + 1) % self.n_racks
+
+        def make_body(eps):
+            ep = eps[f"w{h}"]
+            xep = eps.get(f"lead{r}")
+
+            def body():
+                for i in range(self.n_iters):
+                    yield Compute(self.compute_ns)
+                    if self.hosts_per_rack > 1:
+                        yield Send(ep, f"w{right}", self.msg_bytes)
+                        yield Recv(ep)
+                    if (is_leader and self.n_racks > 1
+                            and (i + 1) % self.cross_every == 0):
+                        yield Send(xep, f"lead{next_rack}",
+                                   self.msg_bytes)
+                        yield Recv(xep)
+                    self.iters_done[h] = i + 1
+            return body()
+        return make_body
+
+    def programs(self) -> List[Program]:
+        out = []
+        for h in range(self.n_workers):
+            r = h // self.hosts_per_rack
+            eps: Tuple[EndpointSpec, ...] = (EndpointSpec(f"w{h}", "hub"),)
+            if h % self.hosts_per_rack == 0:
+                eps += (EndpointSpec(f"lead{r}", "hub"),)
+            out.append(Program(name=f"w{h}",
+                               make_body=self._worker_body(h),
+                               endpoints=eps, kind="modeled"))
+        return out
+
+    def default_placement(self) -> Dict[str, int]:
+        return {f"w{h}": h for h in range(self.n_workers)}
+
+    def stragglers(self, rack_slowdown: Tuple[float, ...]):
+        """Per-rack compute multipliers -> per-worker Straggler
+        injections (racks beyond the tuple, and 1.0 entries, are
+        untouched).  The single source of the mapping used by the
+        legacy adapter, benchmarks, and examples."""
+        from repro.sim.scenario import Straggler
+        out = []
+        for h in range(self.n_workers):
+            r = h // self.hosts_per_rack
+            if r < len(rack_slowdown) and rack_slowdown[r] != 1.0:
+                out.append(Straggler(f"w{h}", rack_slowdown[r]))
+        return tuple(out)
+
+    def traffic(self) -> Dict[Tuple[str, str], float]:
+        t: Dict[Tuple[str, str], float] = {}
+        per_iter = float(self.msg_bytes) * self.n_iters
+        for h in range(self.n_workers):
+            r = h // self.hosts_per_rack
+            slot = h % self.hosts_per_rack
+            if self.hosts_per_rack > 1:
+                right = r * self.hosts_per_rack \
+                    + (slot + 1) % self.hosts_per_rack
+                t[(f"w{h}", f"w{right}")] = per_iter
+        if self.n_racks > 1:
+            for r in range(self.n_racks):
+                a = r * self.hosts_per_rack
+                b = ((r + 1) % self.n_racks) * self.hosts_per_rack
+                t[(f"w{a}", f"w{b}")] = per_iter / self.cross_every
+        return t
+
+    def scopes(self) -> List[ScopeSpec]:
+        if self.skew_bound_ns > 0:
+            return [ScopeSpec("cluster", self.skew_bound_ns)]
+        return []
+
+    def progress(self) -> Dict[str, np.ndarray]:
+        return {"iters_done": self.iters_done}
+
+
+class ModeledServe(Workload):
+    """Closed-loop request serving: ``n_clients`` clients think, send a
+    request, and wait for the response; one server computes per-request
+    service time.  Co-locate with a training workload (single host +
+    ``cpu_resource=True``) to study interference coupling."""
+
+    name = "serve"
+
+    def __init__(self, *, n_clients: int = 2, n_requests: int = 50,
+                 think_ns: int = 20_000, service_ns: int = 50_000,
+                 req_bytes: int = 1024, resp_bytes: int = 256,
+                 skew_bound_ns: int = 0,
+                 link: LinkSpec = LinkSpec(bandwidth_bps=10e9 * 8,
+                                           latency_ns=20_000)):
+        self.n_clients = n_clients
+        self.n_requests = n_requests
+        self.think_ns = think_ns
+        self.service_ns = service_ns
+        self.req_bytes = req_bytes
+        self.resp_bytes = resp_bytes
+        self.skew_bound_ns = skew_bound_ns
+        self.link = link
+        self.served = np.zeros(n_clients, dtype=np.int64)
+
+    def fabrics(self) -> List[FabricSpec]:
+        return [FabricSpec("svc", self.link)]
+
+    def programs(self) -> List[Program]:
+        wl = self
+
+        def server_factory(eps):
+            srv = eps["serve.srv"]
+
+            def body():
+                for _ in range(wl.n_clients * wl.n_requests):
+                    msg = yield Recv(srv)
+                    yield Compute(wl.service_ns)
+                    yield Send(srv, f"serve.cli{msg.payload}",
+                               wl.resp_bytes, payload=msg.payload)
+            return body()
+
+        def client_factory(i):
+            def factory(eps):
+                cli = eps[f"serve.cli{i}"]
+
+                def body():
+                    for j in range(wl.n_requests):
+                        yield Compute(wl.think_ns)
+                        yield Send(cli, "serve.srv", wl.req_bytes,
+                                   payload=i)
+                        yield Recv(cli)
+                        wl.served[i] = j + 1
+                return body()
+            return factory
+
+        out = [Program(name="serve.server", make_body=server_factory,
+                       endpoints=(EndpointSpec("serve.srv", "svc"),))]
+        for i in range(self.n_clients):
+            out.append(Program(
+                name=f"serve.client{i}", make_body=client_factory(i),
+                endpoints=(EndpointSpec(f"serve.cli{i}", "svc"),)))
+        return out
+
+    def traffic(self) -> Dict[Tuple[str, str], float]:
+        w = float(self.n_requests * (self.req_bytes + self.resp_bytes))
+        return {("serve.server", f"serve.client{i}"): w
+                for i in range(self.n_clients)}
+
+    def scopes(self) -> List[ScopeSpec]:
+        if self.skew_bound_ns > 0:
+            return [ScopeSpec("serve", self.skew_bound_ns)]
+        return []
+
+    def progress(self) -> Dict[str, np.ndarray]:
+        return {"served": self.served}

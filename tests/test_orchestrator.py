@@ -95,6 +95,49 @@ def test_co_location_reduces_cross_host_traffic():
     assert max(Counter(placement.values()).values()) == 2
 
 
+def test_co_locate_capacity_one_degenerates_to_balanced_singletons():
+    comps = [f"c{i}" for i in range(4)]
+    traffic = {("c0", "c1"): 10.0, ("c2", "c3"): 5.0}
+    placement = Orchestrator.co_locate(comps, traffic, n_hosts=4,
+                                       capacity=1)
+    assert sorted(placement) == comps
+    # capacity 1 forbids any pair from sharing a host
+    from collections import Counter
+    assert max(Counter(placement.values()).values()) == 1
+
+
+def test_co_locate_empty_traffic_balances_components():
+    comps = [f"c{i}" for i in range(6)]
+    placement = Orchestrator.co_locate(comps, {}, n_hosts=3, capacity=4)
+    assert sorted(placement) == comps
+    from collections import Counter
+    assert max(Counter(placement.values()).values()) == 2
+
+
+def test_co_locate_more_groups_than_hosts_stacks_on_least_loaded():
+    comps = [f"c{i}" for i in range(6)]
+    traffic = {("c0", "c1"): 9.0, ("c2", "c3"): 8.0, ("c4", "c5"): 7.0}
+    placement = Orchestrator.co_locate(comps, traffic, n_hosts=2,
+                                       capacity=2)
+    # pairs stay together, every host is used, load split 4/2
+    assert placement["c0"] == placement["c1"]
+    assert placement["c2"] == placement["c3"]
+    assert placement["c4"] == placement["c5"]
+    from collections import Counter
+    assert sorted(Counter(placement.values()).values()) == [2, 4]
+
+
+def test_co_locate_ignores_self_edges():
+    comps = ["a", "b"]
+    traffic = {("a", "a"): 100.0, ("a", "b"): 1.0}
+    placement = Orchestrator.co_locate(comps, traffic, n_hosts=2,
+                                       capacity=2)
+    # "a" must be placed exactly once (no phantom [a, a] group) and the
+    # real a<->b edge still co-locates them
+    assert sorted(placement) == comps
+    assert placement["a"] == placement["b"]
+
+
 def test_multi_host_pingpong_vtime_accuracy():
     """End-to-end: request/response across hosts accumulates DCN latency."""
     lat = 100 * US

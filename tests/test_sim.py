@@ -1,0 +1,232 @@
+"""The `repro.sim` facade: declarative topology/placement/workloads/
+fault-injection (ISSUE 2 tentpole).
+
+Covers the Simulation builder (engine auto-pick, auto placement through
+``Orchestrator.co_locate``), the structured SimReport, and the three
+new injection scenarios that only the facade can express:
+
+  1. straggler + mid-run host failure (blast radius as a structured
+     deadlock report),
+  2. degraded cross-rack link (mid-run latency inflation),
+  3. interference-coupled co-located serving + training
+     (simulated-CPU contention).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.cluster import ClusterSpec, StepCost
+from repro.core.ipc import LinkSpec
+from repro.core.vtask import State
+from repro.sim import (ChipRingTraining, DegradeLink, FailHost, FailTask,
+                       Interference, ModeledServe, RackRing, Scenario,
+                       Simulation, Straggler, Topology)
+
+SPEC = ClusterSpec(n_pods=1, chips_per_pod=4)
+COST = StepCost(compute_ns=50_000, ici_bytes=100_000)
+
+
+def small_train(**kw):
+    return ChipRingTraining(SPEC, COST, 3, skew_bound_ns=500_000, **kw)
+
+
+# -- simulation builder -------------------------------------------------------
+
+
+def test_single_host_auto_picks_scheduler():
+    sim = Simulation(Topology.single_host(n_cpus=4), small_train())
+    report = sim.run()
+    assert sim.scheduler is not None and sim.orchestrator is None
+    assert report.status == "ok" and report.mode == "single"
+    assert report.n_hosts == 1 and report.sync_rounds == 0
+    assert all(t.state == State.DONE for t in sim.tasks)
+    assert report.progress["train"]["done_steps"] == [3, 3, 3, 3]
+
+
+def test_multi_host_auto_picks_async_orchestrator():
+    ici = LinkSpec(bandwidth_bps=50e9 * 8, latency_ns=1_000)
+    sim = Simulation(Topology.full_mesh(2, ici, n_cpus=4), small_train(),
+                     capacity=2)
+    report = sim.run()
+    assert sim.orchestrator is not None and sim.scheduler is None
+    assert report.mode == "async"
+    assert report.status == "ok" and report.sync_rounds > 0
+    assert report.cross_host_msgs > 0
+    # per-link visibility slack surfaced (and conservative: never < 0)
+    assert report.links
+    assert all(st["min_slack_ns"] >= 0 for st in report.links.values())
+
+
+def test_auto_placement_routes_through_co_locate():
+    """Ring traffic + capacity -> contiguous chunks via co_locate."""
+    ici = LinkSpec(bandwidth_bps=50e9 * 8, latency_ns=1_000)
+    sim = Simulation(Topology.full_mesh(2, ici, n_cpus=4), small_train(),
+                     capacity=2).build()
+    hosts = [sim.placement[f"chip{c}"] for c in range(4)]
+    assert sorted(hosts) == [0, 0, 1, 1]
+    # ring neighbors co-locate: chip0+chip1 together, chip2+chip3 together
+    assert hosts[0] == hosts[1] and hosts[2] == hosts[3]
+
+
+def test_explicit_placement_and_round_robin():
+    ici = LinkSpec(bandwidth_bps=50e9 * 8, latency_ns=1_000)
+    explicit = {f"chip{c}": c % 2 for c in range(4)}
+    sim = Simulation(Topology.full_mesh(2, ici, n_cpus=4), small_train(),
+                     placement=explicit).build()
+    assert sim.placement == explicit
+    sim2 = Simulation(Topology.full_mesh(2, ici, n_cpus=4), small_train(),
+                      placement="round_robin").build()
+    assert [sim2.placement[f"chip{c}"] for c in range(4)] == [0, 1, 0, 1]
+
+
+def test_report_to_json_roundtrip():
+    report = Simulation(Topology.single_host(n_cpus=4),
+                        small_train()).run()
+    d = json.loads(report.to_json())
+    assert d["status"] == "ok"
+    assert d["tasks"]["chip0"]["state"] == "done"
+    assert d["progress"]["train"]["done_steps"] == [3, 3, 3, 3]
+    assert isinstance(d["hosts"][0]["dispatches"], int)
+
+
+def test_injection_unknown_target_rejected():
+    with pytest.raises(ValueError):
+        Simulation(Topology.single_host(), small_train(),
+                   Scenario("bad", (Straggler("nope", 2.0),))).build()
+
+
+def test_straggler_slows_only_target():
+    base = Simulation(Topology.single_host(n_cpus=4), small_train()).run()
+    slow = Simulation(
+        Topology.single_host(n_cpus=4), small_train(),
+        Scenario("straggler", (Straggler("chip1", 3.0),))).run()
+    assert slow.tasks["chip1"]["vtime"] > base.tasks["chip1"]["vtime"]
+    # ring coupling drags everyone, so total horizon also inflates
+    assert slow.vtime_ns > base.vtime_ns
+
+
+# -- scenario 1: straggler + mid-run host failure -----------------------------
+
+
+def test_scenario_straggler_plus_host_failure_blast_radius():
+    """A rack straggler plus a host dying mid-run: the ring partner
+    wedges, and the facade reports the blast radius as structured data
+    instead of crashing."""
+    wl = RackRing(n_iters=100, skew_bound_ns=2_000_000)
+    report = Simulation(
+        Topology.racks(2, 2), wl,
+        Scenario("straggler+host-death",
+                 (Straggler("w1", 2.0), FailHost(host=3, at_vtime=200_000))),
+        placement=wl.default_placement(), mode="async").run()
+    assert report.status == "deadlock"
+    done = np.array(report.progress["rack"]["iters_done"])
+    assert report.tasks["w3"]["state"] == "done"   # died (body closed)
+    assert done[3] < 100                           # short of the full run
+    assert done.max() < 100       # ring coupling stalls the survivors too
+    assert done.min() >= 1        # but everyone made some progress first
+    # the report is still fully serializable mid-wreck
+    json.loads(report.to_json())
+
+
+def test_fail_task_at_vtime_single_host():
+    report = Simulation(
+        Topology.single_host(n_cpus=4), small_train(),
+        Scenario("die", (FailTask("chip2", at_vtime=60_000),))).run()
+    assert report.status == "deadlock"
+    assert report.progress["train"]["done_steps"][2] < 3
+
+
+# -- scenario 2: degraded cross-rack link -------------------------------------
+
+
+def test_scenario_degraded_cross_rack_link():
+    def run(scenario):
+        wl = RackRing(n_iters=60, skew_bound_ns=2_000_000)
+        return Simulation(Topology.racks(2, 2), wl, scenario,
+                          placement=wl.default_placement(),
+                          mode="async").run()
+
+    base = run(Scenario())
+    degraded = run(Scenario(
+        "slow x-rack", (DegradeLink(hosts=(0, 2), latency_factor=8.0),)))
+    assert base.status == "ok" and degraded.status == "ok"
+    # leaders ride the degraded link; the whole ring finishes later
+    assert degraded.vtime_ns > base.vtime_ns
+    assert degraded.messages == base.messages
+
+
+def test_degrade_from_vtime_only_affects_tail():
+    def run(from_vtime):
+        wl = RackRing(n_iters=60, skew_bound_ns=2_000_000)
+        return Simulation(
+            Topology.racks(2, 2), wl,
+            Scenario("late", (DegradeLink(hosts=(0, 2), latency_factor=8.0,
+                                          from_vtime=from_vtime),)),
+            placement=wl.default_placement(), mode="async").run()
+
+    early, late = run(0), run(10**12)
+    assert early.vtime_ns > late.vtime_ns   # late start = no effect at all
+
+
+def test_degrade_fabric_single_host():
+    base = Simulation(Topology.single_host(n_cpus=4), small_train()).run()
+    deg = Simulation(
+        Topology.single_host(n_cpus=4), small_train(),
+        Scenario("slow ici",
+                 (DegradeLink(fabric="ici0", extra_ns=500_000),))).run()
+    assert deg.vtime_ns > base.vtime_ns
+    assert deg.messages == base.messages
+
+
+# -- scenario 3: interference-coupled co-located serving + training -----------
+
+
+def test_scenario_interference_colocated_serve_train():
+    def run(workloads):
+        return Simulation(Topology.single_host(n_cpus=1), workloads,
+                          cpu_resource=True).run()
+
+    train_alone = run([small_train()])
+    serve_alone = run([ModeledServe(n_clients=2, n_requests=30)])
+    both = run([small_train(), ModeledServe(n_clients=2, n_requests=30)])
+    assert both.status == "ok"
+    # both workloads completed under contention...
+    assert both.progress["train"]["done_steps"] == [3, 3, 3, 3]
+    assert both.progress["serve"]["served"] == [30, 30]
+    # ...and each is measurably slower than when run in isolation
+    assert (both.tasks["chip0"]["vtime"]
+            > train_alone.tasks["chip0"]["vtime"])
+    assert (both.tasks["serve.client0"]["vtime"]
+            > serve_alone.tasks["serve.client0"]["vtime"])
+
+
+def test_interference_injection_load_couples_timing():
+    base = Simulation(Topology.single_host(n_cpus=1), small_train(),
+                      cpu_resource=True).run()
+    loaded = Simulation(
+        Topology.single_host(n_cpus=1), small_train(),
+        Scenario("noisy neighbor",
+                 (Interference(co_locate_with="chip0", bursts=50,
+                               burst_ns=20_000),)),
+        cpu_resource=True).run()
+    assert loaded.status == "ok"
+    assert loaded.progress["train"]["done_steps"] == [3, 3, 3, 3]
+    assert loaded.tasks["chip0"]["vtime"] > base.tasks["chip0"]["vtime"]
+
+
+# -- multi-workload + misc ----------------------------------------------------
+
+
+def test_duplicate_program_names_rejected():
+    with pytest.raises(ValueError):
+        Simulation(Topology.single_host(),
+                   [small_train(), small_train()]).build()
+
+
+def test_serve_workload_standalone():
+    report = Simulation(Topology.single_host(n_cpus=4),
+                        ModeledServe(n_clients=3, n_requests=20)).run()
+    assert report.status == "ok"
+    assert report.progress["serve"]["served"] == [20, 20, 20]
+    assert report.messages == 2 * 3 * 20     # req + resp per request

@@ -1,0 +1,251 @@
+"""Facade <-> direct-construction equivalence.
+
+``build_training_cluster`` and ``build_rack_cluster`` are thin adapters
+over `repro.sim`; these tests hand-wire the same simulations exactly the
+way the pre-facade builders did (Scheduler/Hub/Endpoint/VTask plumbing,
+straggler/failure logic folded into the bodies) and require bit-identical
+results: final vtimes, message counts, and progress arrays — in both
+orchestration modes for the multi-host topology.
+"""
+import numpy as np
+import pytest
+
+from repro.core.cluster import (ClusterSpec, StepCost, StragglerSpec,
+                                build_rack_cluster,
+                                build_training_cluster)
+from repro.core.ipc import Endpoint, Hub, LinkSpec
+from repro.core.scheduler import Scheduler
+from repro.core.scope import Scope
+from repro.core.vtask import Compute, Recv, Send, State, VTask
+
+SPEC = ClusterSpec(n_pods=2, chips_per_pod=4)
+COST = StepCost(compute_ns=50_000, ici_bytes=100_000, dcn_bytes=10_000)
+
+
+# -- direct constructions: verbatim ports of the pre-facade builders ---------
+
+
+def direct_training(spec, step_cost, n_steps, *, skew_bound_ns=1_000_000,
+                    stragglers=(), fail_at=None):
+    sched = Scheduler(n_cpus=64)
+    pod_hubs = [Hub(f"ici{p}", LinkSpec(bandwidth_bps=spec.ici_bw_Bps * 8,
+                                        latency_ns=spec.ici_lat_ns))
+                for p in range(spec.n_pods)]
+    dcn = Hub("dcn", LinkSpec(bandwidth_bps=spec.dcn_bw_Bps * 8,
+                              latency_ns=spec.dcn_lat_ns))
+    scope = Scope("train", skew_bound_ns)
+    slowdown = {s.chip: s.slowdown for s in stragglers}
+
+    endpoints = []
+    dcn_eps = []
+    for c in range(spec.n_chips):
+        p = c // spec.chips_per_pod
+        ep = pod_hubs[p].attach(Endpoint(f"chip{c}"))
+        endpoints.append(ep)
+        if c % spec.chips_per_pod == 0:
+            dcn_eps.append(dcn.attach(Endpoint(f"pod{p}")))
+
+    tasks = []
+    done_steps = np.zeros(spec.n_chips, dtype=np.int64)
+
+    def chip_body(c):
+        p = c // spec.chips_per_pod
+        right = p * spec.chips_per_pod + (c + 1) % spec.chips_per_pod
+        ep = endpoints[c]
+        mult = slowdown.get(c, 1.0)
+
+        def body():
+            for step in range(n_steps):
+                if fail_at is not None and fail_at == (c, step):
+                    return
+                yield Compute(int(step_cost.compute_ns * mult))
+                yield Send(ep, f"chip{right}", step_cost.ici_bytes)
+                yield Recv(ep)
+                if spec.n_pods > 1 and c % spec.chips_per_pod == 0:
+                    other = (p + 1) % spec.n_pods
+                    yield Send(dcn_eps[p], f"pod{other}",
+                               step_cost.dcn_bytes)
+                    yield Recv(dcn_eps[p])
+                done_steps[c] = step + 1
+
+        t = VTask(f"chip{c}", body(), kind="modeled")
+        t.join(scope)
+        return t
+
+    for c in range(spec.n_chips):
+        tasks.append(sched.spawn(chip_body(c)))
+    return sched, tasks, pod_hubs + [dcn], done_steps
+
+
+def direct_rack(*, n_racks=2, hosts_per_rack=2, n_iters=200,
+                compute_ns=5_000, msg_bytes=4096, cross_every=20,
+                intra_link=LinkSpec(bandwidth_bps=80e9 * 8,
+                                    latency_ns=2_000),
+                cross_link=LinkSpec(bandwidth_bps=25e9 * 8,
+                                    latency_ns=50_000),
+                rack_slowdown=(), skew_bound_ns=0, mode="async"):
+    from repro.core.orchestrator import Orchestrator
+
+    n_hosts = n_racks * hosts_per_rack
+    orch = Orchestrator(n_hosts=n_hosts, n_cpus=4, mode=mode)
+    for a in range(n_hosts):
+        for b in range(a + 1, n_hosts):
+            same_rack = a // hosts_per_rack == b // hosts_per_rack
+            orch.connect_hosts(a, b,
+                               intra_link if same_rack else cross_link)
+    hubs = [orch.add_hub(h, Hub(f"hub{h}",
+                                LinkSpec(bandwidth_bps=80e9 * 8,
+                                         latency_ns=500)))
+            for h in range(n_hosts)]
+    eps = [hubs[h].attach(Endpoint(f"w{h}")) for h in range(n_hosts)]
+    xeps = {r: hubs[r * hosts_per_rack].attach(Endpoint(f"lead{r}"))
+            for r in range(n_racks)}
+    iters_done = np.zeros(n_hosts, dtype=np.int64)
+
+    def worker(h):
+        r = h // hosts_per_rack
+        slot = h % hosts_per_rack
+        right = r * hosts_per_rack + (slot + 1) % hosts_per_rack
+        mult = rack_slowdown[r] if r < len(rack_slowdown) else 1.0
+        is_leader = slot == 0
+        next_rack = (r + 1) % n_racks
+
+        def body():
+            for i in range(n_iters):
+                yield Compute(int(compute_ns * mult))
+                if hosts_per_rack > 1:
+                    yield Send(eps[h], f"w{right}", msg_bytes)
+                    yield Recv(eps[h])
+                if (is_leader and n_racks > 1
+                        and (i + 1) % cross_every == 0):
+                    yield Send(xeps[r], f"lead{next_rack}", msg_bytes)
+                    yield Recv(xeps[r])
+                iters_done[h] = i + 1
+
+        return orch.host(h).spawn(VTask(f"w{h}", body(), kind="modeled"))
+
+    tasks = [worker(h) for h in range(n_hosts)]
+    if skew_bound_ns > 0:
+        orch.global_scope("cluster", tasks, skew_bound_ns=skew_bound_ns)
+    return orch, tasks, hubs, iters_done
+
+
+# -- training: facade adapter == direct wiring --------------------------------
+
+
+@pytest.mark.parametrize("kwargs", [
+    dict(),
+    dict(stragglers=(StragglerSpec(chip=1, slowdown=2.0),)),
+    dict(stragglers=(StragglerSpec(chip=2, slowdown=1.5),
+                     StragglerSpec(chip=5, slowdown=3.0),)),
+    # duplicate specs for one chip: legacy dict semantics (last wins,
+    # no compounding)
+    dict(stragglers=(StragglerSpec(chip=1, slowdown=2.0),
+                     StragglerSpec(chip=1, slowdown=3.0),)),
+], ids=["baseline", "one_straggler", "two_stragglers",
+        "duplicate_straggler"])
+def test_training_adapter_bit_identical(kwargs):
+    d_sched, d_tasks, d_hubs, d_done = direct_training(
+        SPEC, COST, 3, skew_bound_ns=200_000, **kwargs)
+    d_sched.run()
+
+    f_eng, f_tasks, f_ctx = build_training_cluster(
+        SPEC, COST, 3, skew_bound_ns=200_000, **kwargs)
+    f_eng.run()
+
+    assert [t.vtime for t in f_tasks] == [t.vtime for t in d_tasks]
+    assert [t.state for t in f_tasks] == [t.state for t in d_tasks]
+    assert (sum(h.stats["messages"] for h in f_ctx["hubs"])
+            == sum(h.stats["messages"] for h in d_hubs))
+    assert (f_ctx["done_steps"] == d_done).all()
+
+
+def test_training_adapter_failure_bit_identical():
+    """A chip death wedges the ring identically in both constructions
+    (same vtimes at the stall, same partial progress)."""
+    d_sched, d_tasks, d_hubs, d_done = direct_training(
+        SPEC, COST, 3, skew_bound_ns=200_000, fail_at=(3, 1))
+    with pytest.raises(Exception):
+        d_sched.run()
+
+    f_eng, f_tasks, f_ctx = build_training_cluster(
+        SPEC, COST, 3, skew_bound_ns=200_000, fail_at=(3, 1))
+    with pytest.raises(Exception):
+        f_eng.run()
+
+    assert [t.vtime for t in f_tasks] == [t.vtime for t in d_tasks]
+    assert (f_ctx["done_steps"] == d_done).all()
+    assert d_done.min() < 3        # the failure really cut progress short
+
+
+# -- rack: facade adapter == direct wiring, both engines ----------------------
+
+
+@pytest.mark.parametrize("mode", ["async", "barrier"])
+def test_rack_adapter_bit_identical(mode):
+    kw = dict(n_iters=60, rack_slowdown=(1.0, 3.0),
+              skew_bound_ns=2_000_000, mode=mode)
+    d_orch, d_tasks, d_hubs, d_done = direct_rack(**kw)
+    d_res = d_orch.run()
+
+    f_orch, f_tasks, f_ctx = build_rack_cluster(**kw)
+    f_res = f_orch.run()
+
+    assert all(t.state == State.DONE for t in f_tasks)
+    assert [t.vtime for t in f_tasks] == [t.vtime for t in d_tasks]
+    assert f_res["messages"] == d_res["messages"]
+    assert (f_ctx["iters_done"] == d_done).all()
+
+
+def test_rack_adapter_mode_equivalence():
+    """Through the facade, async and barrier engines agree bit-exactly
+    (and async needs fewer synchronization rounds)."""
+    out = {}
+    for mode in ("async", "barrier"):
+        orch, tasks, ctx = build_rack_cluster(
+            n_iters=60, rack_slowdown=(1.0, 3.0),
+            skew_bound_ns=2_000_000, mode=mode)
+        res = orch.run()
+        out[mode] = ([t.vtime for t in tasks], res["messages"],
+                     res["epochs"])
+    assert out["async"][0] == out["barrier"][0]
+    assert out["async"][1] == out["barrier"][1]
+    assert out["async"][2] < out["barrier"][2]
+
+
+def test_sharded_training_links_follow_actual_placement():
+    """DCN-heavy traffic makes co_locate merge pod leaders across pods;
+    host-pair link classes must follow where chips actually landed, not
+    an assumed contiguous sharding."""
+    heavy_dcn = StepCost(compute_ns=50_000, ici_bytes=10_000,
+                         dcn_bytes=100_000)
+    eng, tasks, ctx = build_training_cluster(
+        SPEC, heavy_dcn, 2, skew_bound_ns=200_000, chips_per_host=4)
+    sim = ctx["sim"]
+    pod = {f"chip{c}": c // SPEC.chips_per_pod
+           for c in range(SPEC.n_chips)}
+    host_pods = {}
+    for name, h in sim.placement.items():
+        host_pods.setdefault(h, set()).add(pod[name])
+    for (a, b), link in sim.topology.host_links.items():
+        shared = host_pods.get(a, set()) & host_pods.get(b, set())
+        expected = SPEC.ici_lat_ns if shared else SPEC.dcn_lat_ns
+        assert link.latency_ns == expected, (a, b, host_pods)
+    eng.run()
+    assert all(t.state == State.DONE for t in tasks)
+    assert (ctx["done_steps"] == 2).all()
+
+
+def test_sharded_training_mode_equivalence():
+    """chips_per_host > 0 (the fixed knob): chips shard across
+    orchestrated hosts and both engines agree bit-exactly."""
+    out = {}
+    for mode in ("async", "barrier"):
+        eng, tasks, ctx = build_training_cluster(
+            SPEC, COST, 3, skew_bound_ns=200_000,
+            chips_per_host=4, mode=mode)
+        res = eng.run()
+        assert all(t.state == State.DONE for t in tasks)
+        assert (ctx["done_steps"] == 3).all()
+        out[mode] = ([t.vtime for t in tasks], res["messages"])
+    assert out["async"] == out["barrier"]
