@@ -5,85 +5,170 @@ driven through the declarative `repro.sim` facade.
 
 Also the orchestration-engine head-to-head (``simulate_multihost`` /
 ``main_multihost``): a >=4-host heterogeneous-latency topology (fast
-intra-rack + slow cross-rack links) run under both ``mode="barrier"``
-(global-min-latency epochs) and ``mode="async"`` (per-link-lookahead
-conservative PDES).  Both must produce identical simulation results; the
-async engine must need fewer synchronization rounds and far fewer proxy
-syncs, at no wall-clock cost.
+intra-rack + slow cross-rack links) run under ``mode="barrier"``
+(global-min-latency epochs), ``mode="async"`` (per-link-lookahead
+conservative PDES), and the multi-process ``dist`` engine with 1 and K
+OS worker processes.  All engines must produce identical simulation
+results; the bench records each engine's synchronization cost (rounds,
+proxy syncs) and, for dist, the worker count, cross-partition sync
+rounds, and the 1-vs-K wall-clock speedup.
 
 Outputs:
   results/orchestrator_bench.json — engine head-to-head summary (legacy)
-  BENCH_cluster.json              — machine-readable SimReports for the
-                                    whole run, committed at the repo
-                                    root so the perf trajectory is
-                                    tracked PR-over-PR (results/ is
-                                    gitignored)
+  BENCH_cluster.json              — compact aggregates-only summary
+                                    (schema BENCH_cluster/v2, documented
+                                    in README.md), committed at the repo
+                                    root so the perf trajectory stays
+                                    reviewable PR-over-PR (results/ is
+                                    gitignored; v1 checked in ~2500
+                                    lines of full SimReports)
 """
 from __future__ import annotations
 
 import json
+import os
 import pathlib
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 
+#: OS worker count for the dist engine rows ("K" in BENCH_cluster)
+DIST_WORKERS = 2
 
-def simulate_multihost(mode: str, *, n_racks: int = 2,
-                       hosts_per_rack: int = 2, n_iters: int = 300,
-                       rack_slowdown=(1.0, 3.0),
-                       skew_bound_ns: int = 2_000_000) -> dict:
-    """One engine run on the heterogeneous rack topology."""
-    from repro.sim import RackRing, Scenario, Simulation, Topology
+#: the dist engine forks OS workers; skip its rows where fork is absent
+HAS_FORK = hasattr(os, "fork")
 
-    wl = RackRing(n_racks=n_racks, hosts_per_rack=hosts_per_rack,
-                  n_iters=n_iters, skew_bound_ns=skew_bound_ns)
-    report = Simulation(
-        Topology.racks(n_racks, hosts_per_rack), wl,
-        Scenario("imbalanced racks", wl.stragglers(rack_slowdown)),
-        placement=wl.default_placement(), mode=mode,
-    ).run(on_deadlock="raise")
-    assert all(t["state"] == "done" for t in report.tasks.values())
+
+def _aggregate(report) -> dict:
+    """The compact BENCH_cluster/v2 per-run record: aggregates only."""
     return {
-        "mode": mode, "n_hosts": n_racks * hosts_per_rack,
+        "status": report.status,
+        "n_hosts": report.n_hosts,
+        "n_workers": report.n_workers,
         "sync_rounds": report.sync_rounds,
         "proxy_syncs": report.proxy_syncs,
         "cross_host_msgs": report.cross_host_msgs,
         "messages": report.messages,
+        "bytes": report.bytes,
         "vtime_ns": report.vtime_ns,
-        "final_vtimes": [report.tasks[f"w{h}"]["vtime"]
-                         for h in range(wl.n_workers)],
-        "wall_s": report.wall_s,
+        "wall_s": round(report.wall_s, 4),
         "dispatches": sum(h.dispatches for h in report.hosts),
-        "report": report.to_dict(),
+        "max_window_ns": report.max_window_ns,
+        "max_proxy_staleness_ns": report.max_proxy_staleness_ns,
     }
 
 
+def simulate_multihost(engine: str, *, n_workers: int = DIST_WORKERS,
+                       n_racks: int = 2, hosts_per_rack: int = 2,
+                       n_iters: int = 300, rack_slowdown=(1.0, 3.0),
+                       skew_bound_ns: int = 2_000_000) -> dict:
+    """One engine run on the heterogeneous rack topology.  ``engine``
+    is ``"barrier"``/``"async"`` or ``"dist"`` (with ``n_workers`` OS
+    worker processes)."""
+    from repro.sim import RackRing, Scenario, Simulation, Topology
+
+    wl = RackRing(n_racks=n_racks, hosts_per_rack=hosts_per_rack,
+                  n_iters=n_iters, skew_bound_ns=skew_bound_ns)
+    sim = Simulation(
+        Topology.racks(n_racks, hosts_per_rack), wl,
+        Scenario("imbalanced racks", wl.stragglers(rack_slowdown)),
+        placement=wl.default_placement(),
+    )
+    if engine == "dist":
+        report = sim.run(engine="dist", n_workers=n_workers,
+                         on_deadlock="raise")
+    else:
+        report = sim.run(engine=engine, on_deadlock="raise")
+    assert all(t["state"] == "done" for t in report.tasks.values())
+    row = _aggregate(report)
+    row["engine"] = engine
+    row["final_vtimes"] = [report.tasks[f"w{h}"]["vtime"]
+                           for h in range(wl.n_workers)]
+    return row
+
+
 def main_multihost() -> dict:
-    rows = {m: simulate_multihost(m) for m in ("barrier", "async")}
-    b, a = rows["barrier"], rows["async"]
-    assert a["final_vtimes"] == b["final_vtimes"], \
+    rows = {
+        "barrier": simulate_multihost("barrier"),
+        "async": simulate_multihost("async"),
+    }
+    if HAS_FORK:
+        rows["dist_1w"] = simulate_multihost("dist", n_workers=1)
+        rows[f"dist_{DIST_WORKERS}w"] = simulate_multihost(
+            "dist", n_workers=DIST_WORKERS)
+    vt = {k: r["final_vtimes"] for k, r in rows.items()}
+    assert all(v == vt["barrier"] for v in vt.values()), \
         "engines disagree on simulation results"
-    assert a["messages"] == b["messages"]
+    assert all(r["messages"] == rows["barrier"]["messages"]
+               for r in rows.values())
+    b, a = rows["barrier"], rows["async"]
     assert a["sync_rounds"] < b["sync_rounds"], \
         (a["sync_rounds"], b["sync_rounds"])
     print(f"orchestration engines, {b['n_hosts']} hosts, "
           f"2us intra-rack / 50us cross-rack, imbalanced racks:")
-    print(f"{'mode':>8s} {'rounds':>7s} {'proxy_syncs':>12s} "
-          f"{'msgs':>6s} {'sim_ms':>7s} {'wall_s':>7s}")
-    for m in ("barrier", "async"):
-        r = rows[m]
-        print(f"{m:>8s} {r['sync_rounds']:7d} {r['proxy_syncs']:12d} "
+    print(f"{'engine':>10s} {'workers':>7s} {'rounds':>7s} "
+          f"{'proxy_syncs':>12s} {'msgs':>6s} {'sim_ms':>7s} "
+          f"{'wall_s':>7s}")
+    for name, r in rows.items():
+        print(f"{r['engine']:>10s} {r['n_workers']:7d} "
+              f"{r['sync_rounds']:7d} {r['proxy_syncs']:12d} "
               f"{r['messages']:6d} {r['vtime_ns']/1e6:7.2f} "
               f"{r['wall_s']:7.3f}")
     print(f"async speedup: {b['sync_rounds']/a['sync_rounds']:.2f}x fewer "
           f"rounds, {b['proxy_syncs']/max(a['proxy_syncs'],1):.0f}x fewer "
           f"proxy syncs, identical results")
+    if HAS_FORK:
+        d1, dk = rows["dist_1w"], rows[f"dist_{DIST_WORKERS}w"]
+        print(f"dist {DIST_WORKERS} workers: {dk['sync_rounds']} "
+              f"cross-partition sync rounds, wall-clock "
+              f"{d1['wall_s']/max(dk['wall_s'], 1e-9):.2f}x vs 1 worker, "
+              f"identical results")
     out = ROOT / "results" / "orchestrator_bench.json"
     out.parent.mkdir(exist_ok=True)
-    slim = {m: {k: v for k, v in r.items()
-                if k not in ("final_vtimes", "report")}
-            for m, r in rows.items()}
-    out.write_text(json.dumps(slim, indent=2))
+    out.write_text(json.dumps(
+        {k: {kk: vv for kk, vv in r.items() if kk != "final_vtimes"}
+         for k, r in rows.items()}, indent=2))
     return rows
+
+
+def simulate_sharded_dist(*, n_chips: int = 512, n_hosts: int = 4,
+                          n_steps: int = 3) -> dict:
+    """The dist engine's parallelism case: a 512-chip training ring
+    sharded across hosts (heavy per-window dispatch work, few sync
+    rounds), run with 1 vs K OS worker processes and checked
+    bit-identical to the in-process async engine."""
+    from repro.core.cluster import ClusterSpec, StepCost
+    from repro.sim import ChipRingTraining, Simulation, Topology
+
+    def make():
+        spec = ClusterSpec(n_pods=n_hosts,
+                           chips_per_pod=n_chips // n_hosts)
+        cost = StepCost(compute_ns=5_000_000, ici_bytes=50_000_000,
+                        dcn_bytes=6_000_000)
+        wl = ChipRingTraining(spec, cost, n_steps,
+                              skew_bound_ns=1_000_000)
+        return Simulation(Topology(n_hosts=n_hosts, n_cpus=128), wl,
+                          capacity=n_chips // n_hosts)
+
+    ref = make().run(engine="async", on_deadlock="raise")
+    runs = {k: make().run(engine="dist", n_workers=k,
+                          on_deadlock="raise")
+            for k in (1, DIST_WORKERS)}
+    for r in runs.values():
+        assert r.tasks == ref.tasks, "dist diverged from async"
+    d1, dk = runs[1], runs[DIST_WORKERS]
+    return {
+        "n_chips": n_chips, "n_hosts": n_hosts, "n_steps": n_steps,
+        "workers": DIST_WORKERS,
+        "cross_partition_sync_rounds": dk.sync_rounds,
+        "cross_host_msgs": dk.cross_host_msgs,
+        "vtime_ns": dk.vtime_ns,
+        "wall_s_1_worker": round(d1.wall_s, 4),
+        "wall_s_k_workers": round(dk.wall_s, 4),
+        "wall_speedup_vs_1_worker": round(
+            d1.wall_s / max(dk.wall_s, 1e-9), 3),
+        "wall_s_async": round(ref.wall_s, 4),
+        "bit_identical_to_async": True,
+    }
 
 
 def simulate(arch: str = "qwen3_4b", shape: str = "train_4k",
@@ -112,19 +197,28 @@ def simulate(arch: str = "qwen3_4b", shape: str = "train_4k",
     return {
         "arch": arch, "n_chips": spec.n_chips, "n_steps": n_steps,
         "straggler": straggler,
-        "sim_step_ms": report.vtime_ns / n_steps / 1e6,
-        "analytic_step_ms": analytic_ns / n_steps / 1e6,
-        "ratio": report.vtime_ns / max(analytic_ns, 1),
-        "wall_s": report.wall_s,
-        "sim_speed": (report.vtime_ns / SEC) / max(report.wall_s, 1e-9),
+        "sim_step_ms": round(report.vtime_ns / n_steps / 1e6, 4),
+        "analytic_step_ms": round(analytic_ns / n_steps / 1e6, 4),
+        "ratio": round(report.vtime_ns / max(analytic_ns, 1), 4),
+        "wall_s": round(report.wall_s, 3),
+        "sim_speed": round((report.vtime_ns / SEC)
+                           / max(report.wall_s, 1e-9), 3),
         "messages": report.messages,
         "done_steps_min": int(min(done)),
-        "report": report.to_dict(),
     }
 
 
 def main():
     multihost = main_multihost()
+    sharded = simulate_sharded_dist() if HAS_FORK else None
+    if sharded:
+        print(f"dist sharded {sharded['n_chips']}-chip ring, "
+              f"{sharded['n_hosts']} hosts: "
+              f"{sharded['cross_partition_sync_rounds']} sync rounds, "
+              f"{sharded['workers']} workers "
+              f"{sharded['wall_speedup_vs_1_worker']:.2f}x vs 1 worker "
+              f"(async {sharded['wall_s_async']:.2f}s, "
+              f"dist {sharded['wall_s_k_workers']:.2f}s)")
     print()
     rows = []
     for arch in ("qwen3_4b", "olmoe_1b_7b"):
@@ -132,25 +226,38 @@ def main():
         rows.append(simulate(arch, straggler=True))
     out = ROOT / "results" / "cluster_bench.json"
     out.parent.mkdir(exist_ok=True)
-    out.write_text(json.dumps(
-        [{k: v for k, v in r.items() if k != "report"} for r in rows],
-        indent=2))
-    # machine-readable perf trajectory: full SimReports for every run
+    out.write_text(json.dumps(rows, indent=2))
+    # compact machine-readable perf trajectory (schema in README.md):
+    # aggregates only, so PR-over-PR diffs stay reviewable
     bench = {
-        "schema": "BENCH_cluster/v1",
-        "multihost": {m: multihost[m]["report"]
-                      for m in ("barrier", "async")},
-        "training": [{"arch": r["arch"], "straggler": r["straggler"],
-                      "sim_step_ms": r["sim_step_ms"],
-                      "analytic_step_ms": r["analytic_step_ms"],
-                      "wall_s": r["wall_s"],
-                      # the 512-entry per-task map is redundant with the
-                      # progress arrays for trajectory tracking
-                      "report": {k: v for k, v in r["report"].items()
-                                 if k != "tasks"}} for r in rows],
+        "schema": "BENCH_cluster/v2",
+        "multihost": {
+            name: {k: v for k, v in r.items() if k != "final_vtimes"}
+            for name, r in multihost.items()},
+        "training": rows,
     }
+    if HAS_FORK:
+        d1 = multihost["dist_1w"]
+        dk = multihost[f"dist_{DIST_WORKERS}w"]
+        bench["dist"] = {
+            # fine-grained rack workload: sync-round overhead dominates
+            # (few dispatches per window), so 1-vs-K wall clock shows
+            # the protocol cost...
+            "rack": {
+                "n_hosts": dk["n_hosts"],
+                "workers": DIST_WORKERS,
+                "cross_partition_sync_rounds": dk["sync_rounds"],
+                "wall_speedup_vs_1_worker": round(
+                    d1["wall_s"] / max(dk["wall_s"], 1e-9), 3),
+                "bit_identical_to_async": dk["final_vtimes"]
+                == multihost["async"]["final_vtimes"],
+            },
+            # ...while the sharded 512-chip ring (heavy per-window
+            # dispatch work, few rounds) is where extra OS workers pay.
+            "sharded": sharded,
+        }
     (ROOT / "BENCH_cluster.json").write_text(
-        json.dumps(bench, indent=2))
+        json.dumps(bench, indent=2) + "\n")
     print(f"{'arch':16s} {'strag':>6s} {'sim ms/step':>12s} "
           f"{'analytic':>9s} {'ratio':>6s} {'msgs':>8s} {'wall_s':>7s}")
     for r in rows:

@@ -13,6 +13,7 @@ Run:  PYTHONPATH=src python examples/cluster_sim.py [--arch qwen3_4b]
       (--smoke shrinks everything for CI)
 """
 import argparse
+import os
 
 from repro.core.cluster import ClusterSpec, StepCost, analytic_step_ns
 from repro.sim import (ChipRingTraining, DegradeLink, FailHost, FailTask,
@@ -70,35 +71,58 @@ def run(arch: str, n_steps: int = 4, variant: str = "",
 
 
 def run_multihost(n_racks: int = 2, hosts_per_rack: int = 2,
-                  n_iters: int = 200):
+                  n_iters: int = 200, dist_workers: int = 2):
     """Orchestrate the simulation itself across hosts (paper §3.5):
     heterogeneous interconnect — 2us intra-rack, 50us cross-rack, with
-    rack 1 computing 3x slower — under both orchestration engines.  The
+    rack 1 computing 3x slower — under every orchestration engine.  The
     per-link-lookahead async engine lets each rack advance at its own
-    link granularity instead of creeping at the global minimum latency,
-    while producing bit-identical simulation results."""
+    link granularity instead of creeping at the global minimum latency;
+    the dist engine shards the same hosts across real OS worker
+    processes (`repro.dist`) behind the same LBTS protocol.  All
+    engines produce bit-identical simulation results."""
     print(f"\nmulti-host orchestration: {n_racks} racks x "
           f"{hosts_per_rack} hosts, 2us intra-rack / 50us cross-rack, "
           f"rack 1 is 3x slower")
+    engines = ["barrier", "async"]
+    if hasattr(os, "fork"):        # the dist engine forks OS workers
+        engines.append("dist")
     results = {}
-    for mode in ("barrier", "async"):
+    for engine in engines:
         wl = RackRing(n_racks=n_racks, hosts_per_rack=hosts_per_rack,
                       n_iters=n_iters, skew_bound_ns=2_000_000)
-        report = Simulation(
+        sim = Simulation(
             Topology.racks(n_racks, hosts_per_rack), wl,
             Scenario("imbalanced racks", wl.stragglers((1.0, 3.0))),
-            placement=wl.default_placement(), mode=mode,
-        ).run(on_deadlock="raise")
-        results[mode] = report
-        print(f"  {mode:8s}: {report.sync_rounds:5d} sync rounds, "
+            placement=wl.default_placement(),
+        )
+        if engine == "dist":
+            report = sim.run(engine="dist", n_workers=dist_workers,
+                             on_deadlock="raise")
+            label = f"dist x{report.n_workers}"
+        else:
+            report = sim.run(engine=engine, on_deadlock="raise")
+            label = engine
+        results[engine] = report
+        print(f"  {label:8s}: {report.sync_rounds:5d} sync rounds, "
               f"{report.proxy_syncs:5d} proxy syncs, "
               f"{report.messages} msgs, sim={report.vtime_ns/1e6:.2f} ms, "
               f"wall={report.wall_s*1e3:.0f} ms")
     b, a = results["barrier"], results["async"]
     assert a.tasks == b.tasks, "engines must agree on simulation results"
     assert a.messages == b.messages
-    print(f"  identical results; async needed "
-          f"{b.sync_rounds/a.sync_rounds:.2f}x fewer rounds")
+    if "dist" in results:
+        d = results["dist"]
+        assert a.tasks == d.tasks and a.messages == d.messages
+        print(f"  identical results — even across {d.n_workers} OS "
+              f"worker processes; async needed "
+              f"{b.sync_rounds/a.sync_rounds:.2f}x fewer rounds than "
+              f"barrier; dist determinism holds per-message "
+              f"({d.cross_host_msgs} cross-host msgs replayed "
+              f"bit-exactly)")
+    else:
+        print(f"  identical results; async needed "
+              f"{b.sync_rounds/a.sync_rounds:.2f}x fewer rounds "
+              f"(dist engine skipped: no fork on this platform)")
     return results
 
 

@@ -21,7 +21,6 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-import itertools
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.vtime import SEC
@@ -39,7 +38,12 @@ class Message:
     hops: int = 0
 
     def sort_key(self):
-        return (self.visibility_time, self.seq)
+        # (visibility, src, per-src seq): a process-independent total
+        # order.  seq is assigned per *sender* (see Hub.send), so the
+        # same simulation produces the same tie-break whether it runs in
+        # one process or sharded across dist workers — a global counter
+        # would encode which process happened to assign it.
+        return (self.visibility_time, self.src, self.seq)
 
 
 @dataclasses.dataclass
@@ -87,10 +91,9 @@ HookFn = Callable[[Message, Dict[str, Any]], int]
 class Hub:
     """Kernel-resident message router with per-link latency control."""
 
-    _seq = itertools.count()
-
     def __init__(self, name: str, default_link: LinkSpec = LinkSpec()):
         self.name = name
+        self._src_seq: Dict[str, int] = {}        # per-sender message seq
         self.endpoints: Dict[str, Endpoint] = {}
         self.links: Dict[Tuple[str, str], LinkSpec] = {}
         self.default_link = default_link
@@ -152,9 +155,10 @@ class Hub:
 
     def send(self, src: str, dst: str, size_bytes: int, send_vtime: int,
              payload: Any = None) -> Message:
+        seq = self._src_seq.get(src, 0)
+        self._src_seq[src] = seq + 1
         msg = Message(src=src, dst=dst, size_bytes=size_bytes,
-                      send_vtime=send_vtime, payload=payload,
-                      seq=next(Hub._seq))
+                      send_vtime=send_vtime, payload=payload, seq=seq)
         return self.route(msg)
 
     def route(self, msg: Message) -> Message:
@@ -175,6 +179,12 @@ class Hub:
                     msg.send_vtime = self._serialize(msg, ("__peer__",
                                                            peer.name),
                                                      link, extra)
+                    if getattr(peer, "is_remote", False):
+                        # dist engine: the peer hub lives in another OS
+                        # process (repro.dist.worker.RemotePeer).  The
+                        # owning worker replays route() on its replica
+                        # and performs the per-link accounting there.
+                        return peer.forward(self.name, msg, sent_at)
                     routed = peer.route(msg)
                     self._account_peer(peer.name, routed, sent_at, link)
                     return routed

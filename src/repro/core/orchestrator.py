@@ -51,6 +51,11 @@ Two conservative engines share all of the wiring above; pick one with
 Both engines are conservative, so they produce identical simulation
 results (final vtimes, message counts); they differ only in how many
 synchronization rounds (``stats["epochs"]``) and proxy syncs they need.
+A third engine, ``repro.dist``, runs the async protocol across real OS
+worker processes: its coordinator reuses :func:`lbts_bounds` /
+:func:`earliest_input_time` below, so all three engines compute the
+same conservative clock bounds and stay bit-identical (enforced by
+``tests/engine_harness.py``).
 
 Most callers should not wire an Orchestrator by hand: the `repro.sim`
 facade (:class:`repro.sim.Simulation`) builds hosts, hubs, links,
@@ -69,6 +74,46 @@ from repro.core.scope import Scope
 from repro.core.vtask import State, VTask
 
 _INF = 2**62
+
+
+def lbts_bounds(next_times: Dict[int, Optional[int]],
+                lookahead: Dict[Tuple[int, int], int]) -> Dict[int, int]:
+    """Null-message-style LBTS relaxation: lb[h] is a lower bound on the
+    vtime of *any* future action of host h, accounting for transitive
+    wake-up chains (h may be woken by a message from p, which may first
+    be woken by q, ...).  Fixpoint of
+
+        lb[h] = min(local_next(h), min_p lb[p] + lookahead(p, h))
+
+    over the host graph; converges in <= n_hosts passes because all
+    lookaheads are positive.  Shared by the in-process async engine and
+    the multi-process dist coordinator (repro.dist) so both compute the
+    exact same conservative clock bounds."""
+    lb = {h: (_INF if t is None else t) for h, t in next_times.items()}
+    for _ in range(len(lb)):
+        changed = False
+        for (src, dst), la in lookahead.items():
+            if lb[src] >= _INF:
+                continue
+            v = lb[src] + la
+            if v < lb[dst]:
+                lb[dst] = v
+                changed = True
+        if not changed:
+            break
+    return lb
+
+
+def earliest_input_time(host: int, lb: Dict[int, int],
+                        lookahead: Dict[Tuple[int, int], int]
+                        ) -> Optional[int]:
+    """Earliest-input time of ``host``: no peer can make a message
+    visible here before this vtime, so every local event strictly below
+    it is safe to execute.  None = unbounded (no peer can reach this
+    host at all)."""
+    times = [lb[src] + la for (src, dst), la in lookahead.items()
+             if dst == host and lb[src] < _INF]
+    return min(times) if times else None
 
 
 class ProxyVTask(VTask):
@@ -284,52 +329,29 @@ class Orchestrator:
             return None
         return max(1, shub.lookahead_ns(dhub.name))
 
+    def lookahead_map(self) -> Dict[Tuple[int, int], int]:
+        """All directed cross-host channels and their lookahead, the
+        input to :func:`lbts_bounds` / :func:`earliest_input_time`."""
+        la = {}
+        for src in self.hosts:
+            for dst in self.hosts:
+                if src == dst:
+                    continue
+                v = self._lookahead(src, dst)
+                if v is not None:
+                    la[(src, dst)] = v
+        return la
+
     def _clock_bounds(self) -> Dict[int, int]:
-        """Null-message-style LBTS relaxation: lb[h] is a lower bound on
-        the vtime of *any* future action of host h, accounting for
-        transitive wake-up chains (h may be woken by a message from p,
-        which may first be woken by q, ...).  Fixpoint of
-
-            lb[h] = min(local_next(h), min_p lb[p] + lookahead(p, h))
-
-        over the host graph; converges in <= n_hosts passes because all
-        lookaheads are positive."""
-        lb = {}
-        for h, sched in self.hosts.items():
-            t = sched.next_time()
-            lb[h] = _INF if t is None else t
-        hosts = list(self.hosts)
-        for _ in range(len(hosts)):
-            changed = False
-            for dst in hosts:
-                for src in hosts:
-                    if src == dst:
-                        continue
-                    la = self._lookahead(src, dst)
-                    if la is None or lb[src] >= _INF:
-                        continue
-                    v = lb[src] + la
-                    if v < lb[dst]:
-                        lb[dst] = v
-                        changed = True
-            if not changed:
-                break
-        return lb
+        return lbts_bounds(
+            {h: sched.next_time() for h, sched in self.hosts.items()},
+            self.lookahead_map())
 
     def _eit(self, host: int, lb: Dict[int, int]) -> Optional[int]:
-        """Earliest-input time of ``host``: no peer can make a message
-        visible here before this vtime, so every local event strictly
-        below it is safe to execute.  None = unbounded (no peer can
-        reach this host at all)."""
-        times = []
-        for src in self.hosts:
-            if src == host:
-                continue
-            la = self._lookahead(src, host)
-            if la is None or lb[src] >= _INF:
-                continue
-            times.append(lb[src] + la)
-        return min(times) if times else None
+        return earliest_input_time(host, lb, self.lookahead_map())
+
+    def _next_times(self) -> Dict[int, Optional[int]]:
+        return {h: sched.next_time() for h, sched in self.hosts.items()}
 
     def _lazy_sync(self, host: int, bound: Optional[int]) -> bool:
         """Sync a proxy only when its staleness could pin the local scope
@@ -351,15 +373,20 @@ class Orchestrator:
 
     def _run_async(self, max_rounds: int) -> None:
         order = sorted(self.hosts)
+        # channels are pinned at peering time (Hub.peer_with), so the
+        # lookahead map is static for the whole run — build it once
+        # (the dist coordinator captures it once at handshake for the
+        # same reason) instead of per _eit call.
+        la = self.lookahead_map()
         for _ in range(max_rounds):
             if not self.unfinished():
                 return
             self.stats["epochs"] += 1
             progressed = False
-            lb = self._clock_bounds()
+            lb = lbts_bounds(self._next_times(), la)
             for h in order:
                 sched = self.hosts[h]
-                bound = self._eit(h, lb)
+                bound = earliest_input_time(h, lb, la)
                 if self._lazy_sync(h, bound):
                     progressed = True
                 if bound is not None:
@@ -400,13 +427,18 @@ class Orchestrator:
     # -- barrier engine (legacy, kept for head-to-head comparison) ---------------
     def _run_barrier(self, max_epochs: int) -> None:
         # CMB lookahead = the minimum latency over every cross-host
-        # channel (per-pair links where declared, the scalar default
-        # otherwise) — any single faster link bounds how far all hosts
-        # may conservatively run ahead.
+        # channel — any single faster link bounds how far all hosts may
+        # conservatively run ahead.  ``peer_links`` is pinned per pair
+        # at peering time, so it enumerates exactly the channels that
+        # exist; no channels at all (e.g. a 1-host topology) means no
+        # conservative constraint, and the window must be unbounded —
+        # a finite window would defer wake-ups past the gate and let
+        # scope-min forwarding observe a schedule that no unconstrained
+        # engine produces (diverging from single/async results).
         lats = [link.latency_ns
                 for hub in self.hubs.values()
-                for link in (hub.peer_links.values() or [hub.peer_link])]
-        window = max(1, min(lats, default=1000))
+                for link in hub.peer_links.values()]
+        window = max(1, min(lats)) if lats else None
         stalled = 0
         for _ in range(max_epochs):
             if not self.unfinished():
@@ -419,7 +451,7 @@ class Orchestrator:
                 # strict window drain: a wake-up at or past the gate
                 # could timestamp a receiver against a late slow-link
                 # message that an unsent fast-link message will undercut
-                h.run_until(gmin + window)
+                h.run_until(None if window is None else gmin + window)
             self.sync_proxies()
             if not self.unfinished():
                 break
@@ -434,7 +466,8 @@ class Orchestrator:
                 # reached by gmin itself advancing next epoch.
                 moved = False
                 for h in self.hosts.values():
-                    h._wake_pass(bound=gmin + 2 * window)
+                    h._wake_pass(bound=None if window is None
+                                 else gmin + 2 * window)
                     if h.runnable():
                         moved = True
                 if not moved:

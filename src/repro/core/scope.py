@@ -8,7 +8,12 @@ scope.vtime (the cached minimum) is computed over RUNNABLE members only —
 blocked vtasks are excluded (they cannot make progress and would pin the
 minimum, deadlocking e.g. VM boot where halted vCPUs lag the bootstrap
 vCPU).  On wake, a previously blocked vtask's vtime is forwarded to the
-current scope vtime (time causality: a sleeper observes that time moved).
+wake-up's *causal* timestamp — the message visibility / event fire time
+(a sleeper observes that time moved up to the interrupt that woke it).
+Forwarding must depend on nothing else: the scope's current member
+minimum is a function of the orchestration engine's window schedule, so
+forwarding to it would give every engine (single / barrier / async /
+multi-process dist) different timings for the same simulation.
 """
 from __future__ import annotations
 
@@ -55,17 +60,6 @@ class Scope:
             return True
         return task.vtime <= sv + self.skew_bound_ns
 
-    @property
-    def local_vtime(self) -> int:
-        """Min vtime over runnable *non-proxy* members (-1 if none).
-        Proxies are conservatively stale mirrors whose vtime depends on
-        the orchestrator's sync schedule, so they must not influence
-        wake-up forwarding — otherwise different orchestration engines
-        would produce different timings for the same simulation."""
-        vs = [t.vtime for t in self.members
-              if t.state == State.RUNNABLE and t.kind != "proxy"]
-        return min(vs) if vs else -1
-
     def pin_bound(self, task: VTask) -> int:
         """The vtime up to which *other* members may advance while
         ``task`` stays put: beyond task.vtime + skew_bound they become
@@ -74,27 +68,20 @@ class Scope:
         its pin bound."""
         return task.vtime + self.skew_bound_ns
 
-    def forward_on_wake(self, task: VTask) -> None:
-        """Paper: wake-up forwards vtime to the current scope vtime (a
-        sleeper observes that time moved) — computed over real members
-        only, see ``local_vtime``."""
-        sv = self.local_vtime
-        if sv >= 0 and task.vtime < sv:
-            task.vtime = sv
-
-
 def all_eligible(task: VTask) -> bool:
     return all(s.eligible(task) for s in task.scopes)
 
 
 def wake(task: VTask, at_vtime: Optional[int] = None) -> None:
-    """Unblock + forward vtime: the sleeper observes both that local time
-    moved (max of scope local vtimes — real members only, so forwarding
-    never depends on the orchestrator's proxy-sync schedule) and the
-    wake-up's causal timestamp ``at_vtime`` (message visibility / event
-    fire time), whichever is later."""
-    for s in task.scopes:
-        s.forward_on_wake(task)
+    """Unblock + forward vtime to the wake-up's causal timestamp
+    ``at_vtime`` (message visibility / event fire time).
+
+    Forwarding is *causal only*, never to the scope's current member
+    minimum: that minimum reflects how far peers happened to run under
+    one engine's window schedule, so using it would make wake timings —
+    and therefore simulation results — engine-dependent (the
+    single/barrier/async/dist equivalence bar in
+    ``tests/engine_harness.py`` is what enforces this)."""
     if at_vtime is not None:
         task.vtime = max(task.vtime, at_vtime)
     task.state = State.RUNNABLE

@@ -1,0 +1,285 @@
+"""DistCoordinator: multi-process distributed simulation orchestration.
+
+The parent-process control plane of the dist engine.  It forks
+``n_workers`` OS processes *before* the facade builds anything (so every
+worker derives a bit-identical replica, see ``repro.dist.worker``),
+partitions the topology's hosts contiguously across them, and then runs
+the same conservative per-link-lookahead clock protocol as
+``Orchestrator(mode="async")`` — except that host windows execute in
+real parallel processes and the LBTS null-message bounds travel over
+pipes instead of shared memory.
+
+Round structure (one "cross-partition sync round" = one A+B pair):
+
+* **Phase A (sync)** — deliver cross-partition message envelopes
+  produced last round and broadcast (vtime, state) updates for every
+  proxied task; workers reply with per-host conservative next-event
+  times and an unfinished flag.
+* **Phase B (run)** — the coordinator computes LBTS clock bounds and
+  per-host earliest-input times (:func:`repro.core.orchestrator.
+  lbts_bounds` / :func:`~repro.core.orchestrator.earliest_input_time`,
+  the exact functions the in-process async engine uses) and tells each
+  worker to drain its hosts strictly below those bounds.  Workers run
+  concurrently and reply with outboxes + progress counters.
+
+Deadlock mirrors the in-process engines: a full round with no
+dispatches, wakes, proxy/replica changes, or in-flight messages while
+work remains is a wedged simulation — reported as
+``SimReport.status == "deadlock"``, not a crash.
+
+Fault containment: workers are daemon processes, every coordinator
+receive has a timeout, and shutdown always terminates stragglers — a
+hung or crashed worker fails the run fast instead of wedging the
+caller (or CI).
+
+Caveat: workers are *forked* (workload closures are not picklable), so
+a parent that already started non-fork-safe threads — notably JAX's
+internal pools, once any ``repro.models``/kernel module has run — forks
+under CPython's multithreading warning.  The workers themselves never
+touch JAX (the sim substrate is pure Python + numpy), which is why the
+test suite runs dist reliably with JAX loaded; but a worker that does
+wedge in an inherited lock is contained by ``timeout`` rather than
+prevented.  Keep dist simulations on the modeled/pure-Python side, or
+fork before importing the JAX stack.
+"""
+from __future__ import annotations
+
+import multiprocessing
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.orchestrator import earliest_input_time, lbts_bounds
+from repro.sim.report import SimReport, _jsonable
+
+
+class DistWorkerError(RuntimeError):
+    """A worker crashed, hung past the timeout, or closed its pipe."""
+
+
+def partition_hosts(n_hosts: int, n_workers: int) -> List[List[int]]:
+    """Contiguous near-equal blocks: keeps rack-style topologies (hosts
+    grouped contiguously) mostly intra-partition, minimizing
+    cross-partition channels."""
+    base, extra = divmod(n_hosts, n_workers)
+    out, start = [], 0
+    for w in range(n_workers):
+        size = base + (1 if w < extra else 0)
+        out.append(list(range(start, start + size)))
+        start += size
+    return out
+
+
+class DistCoordinator:
+    def __init__(self, sim, n_workers: int = 2, *,
+                 max_rounds: int = 1_000_000, timeout: float = 120.0):
+        if n_workers < 1:
+            raise ValueError(f"n_workers must be >= 1, got {n_workers}")
+        if sim._built:
+            raise ValueError(
+                "the dist engine forks workers that build their own "
+                "replicas; run() it on an unbuilt Simulation")
+        self.sim = sim
+        self.n_workers = min(n_workers, sim.topology.n_hosts)
+        self.partitions = partition_hosts(sim.topology.n_hosts,
+                                          self.n_workers)
+        self.owner = {h: w for w, hosts in enumerate(self.partitions)
+                      for h in hosts}
+        self.max_rounds = max_rounds
+        self.timeout = timeout
+        self.rounds = 0
+        self.envelopes_routed = 0
+        self._conns: List[Any] = []
+        self._procs: List[Any] = []
+
+    # -- worker lifecycle ----------------------------------------------------
+    def _spawn(self) -> None:
+        from repro.dist.worker import worker_main
+        try:
+            ctx = multiprocessing.get_context("fork")
+        except ValueError as e:          # pragma: no cover - non-POSIX
+            raise DistWorkerError(
+                "dist engine needs the fork start method (workload "
+                "closures are not picklable)") from e
+        for w in range(self.n_workers):
+            parent, child = ctx.Pipe()
+            proc = ctx.Process(
+                target=worker_main, name=f"dist-worker-{w}",
+                args=(self.sim, w, self.partitions, child), daemon=True)
+            proc.start()
+            child.close()
+            self._conns.append(parent)
+            self._procs.append(proc)
+
+    def _shutdown(self) -> None:
+        """Every reply the run needs has been received by the time this
+        runs (success or failure), so workers are terminated outright —
+        a hung worker must never stall the caller's exit path."""
+        for conn in self._conns:
+            try:
+                conn.close()
+            except OSError:
+                pass
+        for proc in self._procs:
+            if proc.is_alive():
+                proc.terminate()
+        for proc in self._procs:
+            proc.join(timeout=5.0)
+            if proc.is_alive():                 # pragma: no cover
+                proc.kill()
+                proc.join(timeout=5.0)
+
+    def _send(self, w: int, tag: str, payload: Any) -> None:
+        try:
+            self._conns[w].send((tag, payload))
+        except (BrokenPipeError, OSError) as e:
+            raise DistWorkerError(f"dist worker {w} died: {e}") from e
+
+    def _recv(self, w: int, expect: str) -> Any:
+        conn = self._conns[w]
+        if not conn.poll(self.timeout):
+            raise DistWorkerError(
+                f"dist worker {w} hung (> {self.timeout}s without a "
+                f"{expect!r} reply)")
+        try:
+            tag, payload = conn.recv()
+        except EOFError as e:
+            raise DistWorkerError(f"dist worker {w} died mid-run") from e
+        if tag == "error":
+            raise DistWorkerError(
+                f"dist worker {w} failed:\n{payload}")
+        if tag != expect:
+            raise DistWorkerError(
+                f"dist worker {w}: expected {expect!r}, got {tag!r}")
+        return payload
+
+    def _broadcast(self, tag: str, payloads: List[Any],
+                   expect: str) -> List[Any]:
+        """Send to every worker first, then collect — phase execution
+        overlaps across worker processes (the actual parallelism)."""
+        for w in range(self.n_workers):
+            self._send(w, tag, payloads[w])
+        return [self._recv(w, expect) for w in range(self.n_workers)]
+
+    # -- the run -------------------------------------------------------------
+    def run(self) -> SimReport:
+        t0 = time.perf_counter()
+        self._spawn()
+        try:
+            readies = [self._recv(w, "ready")
+                       for w in range(self.n_workers)]
+            lookahead = readies[0]["lookahead"]
+            hub_host = readies[0]["hub_host"]
+            status, detail = "ok", ""
+            pending: List[List] = [[] for _ in range(self.n_workers)]
+            updates: Dict[str, tuple] = {}
+            for _ in range(self.max_rounds):
+                synced = self._broadcast(
+                    "sync",
+                    [{"envelopes": pending[w], "updates": updates}
+                     for w in range(self.n_workers)],
+                    "synced")
+                pending = [[] for _ in range(self.n_workers)]
+                if not any(s["unfinished"] for s in synced):
+                    break
+                next_times: Dict[int, Optional[int]] = {}
+                for s in synced:
+                    next_times.update(s["next_times"])
+                lb = lbts_bounds(next_times, lookahead)
+                bounds = {h: earliest_input_time(h, lb, lookahead)
+                          for h in next_times}
+                rans = self._broadcast(
+                    "run",
+                    [{h: bounds[h] for h in self.partitions[w]}
+                     for w in range(self.n_workers)],
+                    "ran")
+                self.rounds += 1
+                progressed = any(s["applied"] for s in synced)
+                updates = {}
+                for r in rans:
+                    progressed = (progressed or r["dispatches"] > 0
+                                  or r["wakes"] > 0 or r["lazy_changed"]
+                                  or bool(r["outbox"]))
+                    updates.update(r["task_states"])
+                    for env in r["outbox"]:
+                        dst = self.owner[hub_host[env[1]]]
+                        pending[dst].append(env)
+                        self.envelopes_routed += 1
+                if not progressed:
+                    status = "deadlock"
+                    detail = "distributed simulation wedged"
+                    break
+            else:
+                status = "deadlock"
+                detail = (f"dist engine exceeded {self.max_rounds} "
+                          f"rounds without finishing")
+            reports = self._broadcast(
+                "finalize", [None] * self.n_workers, "report")
+            wall = time.perf_counter() - t0
+            return self._merge(status, detail, wall, reports)
+        finally:
+            self._shutdown()
+
+    # -- report merging ------------------------------------------------------
+    def _merge_progress(self, worker_progress: List[Dict[str, dict]]
+                        ) -> Dict[str, Any]:
+        """Each worker ran a disjoint subset of programs, so its copies
+        of the monotone progress counters are authoritative where it
+        executed and zero elsewhere: merge by elementwise maximum, and
+        write the merged arrays back into the parent's workload objects
+        so ``wl.progress()`` reads post-run, like in-process."""
+        for wl in self.sim.workloads:
+            mine = wl.progress()
+            for wp in worker_progress:
+                for key, value in wp.get(wl.name, {}).items():
+                    cur = mine.get(key)
+                    if isinstance(cur, np.ndarray) and \
+                            isinstance(value, np.ndarray):
+                        np.maximum(cur, value, out=cur)
+                    elif cur is None or (np.isscalar(cur)
+                                         and np.isscalar(value)
+                                         and value > cur):
+                        mine[key] = value
+        return {wl.name: _jsonable(wl.progress())
+                for wl in self.sim.workloads}
+
+    def _merge(self, status: str, detail: str, wall: float,
+               reports: List[Dict[str, Any]]) -> SimReport:
+        sim = self.sim
+        hosts = sorted((hr for r in reports for hr in r["hosts"]),
+                       key=lambda hr: hr.host)
+        links: Dict[str, Dict[str, int]] = {}
+        for r in reports:
+            links.update(r["links"])
+        tasks: Dict[str, Dict[str, Any]] = {}
+        merged_tasks = {}
+        for r in reports:
+            merged_tasks.update(r["tasks"])
+        for _, prog in sim._programs():    # declaration order, like
+            tasks[prog.name] = merged_tasks[prog.name]   # in-process
+        return SimReport(
+            status=status, mode="dist", n_hosts=sim.topology.n_hosts,
+            vtime_ns=max(r["horizon"] for r in reports),
+            wall_s=wall,
+            messages=sum(r["messages"] for r in reports),
+            bytes=sum(r["bytes"] for r in reports),
+            sync_rounds=self.rounds,
+            proxy_syncs=sum(r["proxy_syncs"] for r in reports),
+            cross_host_msgs=sum(st["messages"] for st in links.values()),
+            max_proxy_staleness_ns=max(
+                r["max_proxy_staleness_ns"] for r in reports),
+            max_window_ns=max(r["max_window_ns"] for r in reports),
+            hosts=hosts, links=links, tasks=tasks,
+            progress=self._merge_progress(
+                [r["progress"] for r in reports]),
+            scenario=sim.scenario.name, detail=detail,
+            n_workers=self.n_workers)
+
+
+def run_dist(sim, n_workers: int = 2, *, max_rounds: int = 1_000_000,
+             timeout: float = 120.0) -> SimReport:
+    """Run an unbuilt facade Simulation across ``n_workers`` OS worker
+    processes; see :class:`DistCoordinator`."""
+    return DistCoordinator(sim, n_workers, max_rounds=max_rounds,
+                           timeout=timeout).run()

@@ -1,0 +1,245 @@
+"""Worker side of the multi-process dist engine.
+
+Each OS worker process builds the *full* declarative
+:class:`~repro.sim.simulation.Simulation` (fork happens before build, so
+every worker derives a bit-identical replica of all hosts, hubs, tasks,
+scopes, and injection wiring) but *executes* only the schedulers of its
+own host partition.  Everything outside the partition is a passive
+replica used for three things:
+
+* **Message replay** — a cross-partition message is serialized on the
+  sender's hub (channel queuing + lookahead, exactly as in-process),
+  shipped over the pipe, and replayed through ``dest_hub.route()`` on
+  the owner, which computes the same visibility time the in-process
+  engines would (per-channel ``busy_until`` only ever sees traffic from
+  one sender, and pipes are FIFO, so replay order matches).
+* **Proxy refresh** — :class:`~repro.core.orchestrator.ProxyVTask`
+  mirrors keep pointing at the local replica of the remote task; the
+  coordinator broadcasts (vtime, state) updates for proxied tasks, the
+  worker applies them to the replicas, and the existing lazy
+  pin-bound sync then works unchanged.
+* **Accounting replay** — per-link visibility-slack stats for a
+  cross-partition channel are computed on the destination owner
+  (against its replica of the sender hub) and merged by the
+  coordinator.
+
+Safety: a message produced inside round ``r`` has visibility
+``>= lb[sender] + lookahead >= EIT(receiver)``, and the schedulers'
+strict window gate never consumes anything at or past the receiver's
+EIT bound — so delivering cross-partition messages one round later is
+invisible to the simulation, which is what makes the dist engine
+bit-identical to ``async``/``barrier``.
+"""
+from __future__ import annotations
+
+import traceback
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.vtask import State
+from repro.sim.report import HostReport
+
+#: (src_hub_name, dst_hub_name, Message, original send vtime)
+Envelope = Tuple[str, str, Any, int]
+
+
+class RemotePeer:
+    """Stand-in for a peered hub owned by another worker.  Quacks just
+    enough like a Hub for ``Hub.route``'s forwarding branch: name,
+    endpoint membership (the local replica's), and ``forward`` instead
+    of ``route``."""
+
+    is_remote = True
+
+    def __init__(self, replica_hub, outbox: List[Envelope]):
+        self.name = replica_hub.name
+        self.endpoints = replica_hub.endpoints
+        self._outbox = outbox
+
+    def forward(self, src_hub: str, msg, sent_at: int):
+        self._outbox.append((src_hub, self.name, msg, sent_at))
+        return msg
+
+
+class DistWorker:
+    def __init__(self, sim, worker_id: int,
+                 partitions: List[List[int]]):
+        self.sim = sim
+        self.id = worker_id
+        self.owned = sorted(partitions[worker_id])
+        self.owner = {h: w for w, hosts in enumerate(partitions)
+                      for h in hosts}
+        self.outbox: List[Envelope] = []
+        # dist replicas are wired exactly like the async engine; the
+        # coordinator (not Orchestrator.run) drives the clock protocol.
+        sim.mode = "async"
+        sim.build()
+        self.orch = sim.orchestrator
+        self.hub_host = {hub.name: h for h, hub in self.orch.hubs.items()}
+        self.hubs_by_name = {hub.name: hub
+                             for hub in self.orch.hubs.values()}
+        self.lookahead = self.orch.lookahead_map()
+        # swap cross-partition peers of *owned* hubs for RemotePeer
+        # stubs; replica hubs of other partitions never send.
+        for h in self.owned:
+            hub = self.orch.hubs.get(h)
+            if hub is None:
+                continue
+            for pname in list(hub.peers):
+                if self.owner[self.hub_host[pname]] != self.id:
+                    hub.peers[pname] = RemotePeer(
+                        self.hubs_by_name[pname], self.outbox)
+        self.tasks_by_name = {
+            t.name: t for sched in self.orch.hosts.values()
+            for t in sched.tasks if t.kind != "proxy"}
+        # owned tasks some other partition mirrors through a proxy: their
+        # (vtime, state) is exported to the coordinator every run phase.
+        self.exports = sorted({
+            p.remote.name for p in self.orch.proxies
+            if self.owner[p.remote.host] == self.id
+            and self.owner[p.host] != self.id})
+
+    # -- protocol phases -----------------------------------------------------
+    def handshake(self) -> Dict[str, Any]:
+        return {"hosts": self.owned,
+                "lookahead": self.lookahead,
+                "hub_host": self.hub_host,
+                "exports": self.exports}
+
+    def inject(self, envelopes: List[Envelope]) -> None:
+        """Replay cross-partition messages on the owned destination hub
+        (visibility computation identical to the in-process route) and
+        mirror the sender-side per-link accounting on our replica of
+        the sender hub."""
+        for src_name, dst_name, msg, sent_at in envelopes:
+            routed = self.hubs_by_name[dst_name].route(msg)
+            src_hub = self.hubs_by_name[src_name]
+            link = src_hub.peer_links.get(dst_name, src_hub.peer_link)
+            src_hub._account_peer(dst_name, routed, sent_at, link)
+
+    def apply_updates(self, updates: Dict[str, Tuple[int, str]]) -> bool:
+        """Refresh replicas of remote tasks from the coordinator's
+        broadcast; proxies pick the new values up at the next lazy
+        sync.  Returns True iff anything changed (progress signal)."""
+        changed = False
+        for name, (vtime, state) in updates.items():
+            task = self.tasks_by_name.get(name)
+            if task is None or self.owner[task.host] == self.id:
+                continue
+            if task.vtime != vtime or task.state.value != state:
+                task.vtime = vtime
+                task.state = State(state)
+                changed = True
+        return changed
+
+    def next_times(self) -> Dict[int, Optional[int]]:
+        return {h: self.orch.hosts[h].next_time() for h in self.owned}
+
+    def unfinished(self) -> bool:
+        return any(t.state in (State.RUNNABLE, State.BLOCKED)
+                   for h in self.owned
+                   for t in self.orch.hosts[h].tasks
+                   if t.kind != "proxy")
+
+    def run_window(self, bounds: Dict[int, Optional[int]]
+                   ) -> Dict[str, Any]:
+        """One conservative window per owned host (lazy proxy sync +
+        ``run_until`` below the coordinator-computed EIT), mirroring one
+        host iteration of ``Orchestrator._run_async``."""
+        stats = self.orch.stats
+        d0 = sum(self.orch.hosts[h].stats.dispatches for h in self.owned)
+        w0 = sum(self.orch.hosts[h].stats.wakes for h in self.owned)
+        lazy_changed = False
+        for h in self.owned:
+            sched = self.orch.hosts[h]
+            bound = bounds.get(h)
+            if self.orch._lazy_sync(h, bound):
+                lazy_changed = True
+            if bound is not None:
+                start = sched.next_time()
+                if start is not None and bound > start:
+                    stats["max_window_ns"] = max(
+                        stats["max_window_ns"], bound - start)
+            sched.run_until(bound)
+        # drain in place: the RemotePeer stubs hold a reference to this
+        # exact list, so rebinding would silently disconnect them.
+        out = list(self.outbox)
+        self.outbox.clear()
+        return {
+            "outbox": out,
+            "task_states": {n: (self.tasks_by_name[n].vtime,
+                                self.tasks_by_name[n].state.value)
+                            for n in self.exports},
+            "dispatches": sum(self.orch.hosts[h].stats.dispatches
+                              for h in self.owned) - d0,
+            "wakes": sum(self.orch.hosts[h].stats.wakes
+                         for h in self.owned) - w0,
+            "lazy_changed": lazy_changed,
+        }
+
+    def final_report(self) -> Dict[str, Any]:
+        orch = self.orch
+        self.orch._note_staleness()
+        owned_hubs = [orch.hubs[h] for h in self.owned if h in orch.hubs]
+        links = {}
+        for hub in self.hubs_by_name.values():
+            for peer, st in hub.peer_stats.items():
+                if self.owner[self.hub_host[peer]] == self.id:
+                    links[f"{hub.name}->{peer}"] = dict(st)
+        staleness = max((p.max_staleness_ns
+                         for h in self.owned
+                         for p in orch._host_proxies.get(h, ())),
+                        default=0)
+        return {
+            "hosts": [HostReport.from_sched(h, orch.hosts[h].stats)
+                      for h in self.owned],
+            "messages": sum(h.stats["messages"] for h in owned_hubs),
+            "bytes": sum(h.stats["bytes"] for h in owned_hubs),
+            "links": links,
+            "tasks": {t.name: {"vtime": t.vtime, "state": t.state.value,
+                               "host": t.host}
+                      for t in self.sim.tasks
+                      if self.owner[t.host] == self.id},
+            "progress": {wl.name: dict(wl.progress())
+                         for wl in self.sim.workloads},
+            "horizon": max((t.vtime for h in self.owned
+                            for t in orch.hosts[h].tasks
+                            if t.kind != "proxy"), default=0),
+            "proxy_syncs": orch.stats["proxy_syncs"],
+            "max_proxy_staleness_ns": staleness,
+            "max_window_ns": orch.stats["max_window_ns"],
+        }
+
+
+def worker_main(sim, worker_id: int, partitions: List[List[int]],
+                conn) -> None:
+    """Process entry point: build, handshake, then serve coordinator
+    phases until ``finalize``.  Any exception is shipped back as an
+    ``("error", traceback)`` message so the coordinator fails fast
+    instead of hanging on a dead pipe."""
+    try:
+        worker = DistWorker(sim, worker_id, partitions)
+        conn.send(("ready", worker.handshake()))
+        while True:
+            tag, payload = conn.recv()
+            if tag == "sync":
+                worker.inject(payload["envelopes"])
+                applied = worker.apply_updates(payload["updates"])
+                conn.send(("synced", {
+                    "next_times": worker.next_times(),
+                    "unfinished": worker.unfinished(),
+                    "applied": applied,
+                }))
+            elif tag == "run":
+                conn.send(("ran", worker.run_window(payload)))
+            elif tag == "finalize":
+                conn.send(("report", worker.final_report()))
+                return
+            else:
+                raise ValueError(f"unknown coordinator message {tag!r}")
+    except (EOFError, KeyboardInterrupt):
+        return
+    except BaseException:
+        try:
+            conn.send(("error", traceback.format_exc()))
+        except (BrokenPipeError, OSError):
+            pass

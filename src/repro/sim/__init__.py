@@ -15,6 +15,8 @@ One import gives everything needed to compose and run a simulation:
   :class:`~repro.core.orchestrator.Orchestrator` (picked automatically),
   places components via ``Orchestrator.co_locate`` when
   ``placement="auto"``, and returns a structured :class:`SimReport`.
+  ``run(engine="dist", n_workers=K)`` shards the hosts across real OS
+  worker processes (`repro.dist`) with bit-identical results.
 
 Quickstart::
 

@@ -57,7 +57,7 @@ def _jsonable(value: Any) -> Any:
 @dataclasses.dataclass
 class SimReport:
     status: str                      # "ok" | "deadlock"
-    mode: str                        # "single" | "async" | "barrier"
+    mode: str                        # "single" | "async" | "barrier" | "dist"
     n_hosts: int
     vtime_ns: int                    # simulated horizon
     wall_s: float
@@ -74,6 +74,7 @@ class SimReport:
     progress: Dict[str, Any]             # workload -> named arrays
     scenario: str = "baseline"
     detail: str = ""                     # deadlock detail, if any
+    n_workers: int = 1                   # OS worker processes (dist engine)
 
     def to_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)

@@ -174,23 +174,32 @@ class Simulation:
                     raise KeyError(f"unknown fabric {fabric!r}")
                 return host_hubs[host]
 
-        # scenario: per-task wrappers
+        # scenario: per-task wrappers.  Failure precedence (see tests/
+        # test_scenario_edges.py): an explicit FailTask always wins over
+        # a FailHost expansion regardless of declaration order; two
+        # explicit FailTasks on one program is an error; overlapping
+        # FailHosts on one host keep the earliest death.
         scale: Dict[str, float] = {}
         fails: Dict[str, FailTask] = {}
+        explicit_fails: set = set()
         for inj in self.scenario.injections:
             if isinstance(inj, Straggler):
                 scale[inj.task] = scale.get(inj.task, 1.0) * inj.slowdown
             elif isinstance(inj, FailTask):
-                if inj.task in fails:
+                if inj.task in explicit_fails:
                     raise ValueError(f"two failures for {inj.task!r}")
                 fails[inj.task] = inj
+                explicit_fails.add(inj.task)
             elif isinstance(inj, FailHost):
                 if not 0 <= inj.host < topo.n_hosts:
                     raise ValueError(
                         f"FailHost host {inj.host} outside "
                         f"0..{topo.n_hosts - 1}")
                 for n, h in self.placement.items():
-                    if h == inj.host and n not in fails:
+                    if h != inj.host or n in explicit_fails:
+                        continue
+                    prev = fails.get(n)
+                    if prev is None or inj.at_vtime < prev.at_vtime:
                         fails[n] = FailTask(n, at_vtime=inj.at_vtime)
         unknown = [(t, "Straggler") for t in scale if t not in names] + \
                   [(t, "FailTask") for t in fails if t not in names]
@@ -347,14 +356,45 @@ class Simulation:
             hub.add_hook(hook)
 
     # -- run -----------------------------------------------------------------
-    def run(self, *, on_deadlock: str = "report",
-            max_rounds: Optional[int] = None) -> SimReport:
-        """Execute and return a SimReport.  ``max_rounds`` bounds the
-        engine's dispatch rounds / sync epochs; None keeps each
-        engine's own (generous) default."""
+    def run(self, *, engine: Optional[str] = None, n_workers: int = 2,
+            on_deadlock: str = "report",
+            max_rounds: Optional[int] = None,
+            worker_timeout: float = 120.0) -> SimReport:
+        """Execute and return a SimReport.
+
+        ``engine`` overrides the construction-time ``mode``:
+        ``"single"``/``"async"``/``"barrier"`` pick an in-process
+        engine; ``engine="dist"`` shards the topology's hosts across
+        ``n_workers`` real OS worker processes (`repro.dist`), merging
+        per-worker reports — results are bit-identical to the
+        in-process engines.  ``max_rounds`` bounds the engine's
+        dispatch rounds / sync epochs; None keeps each engine's own
+        (generous) default.  ``worker_timeout`` (dist only) fails a
+        hung worker fast instead of wedging the caller."""
         if on_deadlock not in ("report", "raise"):
             raise ValueError(f"on_deadlock must be 'report' or 'raise', "
                              f"got {on_deadlock!r}")
+        if engine == "dist":
+            from repro.dist import run_dist
+            report = run_dist(
+                self, n_workers=n_workers, timeout=worker_timeout,
+                **({} if max_rounds is None
+                   else {"max_rounds": max_rounds}))
+            if report.status == "deadlock" and on_deadlock == "raise":
+                raise DeadlockError(report.detail
+                                    or "distributed simulation wedged")
+            return report
+        if engine is not None:
+            if engine not in ("single", "async", "barrier"):
+                raise ValueError(f"unknown engine {engine!r}")
+            if engine == "single" and self.topology.n_hosts > 1:
+                raise ValueError("engine='single' needs a 1-host "
+                                 "topology")
+            if self._built and engine != self.mode:
+                raise ValueError(
+                    f"already built with mode={self.mode!r}; "
+                    f"cannot re-run as engine={engine!r}")
+            self.mode = engine
         if not self._built:
             self.build()
         status, detail = "ok", ""

@@ -1,0 +1,12 @@
+import pytest
+
+from engine_harness import assert_engines_agree
+
+
+@pytest.fixture
+def engine_harness():
+    """Cross-engine equivalence harness (see tests/engine_harness.py):
+    call with a fresh-Simulation factory; it runs every applicable
+    engine (single / barrier / async / dist with 1 and K workers) and
+    asserts bit-identical results, returning the per-engine reports."""
+    return assert_engines_agree

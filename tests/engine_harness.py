@@ -1,0 +1,106 @@
+"""Cross-engine equivalence harness.
+
+One reusable correctness bar for every orchestration engine: given a
+factory producing a *fresh* facade :class:`~repro.sim.Simulation`
+(fresh because workloads carry mutable progress arrays), run it under
+every applicable engine — ``single`` (1-host scheduler), ``barrier``,
+``async``, and ``dist`` with both 1 and K OS worker processes — and
+assert bit-identical simulation results:
+
+* ``status`` (a wedged cluster must wedge identically),
+* ``vtime_ns`` / per-task outcomes (final vtimes, states, hosts),
+* message/byte totals and per-workload progress arrays,
+* per-link visibility-slack stats (multi-host engines, which share hub
+  naming; the ``single`` engine materializes per-fabric hubs instead).
+
+Engine-*dependent* counters (sync rounds, proxy syncs, wall clock) are
+deliberately not compared — they are what the engines are allowed to
+trade off.
+
+Usage::
+
+    def test_my_scenario(engine_harness):
+        reports = engine_harness(lambda: Simulation(topo(), wl(), sc()))
+        assert reports["async"].status == "ok"
+
+or directly: ``assert_engines_agree(make_sim)``.
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable, Dict, List, Optional
+
+from repro.sim import Simulation, SimReport
+
+#: fields every engine must agree on, bit-exactly
+CORE_FIELDS = ("status", "n_hosts", "vtime_ns", "messages", "bytes",
+               "tasks", "progress")
+
+HAS_FORK = hasattr(os, "fork")
+
+#: default worker count for the multi-process engine ("K" in the issue)
+DIST_WORKERS = 2
+
+
+def engines_for(n_hosts: int, dist_workers: int = DIST_WORKERS
+                ) -> List[str]:
+    """All engines applicable to a topology.  ``dist:K`` means the
+    multi-process engine with K OS workers (clamped to n_hosts by the
+    coordinator, so 1-host topologies only get ``dist:1``)."""
+    if n_hosts == 1:
+        engines = ["single", "barrier", "async"]
+        dist = ["dist:1"]
+    else:
+        engines = ["barrier", "async"]
+        ks = sorted({1, min(dist_workers, n_hosts)})
+        dist = [f"dist:{k}" for k in ks]
+    return engines + (dist if HAS_FORK else [])
+
+
+def run_engine(make_sim: Callable[[], Simulation], engine: str, *,
+               worker_timeout: float = 60.0) -> SimReport:
+    """Build a fresh Simulation and run it under ``engine``
+    (``"single"``/``"barrier"``/``"async"`` or ``"dist:K"``)."""
+    sim = make_sim()
+    if engine.startswith("dist"):
+        k = int(engine.split(":")[1]) if ":" in engine else DIST_WORKERS
+        return sim.run(engine="dist", n_workers=k,
+                       worker_timeout=worker_timeout)
+    return sim.run(engine=engine)
+
+
+def assert_reports_equal(a: SimReport, b: SimReport, *,
+                         label: str = "") -> None:
+    for field in CORE_FIELDS:
+        av, bv = getattr(a, field), getattr(b, field)
+        assert av == bv, (
+            f"{label}: engines {a.mode}(x{a.n_workers}) vs "
+            f"{b.mode}(x{b.n_workers}) disagree on {field}: "
+            f"{av!r} != {bv!r}")
+    if a.mode != "single" and b.mode != "single":
+        # multi-host engines share hub naming; per-link accounting
+        # (incl. min visibility slack) must replay identically across
+        # process boundaries.
+        assert a.links == b.links, (
+            f"{label}: per-link stats diverge: {a.links} != {b.links}")
+
+
+def assert_engines_agree(
+        make_sim: Callable[[], Simulation], *,
+        engines: Optional[List[str]] = None,
+        dist_workers: int = DIST_WORKERS,
+        worker_timeout: float = 60.0,
+        label: str = "") -> Dict[str, SimReport]:
+    """Run ``make_sim()`` under every engine and assert bit-identical
+    results; returns the per-engine reports for further assertions."""
+    if engines is None:
+        engines = engines_for(make_sim().topology.n_hosts, dist_workers)
+    assert engines, "no engines to compare"
+    reports = {eng: run_engine(make_sim, eng,
+                               worker_timeout=worker_timeout)
+               for eng in engines}
+    base = engines[0]
+    for eng in engines[1:]:
+        assert_reports_equal(reports[base], reports[eng],
+                             label=label or base)
+    return reports

@@ -1,0 +1,136 @@
+"""Unit tests for the multi-process dist engine itself: partitioning,
+report merging, API guards, and fault containment (a crashed or hung
+worker must fail the run fast — never wedge the caller or CI)."""
+import os
+import time
+
+import pytest
+
+from repro.dist import DistWorkerError, partition_hosts
+from repro.sim import (RackRing, Scenario, Simulation, Topology,
+                       Workload)
+from repro.sim.workload import Program
+
+pytestmark = pytest.mark.skipif(not hasattr(os, "fork"),
+                                reason="dist engine needs fork")
+
+
+def _rack_sim(n_iters=30):
+    wl = RackRing(n_racks=2, hosts_per_rack=2, n_iters=n_iters,
+                  skew_bound_ns=2_000_000)
+    return Simulation(Topology.racks(2, 2), wl,
+                      Scenario("imb", wl.stragglers((1.0, 3.0))),
+                      placement=wl.default_placement())
+
+
+# -- partitioning -------------------------------------------------------------
+
+
+def test_partition_hosts_contiguous_and_balanced():
+    assert partition_hosts(4, 2) == [[0, 1], [2, 3]]
+    assert partition_hosts(5, 2) == [[0, 1, 2], [3, 4]]
+    assert partition_hosts(3, 3) == [[0], [1], [2]]
+    assert partition_hosts(1, 1) == [[0]]
+    # every host owned exactly once
+    parts = partition_hosts(7, 3)
+    assert sorted(h for p in parts for h in p) == list(range(7))
+
+
+def test_n_workers_clamped_to_hosts():
+    rep = _rack_sim(n_iters=10).run(engine="dist", n_workers=16,
+                                    worker_timeout=30.0)
+    assert rep.n_workers == 4          # 4 hosts -> at most 4 workers
+    assert rep.status == "ok"
+
+
+# -- merged report ------------------------------------------------------------
+
+
+def test_dist_report_shape():
+    rep = _rack_sim().run(engine="dist", n_workers=2,
+                          worker_timeout=30.0, on_deadlock="raise")
+    assert rep.mode == "dist"
+    assert rep.n_workers == 2
+    assert rep.sync_rounds > 0                  # cross-partition rounds
+    assert rep.cross_host_msgs > 0
+    assert [h.host for h in rep.hosts] == [0, 1, 2, 3]
+    assert all(t["state"] == "done" for t in rep.tasks.values())
+    assert rep.progress["rack"]["iters_done"] == [30] * 4
+    # per-link accounting survived the process boundary: every channel
+    # respected its conservative lookahead (slack >= 0)
+    assert rep.links and all(st["min_slack_ns"] >= 0
+                             for st in rep.links.values())
+    d = rep.to_dict()                           # JSON-able end to end
+    assert d["n_workers"] == 2
+
+
+def test_dist_progress_written_back_to_workloads():
+    wl = RackRing(n_racks=2, hosts_per_rack=2, n_iters=10,
+                  skew_bound_ns=2_000_000)
+    sim = Simulation(Topology.racks(2, 2), wl,
+                     placement=wl.default_placement())
+    sim.run(engine="dist", n_workers=2, worker_timeout=30.0,
+            on_deadlock="raise")
+    # parent-side workload objects see the merged counters, like the
+    # in-process engines
+    assert wl.iters_done.tolist() == [10] * 4
+
+
+# -- API guards ---------------------------------------------------------------
+
+
+def test_dist_rejects_built_simulation():
+    sim = _rack_sim()
+    sim.build()
+    with pytest.raises(ValueError, match="unbuilt"):
+        sim.run(engine="dist", n_workers=2)
+
+
+def test_dist_rejects_bad_worker_count():
+    with pytest.raises(ValueError, match="n_workers"):
+        _rack_sim().run(engine="dist", n_workers=0)
+
+
+def test_unknown_engine_rejected():
+    with pytest.raises(ValueError, match="unknown engine"):
+        _rack_sim().run(engine="warp")
+
+
+# -- fault containment --------------------------------------------------------
+
+
+class _ExplodingWorkload(Workload):
+    """Builds fine in the parent (declarative), detonates when a worker
+    materializes the body."""
+
+    name = "boom"
+
+    def programs(self):
+        def make_body(eps):
+            raise RuntimeError("kaboom at build")
+        return [Program(name="boom0", make_body=make_body)]
+
+
+def test_crashed_worker_fails_fast_with_traceback():
+    sim = Simulation(Topology.single_host(), _ExplodingWorkload())
+    with pytest.raises(DistWorkerError, match="kaboom at build"):
+        sim.run(engine="dist", n_workers=1, worker_timeout=30.0)
+
+
+class _SleepyWorkload(Workload):
+    """Stalls the worker's build long past the coordinator timeout —
+    the moral equivalent of a hung worker process."""
+
+    name = "sleepy"
+
+    def programs(self):
+        time.sleep(5.0)
+        return []
+
+
+def test_hung_worker_times_out_instead_of_wedging():
+    sim = Simulation(Topology.single_host(), _SleepyWorkload())
+    t0 = time.monotonic()
+    with pytest.raises(DistWorkerError, match="hung"):
+        sim.run(engine="dist", n_workers=1, worker_timeout=0.5)
+    assert time.monotonic() - t0 < 4.0          # failed fast, no wedge

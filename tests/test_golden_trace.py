@@ -1,0 +1,107 @@
+"""Golden-trace regression for the example scenario gallery.
+
+``tests/golden/gallery.json`` is the canonical compact SimReport for
+the three scenarios ``examples/cluster_sim.py`` showcases (straggler +
+mid-run host death, mid-run cross-rack link degradation, co-located
+serve+train interference), at CI smoke sizes.  The test re-runs them
+and diffs the *timing-bearing* fields — status, horizon, message and
+byte totals, per-task final vtimes/states, progress arrays — so an
+engine refactor cannot silently shift simulated timings: any shift
+must come with a reviewed golden update.
+
+Engine-dependent counters (sync rounds, proxy syncs, wall clock) are
+deliberately excluded — engines are free to trade those off.
+
+Regenerate after an *intentional* timing change:
+
+    PYTHONPATH=src python tests/test_golden_trace.py --regen
+"""
+import json
+import pathlib
+import sys
+
+import pytest
+
+from repro.core.cluster import ClusterSpec, StepCost
+from repro.sim import (ChipRingTraining, DegradeLink, FailHost,
+                       ModeledServe, RackRing, Scenario, Simulation,
+                       Straggler, Topology)
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "gallery.json"
+
+#: the canonical (deterministic, machine-independent) report subset
+CANONICAL_FIELDS = ("scenario", "status", "n_hosts", "vtime_ns",
+                    "messages", "bytes", "tasks", "progress")
+
+N_ITERS = 40
+N_STEPS = 8
+
+
+def _gallery():
+    def straggler_host_death():
+        wl = RackRing(n_iters=N_ITERS, skew_bound_ns=2_000_000)
+        return Simulation(
+            Topology.racks(2, 2), wl,
+            Scenario("straggler + host 3 dies",
+                     (Straggler("w1", 2.0),
+                      FailHost(host=3, at_vtime=N_ITERS * 4_000))),
+            placement=wl.default_placement())
+
+    def degraded_link():
+        wl = RackRing(n_iters=N_ITERS, skew_bound_ns=2_000_000)
+        return Simulation(
+            Topology.racks(2, 2), wl,
+            Scenario("link 0<->2 8x latency",
+                     (DegradeLink(hosts=(0, 2), latency_factor=8.0,
+                                  from_vtime=N_ITERS * 1_000),)),
+            placement=wl.default_placement())
+
+    def colocated_serve_train():
+        spec = ClusterSpec(n_pods=1, chips_per_pod=4)
+        cost = StepCost(compute_ns=500_000, ici_bytes=1_000_000)
+        return Simulation(
+            Topology.single_host(n_cpus=1),
+            [ChipRingTraining(spec, cost, N_STEPS,
+                              skew_bound_ns=5_000_000),
+             ModeledServe(n_clients=4, n_requests=N_STEPS,
+                          service_ns=500_000)],
+            Scenario("co-located serve + train"),
+            cpu_resource=True)
+
+    return {"straggler_host_death": straggler_host_death,
+            "degraded_link": degraded_link,
+            "colocated_serve_train": colocated_serve_train}
+
+
+def canonical(report) -> dict:
+    d = report.to_dict()
+    return {k: d[k] for k in CANONICAL_FIELDS}
+
+
+def compute_traces() -> dict:
+    return {name: canonical(make().run())
+            for name, make in sorted(_gallery().items())}
+
+
+@pytest.mark.parametrize("name", sorted(_gallery()))
+def test_gallery_matches_golden_trace(name):
+    golden = json.loads(GOLDEN.read_text())
+    assert name in golden, (
+        f"no golden trace for {name!r}; regenerate with "
+        f"PYTHONPATH=src python {__file__} --regen")
+    got = canonical(_gallery()[name]().run())
+    want = golden[name]
+    for field in CANONICAL_FIELDS:
+        assert got[field] == want[field], (
+            f"{name}: {field} shifted from the golden trace "
+            f"(intentional? regenerate with --regen and review the "
+            f"diff)\n got: {got[field]!r}\nwant: {want[field]!r}")
+
+
+if __name__ == "__main__":
+    if "--regen" not in sys.argv:
+        sys.exit(f"usage: PYTHONPATH=src python {sys.argv[0]} --regen")
+    GOLDEN.parent.mkdir(exist_ok=True)
+    GOLDEN.write_text(json.dumps(compute_traces(), indent=1,
+                                 sort_keys=True) + "\n")
+    print(f"wrote {GOLDEN}")

@@ -1,0 +1,173 @@
+"""Scenario-injection edge cases the main suites leave uncovered.
+
+* ``DegradeLink.from_vtime`` landing exactly on a synchronization
+  window boundary (the cross-rack lookahead and its multiples) — the
+  >=-vs-> boundary must bind identically under every engine, or a
+  degraded message could be charged in one engine and not another.
+* ``Interference`` on a host whose victim is a single vtask (no ring
+  partner to hide behind): contention must still couple through the
+  simulated-CPU queue, and without ``cpu_resource`` it must be a
+  no-op on the victim's timing.
+* ``FailHost`` overlapping other failures: an explicit ``FailTask``
+  wins over a FailHost expansion regardless of declaration order, a
+  second FailHost on an already-failed host keeps the earliest death,
+  and two explicit FailTasks on one program stay an error.
+"""
+import pytest
+
+from engine_harness import assert_engines_agree
+from repro.sim import (DegradeLink, FailHost, FailTask, Interference,
+                       RackRing, Scenario, Simulation, Straggler,
+                       Topology, Workload)
+from repro.sim.topology import FabricSpec
+from repro.sim.workload import EndpointSpec, Program
+from repro.core.ipc import LinkSpec
+from repro.core.vtask import Compute
+
+CROSS_LAT = 50_000      # Topology.racks default cross-rack latency
+
+
+def _rack(scenario, n_iters=24):
+    wl = RackRing(n_iters=n_iters, cross_every=4,
+                  skew_bound_ns=2_000_000)
+    return Simulation(Topology.racks(2, 2), wl, scenario,
+                      placement=wl.default_placement())
+
+
+# -- DegradeLink exactly at a window boundary ---------------------------------
+
+
+@pytest.mark.parametrize("from_vtime", [
+    CROSS_LAT,            # exactly one cross-rack lookahead window
+    3 * CROSS_LAT,        # a later window boundary mid-run
+    CROSS_LAT - 1,        # straddling: one below
+    CROSS_LAT + 1,        # straddling: one above
+], ids=["at_window", "at_3rd_window", "one_below", "one_above"])
+def test_degrade_link_at_window_boundary(from_vtime):
+    reports = assert_engines_agree(
+        lambda: _rack(Scenario(
+            "boundary degrade",
+            (DegradeLink(hosts=(0, 2), latency_factor=8.0,
+                         from_vtime=from_vtime),))),
+        label=f"from_vtime={from_vtime}")
+    healthy = assert_engines_agree(lambda: _rack(Scenario()))
+    rep, base = reports["async"], healthy["async"]
+    assert rep.status == base.status == "ok"
+    assert rep.messages == base.messages     # only latency, never loss
+    assert rep.vtime_ns > base.vtime_ns      # the slow link really bit
+
+
+def test_degrade_from_vtime_is_inclusive():
+    """A message sent exactly at ``from_vtime`` is charged (send_vtime
+    >= from_vtime), pinning the boundary semantics."""
+    sim = _rack(Scenario(
+        "degrade from 0",
+        (DegradeLink(hosts=(0, 2), extra_ns=123_456, from_vtime=0),)))
+    degraded = sim.run(on_deadlock="raise")
+    baseline = _rack(Scenario()).run(on_deadlock="raise")
+    assert degraded.vtime_ns > baseline.vtime_ns
+
+
+# -- Interference on a host with a single vtask -------------------------------
+
+
+class _Solo(Workload):
+    """One program, one endpoint, no communication."""
+
+    name = "solo"
+
+    def __init__(self, n_bursts=10, burst_ns=10_000):
+        self.n_bursts = n_bursts
+        self.burst_ns = burst_ns
+
+    def programs(self):
+        def make_body(eps):
+            def body():
+                for _ in range(self.n_bursts):
+                    yield Compute(self.burst_ns)
+            return body()
+        return [Program(name="solo0", make_body=make_body,
+                        endpoints=(EndpointSpec("solo0.ep", "lone"),))]
+
+    def fabrics(self):
+        return [FabricSpec("lone", LinkSpec())]
+
+
+def test_interference_on_single_vtask_host():
+    alone = Simulation(Topology.single_host(n_cpus=1), _Solo(),
+                       cpu_resource=True).run(on_deadlock="raise")
+    noisy = Simulation(
+        Topology.single_host(n_cpus=1), _Solo(),
+        Scenario("noisy", (Interference(co_locate_with="solo0",
+                                        bursts=10, burst_ns=10_000),)),
+        cpu_resource=True).run(on_deadlock="raise")
+    assert alone.tasks["solo0"]["vtime"] == 100_000
+    # the victim has no peers to absorb slack: contention for the one
+    # simulated CPU must surface directly in its final vtime
+    assert noisy.tasks["solo0"]["vtime"] > alone.tasks["solo0"]["vtime"]
+    assert noisy.status == "ok"
+    # and every engine prices the contention identically
+    assert_engines_agree(
+        lambda: Simulation(
+            Topology.single_host(n_cpus=1), _Solo(),
+            Scenario("noisy", (Interference(host=0, bursts=10,
+                                            burst_ns=10_000),)),
+            cpu_resource=True),
+        label="solo interference")
+
+
+def test_interference_without_cpu_resource_is_inert():
+    """Without cpu_resource the load runs on uncontended virtual CPUs:
+    the victim's timing must be untouched."""
+    alone = Simulation(Topology.single_host(n_cpus=1),
+                       _Solo()).run(on_deadlock="raise")
+    noisy = Simulation(
+        Topology.single_host(n_cpus=1), _Solo(),
+        Scenario("noisy", (Interference(co_locate_with="solo0",
+                                        bursts=10, burst_ns=10_000),)),
+    ).run(on_deadlock="raise")
+    assert noisy.tasks["solo0"]["vtime"] == alone.tasks["solo0"]["vtime"]
+
+
+# -- FailHost of an already-failed host ---------------------------------------
+
+
+def _fail_sim(*injections):
+    wl = RackRing(n_iters=20, skew_bound_ns=2_000_000)
+    return Simulation(Topology.racks(2, 2), wl,
+                      Scenario("fails", tuple(injections)),
+                      placement=wl.default_placement())
+
+
+def test_failhost_twice_keeps_earliest_death():
+    twice = _fail_sim(FailHost(host=3, at_vtime=60_000),
+                      FailHost(host=3, at_vtime=10_000)).run()
+    once = _fail_sim(FailHost(host=3, at_vtime=10_000)).run()
+    assert twice.tasks == once.tasks
+    assert twice.status == once.status == "deadlock"
+
+
+@pytest.mark.parametrize("order", ["task_first", "host_first"])
+def test_explicit_failtask_wins_over_failhost_expansion(order):
+    task = FailTask("w3", at_vtime=10_000)
+    host = FailHost(host=3, at_vtime=60_000)
+    injections = (task, host) if order == "task_first" else (host, task)
+    rep = _fail_sim(*injections).run()
+    explicit_only = _fail_sim(task).run()
+    assert rep.tasks == explicit_only.tasks
+
+
+def test_two_explicit_failtasks_still_error():
+    with pytest.raises(ValueError, match="two failures"):
+        _fail_sim(FailTask("w3", at_vtime=10_000),
+                  FailTask("w3", at_vtime=20_000)).build()
+
+
+def test_failhost_on_already_wedged_host_agrees_across_engines():
+    """Host 3 dies early, then 'dies again' later: every engine must
+    report the identical wedged state."""
+    assert_engines_agree(
+        lambda: _fail_sim(FailHost(host=3, at_vtime=10_000),
+                          FailHost(host=3, at_vtime=60_000),
+                          Straggler("w1", 2.0)),
+        label="double host death")

@@ -1,15 +1,23 @@
-"""Facade <-> direct-construction equivalence.
+"""Facade <-> direct-construction and engine <-> engine equivalence.
 
-``build_training_cluster`` and ``build_rack_cluster`` are thin adapters
-over `repro.sim`; these tests hand-wire the same simulations exactly the
-way the pre-facade builders did (Scheduler/Hub/Endpoint/VTask plumbing,
-straggler/failure logic folded into the bodies) and require bit-identical
-results: final vtimes, message counts, and progress arrays — in both
-orchestration modes for the multi-host topology.
+Two bars, both bit-exact:
+
+* ``build_training_cluster`` and ``build_rack_cluster`` are thin
+  adapters over `repro.sim`; these tests hand-wire the same simulations
+  exactly the way the pre-facade builders did (Scheduler/Hub/Endpoint/
+  VTask plumbing, straggler/failure logic folded into the bodies) and
+  require bit-identical results: final vtimes, message counts, and
+  progress arrays.
+* every facade scenario must produce identical results under every
+  orchestration engine — single, barrier, async, and the multi-process
+  dist engine with 1 and K OS workers — via the shared
+  ``tests/engine_harness.py`` (which replaced the hand-rolled pairwise
+  mode comparisons this file used to carry).
 """
 import numpy as np
 import pytest
 
+from engine_harness import assert_engines_agree
 from repro.core.cluster import (ClusterSpec, StepCost, StragglerSpec,
                                 build_rack_cluster,
                                 build_training_cluster)
@@ -17,6 +25,9 @@ from repro.core.ipc import Endpoint, Hub, LinkSpec
 from repro.core.scheduler import Scheduler
 from repro.core.scope import Scope
 from repro.core.vtask import Compute, Recv, Send, State, VTask
+from repro.sim import (ChipRingTraining, DegradeLink, FailHost,
+                       Interference, ModeledServe, RackRing, Scenario,
+                       Simulation, Straggler, Topology)
 
 SPEC = ClusterSpec(n_pods=2, chips_per_pod=4)
 COST = StepCost(compute_ns=50_000, ici_bytes=100_000, dcn_bytes=10_000)
@@ -197,20 +208,21 @@ def test_rack_adapter_bit_identical(mode):
     assert (f_ctx["iters_done"] == d_done).all()
 
 
-def test_rack_adapter_mode_equivalence():
-    """Through the facade, async and barrier engines agree bit-exactly
-    (and async needs fewer synchronization rounds)."""
-    out = {}
-    for mode in ("async", "barrier"):
-        orch, tasks, ctx = build_rack_cluster(
-            n_iters=60, rack_slowdown=(1.0, 3.0),
-            skew_bound_ns=2_000_000, mode=mode)
-        res = orch.run()
-        out[mode] = ([t.vtime for t in tasks], res["messages"],
-                     res["epochs"])
-    assert out["async"][0] == out["barrier"][0]
-    assert out["async"][1] == out["barrier"][1]
-    assert out["async"][2] < out["barrier"][2]
+def test_rack_adapter_mode_equivalence(engine_harness):
+    """The rack workload agrees bit-exactly under every engine —
+    barrier, async, and dist across OS processes — and async needs
+    fewer synchronization rounds than barrier."""
+    def make():
+        wl = RackRing(n_racks=2, hosts_per_rack=2, n_iters=60,
+                      skew_bound_ns=2_000_000)
+        return Simulation(
+            Topology.racks(2, 2), wl,
+            Scenario("imbalanced racks", wl.stragglers((1.0, 3.0))),
+            placement=wl.default_placement())
+
+    reports = engine_harness(make)
+    assert reports["async"].status == "ok"
+    assert reports["async"].sync_rounds < reports["barrier"].sync_rounds
 
 
 def test_sharded_training_links_follow_actual_placement():
@@ -236,16 +248,68 @@ def test_sharded_training_links_follow_actual_placement():
     assert (ctx["done_steps"] == 2).all()
 
 
-def test_sharded_training_mode_equivalence():
-    """chips_per_host > 0 (the fixed knob): chips shard across
-    orchestrated hosts and both engines agree bit-exactly."""
-    out = {}
-    for mode in ("async", "barrier"):
-        eng, tasks, ctx = build_training_cluster(
-            SPEC, COST, 3, skew_bound_ns=200_000,
-            chips_per_host=4, mode=mode)
-        res = eng.run()
-        assert all(t.state == State.DONE for t in tasks)
-        assert (ctx["done_steps"] == 3).all()
-        out[mode] = ([t.vtime for t in tasks], res["messages"])
-    assert out["async"] == out["barrier"]
+def test_sharded_training_mode_equivalence(engine_harness):
+    """Chips sharded across orchestrated hosts (auto placement on the
+    workload traffic matrix): every engine agrees bit-exactly,
+    including dist with the ring split across 2 OS worker processes."""
+    def make():
+        wl = ChipRingTraining(SPEC, COST, 3, skew_bound_ns=200_000)
+        return Simulation(Topology(n_hosts=2, n_cpus=32), wl,
+                          capacity=4)
+
+    reports = engine_harness(make)
+    rep = reports["async"]
+    assert rep.status == "ok"
+    assert all(t["state"] == "done" for t in rep.tasks.values())
+    assert rep.progress["train"]["done_steps"] == [3] * SPEC.n_chips
+
+
+# -- every facade scenario under every engine (the dist engine's
+# -- correctness bar: bit-identical to async/barrier across processes) --------
+
+
+def _rack_sim(scenario=None, n_iters=40):
+    wl = RackRing(n_iters=n_iters, skew_bound_ns=2_000_000)
+    return Simulation(Topology.racks(2, 2), wl,
+                      scenario or Scenario(),
+                      placement=wl.default_placement())
+
+
+FACADE_SCENARIOS = {
+    "baseline": lambda: _rack_sim(),
+    "stragglers": lambda: _rack_sim(
+        Scenario("stragglers", (Straggler("w1", 2.0),
+                                Straggler("w3", 3.0)))),
+    "fail_task_wedge": lambda: _rack_sim(
+        Scenario("w2 dies", (FailHost(host=2, at_vtime=60_000),))),
+    "degrade_link": lambda: _rack_sim(
+        Scenario("slow 0<->2", (DegradeLink(hosts=(0, 2),
+                                            latency_factor=8.0,
+                                            from_vtime=40_000),))),
+    "degrade_fabric": lambda: _rack_sim(
+        Scenario("slow hub", (DegradeLink(fabric="hub",
+                                          extra_ns=5_000),))),
+    "interference": lambda: (lambda wl: Simulation(
+        Topology.single_host(n_cpus=1), wl,
+        Scenario("noisy", (Interference(co_locate_with="chip0",
+                                        bursts=20, burst_ns=50_000),)),
+        cpu_resource=True))(
+            ChipRingTraining(ClusterSpec(n_pods=1, chips_per_pod=4),
+                             StepCost(compute_ns=100_000,
+                                      ici_bytes=100_000), 4,
+                             skew_bound_ns=2_000_000)),
+    "multi_workload": lambda: Simulation(
+        Topology.single_host(n_cpus=1),
+        [ChipRingTraining(ClusterSpec(n_pods=1, chips_per_pod=4),
+                          StepCost(compute_ns=500_000,
+                                   ici_bytes=1_000_000), 6,
+                          skew_bound_ns=5_000_000),
+         ModeledServe(n_clients=2, n_requests=6,
+                      service_ns=500_000)],
+        cpu_resource=True),
+}
+
+
+@pytest.mark.parametrize("name", sorted(FACADE_SCENARIOS))
+def test_all_engines_agree_on_facade_scenarios(name, engine_harness):
+    engine_harness(FACADE_SCENARIOS[name], label=name)
