@@ -10,18 +10,26 @@ intra-rack + slow cross-rack links) run under ``mode="barrier"``
 conservative PDES), and the multi-process ``dist`` engine with 1 and K
 OS worker processes.  All engines must produce identical simulation
 results; the bench records each engine's synchronization cost (rounds,
-proxy syncs) and, for dist, the worker count, cross-partition sync
-rounds, and the 1-vs-K wall-clock speedup.
+proxy syncs, per-round overhead) and dispatch throughput.  Two regimes
+track the hot path PR-over-PR:
 
-Outputs:
-  results/orchestrator_bench.json — engine head-to-head summary (legacy)
+* **rack** (4 hosts, fine-grained) — coordination-overhead-dominated;
+  this is where the coalesced binary dist transport shows up.
+* **large** (64 hosts / 2048 sharded chips) — scale regime for the
+  indexed scheduler + incremental LBTS; barrier is skipped here (its
+  per-min-latency epochs are exactly the cost the async engine
+  removes).
+
+Outputs (single writer: everything is derived from the root schema):
   BENCH_cluster.json              — compact aggregates-only summary
-                                    (schema BENCH_cluster/v2, documented
+                                    (schema BENCH_cluster/v3, documented
                                     in README.md), committed at the repo
                                     root so the perf trajectory stays
-                                    reviewable PR-over-PR (results/ is
-                                    gitignored; v1 checked in ~2500
-                                    lines of full SimReports)
+                                    reviewable PR-over-PR
+  results/cluster_bench.json      — derived: the root schema's
+                                    ``training`` rows
+  results/orchestrator_bench.json — derived: the root schema's
+                                    ``multihost`` table
 """
 from __future__ import annotations
 
@@ -39,7 +47,10 @@ HAS_FORK = hasattr(os, "fork")
 
 
 def _aggregate(report) -> dict:
-    """The compact BENCH_cluster/v2 per-run record: aggregates only."""
+    """The compact BENCH_cluster/v3 per-run record: aggregates only,
+    plus the two hot-path-overhead derived columns (per-sync-round
+    wall overhead and dispatch throughput)."""
+    dispatches = sum(h.dispatches for h in report.hosts)
     return {
         "status": report.status,
         "n_hosts": report.n_hosts,
@@ -51,7 +62,11 @@ def _aggregate(report) -> dict:
         "bytes": report.bytes,
         "vtime_ns": report.vtime_ns,
         "wall_s": round(report.wall_s, 4),
-        "dispatches": sum(h.dispatches for h in report.hosts),
+        "dispatches": dispatches,
+        "round_overhead_us": round(
+            report.wall_s / max(report.sync_rounds, 1) * 1e6, 2),
+        "dispatch_per_s": round(
+            dispatches / max(report.wall_s, 1e-9)),
         "max_window_ns": report.max_window_ns,
         "max_proxy_staleness_ns": report.max_proxy_staleness_ns,
     }
@@ -86,20 +101,26 @@ def simulate_multihost(engine: str, *, n_workers: int = DIST_WORKERS,
     return row
 
 
-def main_multihost() -> dict:
-    rows = {
-        "barrier": simulate_multihost("barrier"),
-        "async": simulate_multihost("async"),
-    }
-    if HAS_FORK:
-        rows["dist_1w"] = simulate_multihost("dist", n_workers=1)
-        rows[f"dist_{DIST_WORKERS}w"] = simulate_multihost(
-            "dist", n_workers=DIST_WORKERS)
+def _engine_rows(engines, **kwargs) -> dict:
+    rows = {}
+    for name, engine, n_workers in engines:
+        rows[name] = simulate_multihost(engine, n_workers=n_workers,
+                                        **kwargs)
     vt = {k: r["final_vtimes"] for k, r in rows.items()}
-    assert all(v == vt["barrier"] for v in vt.values()), \
+    base = next(iter(rows))
+    assert all(v == vt[base] for v in vt.values()), \
         "engines disagree on simulation results"
-    assert all(r["messages"] == rows["barrier"]["messages"]
+    assert all(r["messages"] == rows[base]["messages"]
                for r in rows.values())
+    return rows
+
+
+def main_multihost() -> dict:
+    engines = [("barrier", "barrier", 1), ("async", "async", 1)]
+    if HAS_FORK:
+        engines += [("dist_1w", "dist", 1),
+                    (f"dist_{DIST_WORKERS}w", "dist", DIST_WORKERS)]
+    rows = _engine_rows(engines)
     b, a = rows["barrier"], rows["async"]
     assert a["sync_rounds"] < b["sync_rounds"], \
         (a["sync_rounds"], b["sync_rounds"])
@@ -107,35 +128,52 @@ def main_multihost() -> dict:
           f"2us intra-rack / 50us cross-rack, imbalanced racks:")
     print(f"{'engine':>10s} {'workers':>7s} {'rounds':>7s} "
           f"{'proxy_syncs':>12s} {'msgs':>6s} {'sim_ms':>7s} "
-          f"{'wall_s':>7s}")
+          f"{'wall_s':>7s} {'us/round':>8s}")
     for name, r in rows.items():
         print(f"{r['engine']:>10s} {r['n_workers']:7d} "
               f"{r['sync_rounds']:7d} {r['proxy_syncs']:12d} "
               f"{r['messages']:6d} {r['vtime_ns']/1e6:7.2f} "
-              f"{r['wall_s']:7.3f}")
+              f"{r['wall_s']:7.3f} {r['round_overhead_us']:8.1f}")
     print(f"async speedup: {b['sync_rounds']/a['sync_rounds']:.2f}x fewer "
           f"rounds, {b['proxy_syncs']/max(a['proxy_syncs'],1):.0f}x fewer "
           f"proxy syncs, identical results")
     if HAS_FORK:
-        d1, dk = rows["dist_1w"], rows[f"dist_{DIST_WORKERS}w"]
-        print(f"dist {DIST_WORKERS} workers: {dk['sync_rounds']} "
-              f"cross-partition sync rounds, wall-clock "
-              f"{d1['wall_s']/max(dk['wall_s'], 1e-9):.2f}x vs 1 worker, "
-              f"identical results")
-    out = ROOT / "results" / "orchestrator_bench.json"
-    out.parent.mkdir(exist_ok=True)
-    out.write_text(json.dumps(
-        {k: {kk: vv for kk, vv in r.items() if kk != "final_vtimes"}
-         for k, r in rows.items()}, indent=2))
+        d1 = rows["dist_1w"]
+        print(f"dist transport: dist_1w wall "
+              f"{d1['wall_s']/max(a['wall_s'], 1e-9):.2f}x in-process "
+              f"async (acceptance bar: <= 3x), identical results")
+    return rows
+
+
+def main_multihost_large(n_racks: int = 16, hosts_per_rack: int = 4,
+                         n_iters: int = 60) -> dict:
+    """The >=64-host regime: scale stress for the indexed scheduler,
+    incremental LBTS bounds, and quiescent-host skipping.  Barrier is
+    deliberately absent — one epoch per global min-latency window at 64
+    hosts is the overhead the async engine exists to remove."""
+    engines = [("async", "async", 1)]
+    if HAS_FORK:
+        engines += [("dist_1w", "dist", 1),
+                    ("dist_4w", "dist", 4)]
+    rows = _engine_rows(engines, n_racks=n_racks,
+                        hosts_per_rack=hosts_per_rack, n_iters=n_iters,
+                        rack_slowdown=(1.0, 3.0) * (n_racks // 2))
+    a = rows["async"]
+    print(f"large regime: {a['n_hosts']} hosts, "
+          f"{a['dispatches']} dispatches:")
+    for name, r in rows.items():
+        print(f"{name:>10s} x{r['n_workers']}: {r['sync_rounds']} "
+              f"rounds, wall {r['wall_s']:.3f}s, "
+              f"{r['dispatch_per_s']} disp/s")
     return rows
 
 
 def simulate_sharded_dist(*, n_chips: int = 512, n_hosts: int = 4,
                           n_steps: int = 3) -> dict:
-    """The dist engine's parallelism case: a 512-chip training ring
-    sharded across hosts (heavy per-window dispatch work, few sync
-    rounds), run with 1 vs K OS worker processes and checked
-    bit-identical to the in-process async engine."""
+    """The dist engine's parallelism case: a training ring sharded
+    across hosts (heavy per-window dispatch work, few sync rounds), run
+    with 1 vs K OS worker processes and checked bit-identical to the
+    in-process async engine."""
     from repro.core.cluster import ClusterSpec, StepCost
     from repro.sim import ChipRingTraining, Simulation, Topology
 
@@ -162,6 +200,9 @@ def simulate_sharded_dist(*, n_chips: int = 512, n_hosts: int = 4,
         "cross_partition_sync_rounds": dk.sync_rounds,
         "cross_host_msgs": dk.cross_host_msgs,
         "vtime_ns": dk.vtime_ns,
+        "dispatch_per_s": round(
+            sum(h.dispatches for h in dk.hosts)
+            / max(dk.wall_s, 1e-9)),
         "wall_s_1_worker": round(d1.wall_s, 4),
         "wall_s_k_workers": round(dk.wall_s, 4),
         "wall_speedup_vs_1_worker": round(
@@ -208,56 +249,75 @@ def simulate(arch: str = "qwen3_4b", shape: str = "train_4k",
     }
 
 
+def write_bench(bench: dict) -> None:
+    """Single writer for every bench artifact: the root
+    ``BENCH_cluster.json`` is the source schema; everything under
+    ``results/`` (gitignored) is derived from it, so the two can never
+    drift."""
+    (ROOT / "BENCH_cluster.json").write_text(
+        json.dumps(bench, indent=2) + "\n")
+    results = ROOT / "results"
+    results.mkdir(exist_ok=True)
+    (results / "cluster_bench.json").write_text(
+        json.dumps(bench["training"], indent=2))
+    (results / "orchestrator_bench.json").write_text(
+        json.dumps(bench["multihost"], indent=2))
+
+
 def main():
     multihost = main_multihost()
+    large = main_multihost_large()
     sharded = simulate_sharded_dist() if HAS_FORK else None
-    if sharded:
-        print(f"dist sharded {sharded['n_chips']}-chip ring, "
-              f"{sharded['n_hosts']} hosts: "
-              f"{sharded['cross_partition_sync_rounds']} sync rounds, "
-              f"{sharded['workers']} workers "
-              f"{sharded['wall_speedup_vs_1_worker']:.2f}x vs 1 worker "
-              f"(async {sharded['wall_s_async']:.2f}s, "
-              f"dist {sharded['wall_s_k_workers']:.2f}s)")
+    sharded_large = (simulate_sharded_dist(n_chips=2048, n_hosts=16)
+                     if HAS_FORK else None)
+    for tag, s in (("sharded", sharded), ("large", sharded_large)):
+        if s:
+            print(f"dist {tag} {s['n_chips']}-chip ring, "
+                  f"{s['n_hosts']} hosts: "
+                  f"{s['cross_partition_sync_rounds']} sync rounds, "
+                  f"{s['workers']} workers "
+                  f"{s['wall_speedup_vs_1_worker']:.2f}x vs 1 worker "
+                  f"(async {s['wall_s_async']:.2f}s, "
+                  f"dist {s['wall_s_k_workers']:.2f}s)")
     print()
     rows = []
     for arch in ("qwen3_4b", "olmoe_1b_7b"):
         rows.append(simulate(arch, straggler=False))
         rows.append(simulate(arch, straggler=True))
-    out = ROOT / "results" / "cluster_bench.json"
-    out.parent.mkdir(exist_ok=True)
-    out.write_text(json.dumps(rows, indent=2))
     # compact machine-readable perf trajectory (schema in README.md):
     # aggregates only, so PR-over-PR diffs stay reviewable
+    def strip(rs):
+        return {name: {k: v for k, v in r.items()
+                       if k != "final_vtimes"}
+                for name, r in rs.items()}
     bench = {
-        "schema": "BENCH_cluster/v2",
-        "multihost": {
-            name: {k: v for k, v in r.items() if k != "final_vtimes"}
-            for name, r in multihost.items()},
+        "schema": "BENCH_cluster/v3",
+        "multihost": strip(multihost),
+        "multihost_large": strip(large),
         "training": rows,
     }
     if HAS_FORK:
-        d1 = multihost["dist_1w"]
-        dk = multihost[f"dist_{DIST_WORKERS}w"]
+        a, d1 = multihost["async"], multihost["dist_1w"]
         bench["dist"] = {
             # fine-grained rack workload: sync-round overhead dominates
-            # (few dispatches per window), so 1-vs-K wall clock shows
-            # the protocol cost...
+            # (few dispatches per window), so dist-vs-async wall clock
+            # tracks the per-round transport cost...
             "rack": {
-                "n_hosts": dk["n_hosts"],
+                "n_hosts": d1["n_hosts"],
                 "workers": DIST_WORKERS,
-                "cross_partition_sync_rounds": dk["sync_rounds"],
-                "wall_speedup_vs_1_worker": round(
-                    d1["wall_s"] / max(dk["wall_s"], 1e-9), 3),
-                "bit_identical_to_async": dk["final_vtimes"]
-                == multihost["async"]["final_vtimes"],
+                "cross_partition_sync_rounds":
+                    multihost[f"dist_{DIST_WORKERS}w"]["sync_rounds"],
+                "wall_dist_1w_vs_async": round(
+                    d1["wall_s"] / max(a["wall_s"], 1e-9), 3),
+                "bit_identical_to_async": d1["final_vtimes"]
+                == a["final_vtimes"],
             },
-            # ...while the sharded 512-chip ring (heavy per-window
-            # dispatch work, few rounds) is where extra OS workers pay.
+            # ...while the sharded training rings (heavy per-window
+            # dispatch work, few rounds) are where extra OS workers pay.
             "sharded": sharded,
+            "sharded_large": sharded_large,
         }
-    (ROOT / "BENCH_cluster.json").write_text(
-        json.dumps(bench, indent=2) + "\n")
+    write_bench(bench)
     print(f"{'arch':16s} {'strag':>6s} {'sim ms/step':>12s} "
           f"{'analytic':>9s} {'ratio':>6s} {'msgs':>8s} {'wall_s':>7s}")
     for r in rows:

@@ -61,13 +61,26 @@ class Endpoint:
         self.owner = owner
         self.hub: Optional["Hub"] = None
         self._queue: List[Tuple[Tuple[int, int], Message]] = []
+        self._waiters: List[Any] = []    # vtasks blocked on this endpoint
 
     # receiver side --------------------------------------------------------
     def deliver(self, msg: Message) -> None:
         heapq.heappush(self._queue, (msg.sort_key(), msg))
+        head = self._queue[0][1].visibility_time
         if self.owner is not None:
-            head = self._queue[0][1].visibility_time
             self.owner.inbox_hint = head
+        if self._waiters:
+            # index the (possibly new) head visibility for receivers that
+            # blocked here, so the scheduler's wake pass finds them
+            # without scanning; prune waiters that have moved on
+            keep = []
+            for t in self._waiters:
+                r = t._wait_reason
+                if r is not None and r[0] == "recv" and r[1] is self:
+                    keep.append(t)
+                    if t.sched is not None:
+                        t.sched._wait_push(t, head)
+            self._waiters = keep
 
     def head_visibility(self) -> Optional[int]:
         return self._queue[0][1].visibility_time if self._queue else None

@@ -66,7 +66,9 @@ description, picks the engine automatically, and returns a structured
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
 
 from repro.core.ipc import Hub, LinkSpec
 from repro.core.scheduler import DeadlockError, Scheduler
@@ -74,6 +76,9 @@ from repro.core.scope import Scope
 from repro.core.vtask import State, VTask
 
 _INF = 2**62
+#: internal unreachable sentinel for closure distances; half of _INF so
+#: int64 min-plus sums (CAP + CAP, _INF + CAP) can never overflow
+_CAP = _INF >> 1
 
 
 def lbts_bounds(next_times: Dict[int, Optional[int]],
@@ -86,9 +91,14 @@ def lbts_bounds(next_times: Dict[int, Optional[int]],
         lb[h] = min(local_next(h), min_p lb[p] + lookahead(p, h))
 
     over the host graph; converges in <= n_hosts passes because all
-    lookaheads are positive.  Shared by the in-process async engine and
-    the multi-process dist coordinator (repro.dist) so both compute the
-    exact same conservative clock bounds."""
+    lookaheads are positive.
+
+    This is the *reference* implementation; the hot paths (in-process
+    async engine and the dist coordinator) use :class:`LBTSSolver`,
+    which computes the identical fixpoint through a precomputed
+    min-plus closure of the static lookahead graph plus an
+    unchanged-input cache (``tests/test_orchestrator_async.py`` pins
+    solver == reference)."""
     lb = {h: (_INF if t is None else t) for h, t in next_times.items()}
     for _ in range(len(lb)):
         changed = False
@@ -114,6 +124,81 @@ def earliest_input_time(host: int, lb: Dict[int, int],
     times = [lb[src] + la for (src, dst), la in lookahead.items()
              if dst == host and lb[src] < _INF]
     return min(times) if times else None
+
+
+class LBTSSolver:
+    """Incremental LBTS/EIT computation over a *static* lookahead graph.
+
+    Channels are pinned at peering time, so the graph never changes
+    during a run; the fixpoint ``lb[h] = min_s next[s] + dist(s, h)``
+    (with ``dist`` the min-plus closure of the lookahead edges,
+    ``dist(h, h) = 0``) can therefore be evaluated as one vectorized
+    min-plus product per round instead of an O(E x n) relaxation — and
+    skipped entirely when no host's next-event time changed since the
+    last round (the common case once parts of the cluster go quiescent).
+    Produces bit-identical values to :func:`lbts_bounds` /
+    :func:`earliest_input_time`."""
+
+    def __init__(self, lookahead: Dict[Tuple[int, int], int],
+                 hosts: Iterable[int]):
+        self.hosts: List[int] = sorted(hosts)
+        self._idx = {h: i for i, h in enumerate(self.hosts)}
+        n = len(self.hosts)
+        dist = np.full((n, n), _CAP, dtype=np.int64)
+        np.fill_diagonal(dist, 0)
+        #: direct in-edges per host, for EIT against a mutating lb dict
+        self.in_edges: Dict[int, List[Tuple[int, int]]] = {
+            h: [] for h in self.hosts}
+        for (src, dst), la in lookahead.items():
+            i, j = self._idx[src], self._idx[dst]
+            dist[i, j] = min(dist[i, j], la)
+            self.in_edges[dst].append((src, la))
+        # min-plus closure, Floyd-Warshall with one vectorized (n, n)
+        # relaxation per pivot: O(n^2) memory (a cubed temporary would
+        # cost n^3 * 8 bytes at the host counts this exists for).
+        # Entries stay <= _CAP by the running minimum, so pivot sums
+        # never exceed 2 * _CAP < 2**63 — no int64 overflow.
+        for k in range(n):
+            np.minimum(dist, dist[:, k, None] + dist[None, k, :],
+                       out=dist)
+        self._dist = dist
+        self._next_cache: Optional[Dict[int, Optional[int]]] = None
+        self._lb_vec: Optional[np.ndarray] = None
+
+    def bounds(self, next_times: Dict[int, Optional[int]]
+               ) -> Dict[int, int]:
+        """LBTS clock bounds for all hosts; recomputed only when some
+        host's conservative next-event time changed.  Returns a fresh
+        dict (callers mutate it mid-round)."""
+        if next_times != self._next_cache:
+            n = len(self.hosts)
+            vec = np.fromiter(
+                (_INF if next_times[h] is None else next_times[h]
+                 for h in self.hosts), dtype=np.int64, count=n)
+            # mask unreachable pairs before the min — a finite source
+            # plus the _CAP sentinel must stay "no bound", not become a
+            # huge-but-finite one (sums stay < 2**63, so no overflow)
+            contrib = np.where(self._dist >= _CAP, _INF,
+                               vec[:, None] + self._dist)
+            lb = np.minimum(contrib.min(axis=0), _INF)
+            self._next_cache = dict(next_times)
+            self._lb_vec = lb
+        return {h: int(self._lb_vec[i])
+                for i, h in enumerate(self.hosts)}
+
+    def eit(self, host: int, lb: Dict[int, int]) -> Optional[int]:
+        """Earliest-input time of ``host`` against the (possibly
+        mid-round-refreshed) lb dict: O(in-degree), identical to
+        :func:`earliest_input_time`."""
+        best = None
+        for src, la in self.in_edges[host]:
+            v = lb[src]
+            if v >= _INF:
+                continue
+            c = v + la
+            if best is None or c < best:
+                best = c
+        return best
 
 
 class ProxyVTask(VTask):
@@ -158,7 +243,7 @@ class ProxyVTask(VTask):
             self.vtime = remote_v
             self.state = self._mirror_state()
             for s in self.scopes:
-                s.invalidate()
+                s.notify(self)
         return changed
 
 
@@ -188,7 +273,9 @@ class Orchestrator:
         self._host_proxies: Dict[int, List[ProxyVTask]] = {}
         self.global_scopes: List[Scope] = []
         self.stats = {"epochs": 0, "proxy_syncs": 0, "cross_host_msgs": 0,
-                      "max_proxy_staleness_ns": 0, "max_window_ns": 0}
+                      "max_proxy_staleness_ns": 0, "max_window_ns": 0,
+                      "quiescent_skips": 0}
+        self._solver: Optional[LBTSSolver] = None   # built on first run
 
     # -- wiring -----------------------------------------------------------------
     def host(self, h: int) -> Scheduler:
@@ -202,6 +289,7 @@ class Orchestrator:
         existing channel is re-pinned to the new link."""
         self.host_links[(a, b)] = link
         self.host_links[(b, a)] = link
+        self._solver = None             # lookahead graph changed
         ha, hb = self.hubs.get(a), self.hubs.get(b)
         if ha is not None and hb is not None:
             ha.peer_with(hb, link)
@@ -213,6 +301,7 @@ class Orchestrator:
         for other_host, other in self.hubs.items():
             hub.peer_with(other, self._link_for(host, other_host))
         self.hubs[host] = hub
+        self._solver = None             # lookahead graph changed
         return hub
 
     def global_scope(self, name: str, members: List[VTask],
@@ -301,10 +390,7 @@ class Orchestrator:
                 self.stats["max_proxy_staleness_ns"], p.max_staleness_ns)
 
     def unfinished(self) -> bool:
-        return any(
-            t.state in (State.RUNNABLE, State.BLOCKED)
-            for h in self.hosts.values() for t in h.tasks
-            if t.kind != "proxy")
+        return any(h.has_unfinished() for h in self.hosts.values())
 
     def global_now(self) -> int:
         """Conservative next-event time across hosts (PDES semantics:
@@ -371,24 +457,39 @@ class Orchestrator:
             self.stats["proxy_syncs"] += 1
         return changed
 
-    def _run_async(self, max_rounds: int) -> None:
+    def _run_async(self, max_rounds: int,
+                   raise_on_exhaust: bool = True) -> bool:
+        """Run the per-link-lookahead engine; returns True when the
+        simulation finished, False when ``max_rounds`` elapsed first
+        (only with ``raise_on_exhaust=False`` — the dist sole-worker
+        path runs in bounded chunks to heartbeat its coordinator)."""
         order = sorted(self.hosts)
         # channels are pinned at peering time (Hub.peer_with), so the
-        # lookahead map is static for the whole run — build it once
-        # (the dist coordinator captures it once at handshake for the
-        # same reason) instead of per _eit call.
-        la = self.lookahead_map()
+        # lookahead map is static for the whole run — build the solver's
+        # min-plus closure once (the dist coordinator captures the map
+        # once at handshake for the same reason).  Cached across chunked
+        # re-entry.
+        solver = self._solver
+        if solver is None:
+            solver = self._solver = LBTSSolver(self.lookahead_map(),
+                                               order)
         for _ in range(max_rounds):
             if not self.unfinished():
-                return
+                return True
             self.stats["epochs"] += 1
             progressed = False
-            lb = lbts_bounds(self._next_times(), la)
+            lb = solver.bounds(self._next_times())
             for h in order:
                 sched = self.hosts[h]
-                bound = earliest_input_time(h, lb, la)
+                bound = solver.eit(h, lb)
                 if self._lazy_sync(h, bound):
                     progressed = True
+                elif sched.quiescent_below(bound):
+                    # provably a no-op window: nothing runnable and no
+                    # pending wake-up below this host's bound, and no
+                    # proxy sync fell due — skip the host entirely.
+                    self.stats["quiescent_skips"] += 1
+                    continue
                 if bound is not None:
                     start = sched.next_time()
                     if start is not None and bound > start:
@@ -417,12 +518,15 @@ class Orchestrator:
                 if self.unfinished():
                     self._note_staleness()
                     raise DeadlockError("distributed simulation wedged")
-                return
+                return True
         if self.unfinished():
+            if not raise_on_exhaust:
+                return False
             self._note_staleness()
             raise DeadlockError(
                 f"async engine exceeded {max_rounds} rounds "
                 f"without finishing")
+        return True
 
     # -- barrier engine (legacy, kept for head-to-head comparison) ---------------
     def _run_barrier(self, max_epochs: int) -> None:

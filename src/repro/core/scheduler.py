@@ -18,18 +18,37 @@ Deterministic in-process realization of LiveStack's scheduler:
   vtime to the wake-up's causal timestamp (message visibility time /
   event fire time) — deterministic regardless of how the orchestrator
   windows execution, so every engine produces identical timings.
-* If nothing is runnable, the scheduler performs an idle jump to the
-  earliest pending visibility/event time (a halted CPU observing elapsed
-  time on resume).
+
+Hot-path structure (this is the per-round inner loop of every engine,
+so none of it may scan the full task list):
+
+* ``_runq`` — a lazy-invalidation min-heap of ``(vtime, id)`` over
+  runnable non-proxy vtasks.  Entries go stale when a vtask blocks,
+  finishes, or advances; stale entries are discarded at pop time
+  (``_runq_v``/``_runq_on`` track the single live entry per vtask).
+  Dispatch pops the heap in exactly the ``(vtime, id)`` order the old
+  full sort produced, so dispatch order — and therefore every result —
+  is bit-identical to the scan-based scheduler.
+* ``_wake_q`` / ``_next_q`` — the visibility/event index: blocked
+  vtasks with a known pending wake-up (message visibility or event fire
+  time) are heap-indexed by that time (``_wake_q``) and by their
+  conservative next-event time ``max(vtime, visibility)`` (``_next_q``).
+  Wake passes drain only the entries below the window gate and
+  ``next_time()`` peeks both heads, instead of scanning every task and
+  every inbox per round.  Index entries are *hints*: ``_try_wake``
+  revalidates everything, so stale entries are harmless.
+* Scope minima are maintained incrementally by the scopes themselves
+  (see ``repro.core.scope``): O(log n) heap pushes on vtime changes
+  replace the O(members) recompute per invalidation.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import heapq
+from typing import List, Optional
 
 from repro.core import scope as scope_mod
 from repro.core.cells import CellManager
-from repro.core.ipc import Endpoint, Message
 from repro.core.vtask import (Await, Compute, LiveCall, Recv, Send, State,
                               VTask, Yield)
 
@@ -39,7 +58,6 @@ class SchedStats:
     rounds: int = 0
     dispatches: int = 0
     live_calls: int = 0
-    idle_jumps: int = 0
     preemptions: int = 0
     skew_stalls: int = 0          # eligible-check rejections
     max_skew_seen: int = 0
@@ -76,20 +94,102 @@ class Scheduler:
         self.cpu_resource = cpu_resource
         self._cpu_free_at: List[int] = [0] * n_cpus
         self.stats = SchedStats()
-        self._inbound: Dict[int, Message] = {}    # task.id -> pending recv
         # strict window bound for the round being dispatched (async
         # engine); read by _exec_action so Recv/Await cannot idle-advance
         # a task past it.  Carried on the scheduler, not the _dispatch
         # signature, so tests may still wrap _dispatch(task).
         self._strict_gate: Optional[int] = None
+        # hot-path indexes (see module docstring)
+        self._runq: List[tuple] = []       # (vtime, id, task), lazy
+        self._wake_q: List[tuple] = []     # (wake time, id, task), lazy
+        self._next_q: List[tuple] = []     # (max(vtime, wake), id, task)
+        self._n_blocked = 0                # blocked non-proxy tasks
+        self._n_unfinished = 0             # runnable+blocked non-proxy
 
     # -- registration --------------------------------------------------------
     def spawn(self, task: VTask) -> VTask:
         task.host = self.host
+        task.sched = self
         self.tasks.append(task)
+        if task.kind != "proxy":
+            if task.state in (State.RUNNABLE, State.BLOCKED):
+                self._n_unfinished += 1
+            if task.state == State.BLOCKED:
+                self._n_blocked += 1
+        self._runq_push(task)
         for s in task.scopes:
-            s.invalidate()
+            s.notify(task)
         return task
+
+    # -- runnable index ------------------------------------------------------
+    def _runq_push(self, task: VTask) -> None:
+        """Ensure a live heap entry exists for a runnable non-proxy task
+        at its current vtime (no-op otherwise; duplicates are avoided by
+        tracking the one live entry per task)."""
+        if task.state is not State.RUNNABLE or task.kind == "proxy":
+            return
+        if task._runq_on and task._runq_v == task.vtime:
+            return
+        task._runq_on = True
+        task._runq_v = task.vtime
+        heapq.heappush(self._runq, (task.vtime, task.id, task))
+
+    def _runq_head(self) -> bool:
+        """Drop stale heap heads; True iff a valid head remains."""
+        q = self._runq
+        while q:
+            v, _, t = q[0]
+            if t._runq_on and t._runq_v == v:
+                if t.state is State.RUNNABLE and t.vtime == v:
+                    return True
+                t._runq_on = False      # the live entry went stale
+            heapq.heappop(q)
+        return False
+
+    def _runq_min(self) -> Optional[int]:
+        return self._runq[0][0] if self._runq_head() else None
+
+    # -- visibility/event index ----------------------------------------------
+    def _wait_push(self, task: VTask, wake_time: Optional[int]) -> None:
+        """Index a blocked task's pending wake-up (message visibility /
+        event fire time).  Called at block time, by Endpoint.deliver for
+        messages arriving while blocked, and by Event.fire."""
+        if wake_time is None or task.kind == "proxy":
+            return
+        if task._wait_on and task._wait_v is not None \
+                and task._wait_v <= wake_time:
+            return                  # an earlier-or-equal entry is live
+        task._wait_on = True
+        task._wait_v = wake_time
+        heapq.heappush(self._wake_q, (wake_time, task.id, task))
+        heapq.heappush(self._next_q,
+                       (max(task.vtime, wake_time), task.id, task))
+
+    def _wake_min(self) -> Optional[int]:
+        """Earliest indexed pending wake-up (conservative: may be lower
+        than the true wake time for a re-blocked task, never higher)."""
+        q = self._wake_q
+        while q:
+            v, _, t = q[0]
+            if t.state is State.BLOCKED and t._wait_reason is not None:
+                return v
+            heapq.heappop(q)
+        return None
+
+    def _blocked_next_min(self) -> Optional[int]:
+        """Min over blocked tasks of max(vtime, pending wake time) —
+        the blocked contribution to next_time()."""
+        q = self._next_q
+        while q:
+            k, _, t = q[0]
+            if t.state is State.BLOCKED and t._wait_reason is not None:
+                kind, obj = t._wait_reason
+                v = (obj.head_visibility() if kind == "recv"
+                     else obj.set_at_vtime)
+                if v is not None and max(t.vtime, v) == k:
+                    return k
+            heapq.heappop(q)
+        return None
 
     # -- introspection -------------------------------------------------------
     def runnable(self) -> List[VTask]:
@@ -98,6 +198,10 @@ class Scheduler:
     def unfinished(self) -> List[VTask]:
         return [t for t in self.tasks
                 if t.state in (State.RUNNABLE, State.BLOCKED)]
+
+    def has_unfinished(self) -> bool:
+        """O(1) liveness check over non-proxy tasks."""
+        return self._n_unfinished > 0
 
     def now(self) -> int:
         """Host-level simulated time = min over unfinished vtasks."""
@@ -109,20 +213,26 @@ class Scheduler:
         """Conservative next-event time: min over runnable real vtasks'
         vtime and blocked vtasks' pending visibility.  Blocked vtasks with
         nothing pending cannot act (or send) until woken, so they do not
-        hold the horizon back (classic PDES next-event semantics)."""
-        times = []
-        for t in self.tasks:
-            if t.kind == "proxy":
-                continue
-            if t.state == State.RUNNABLE:
-                times.append(t.vtime)
-            elif t.state == State.BLOCKED and t._wait_reason:
-                kind, obj = t._wait_reason
-                v = (obj.head_visibility() if kind == "recv"
-                     else obj.set_at_vtime)
-                if v is not None:
-                    times.append(max(t.vtime, v))
-        return min(times) if times else None
+        hold the horizon back (classic PDES next-event semantics).
+        O(1) amortized via the runnable + visibility indexes."""
+        rv = self._runq_min()
+        bv = self._blocked_next_min()
+        if rv is None:
+            return bv
+        if bv is None:
+            return rv
+        return min(rv, bv)
+
+    def quiescent_below(self, bound: Optional[int]) -> bool:
+        """True iff a strict ``run_until(bound)`` is provably a no-op:
+        nothing runnable and no pending wake-up lies below the bound
+        (``bound=None`` checks for any work at all).  The orchestrator
+        uses this to skip idle hosts without calling into them."""
+        rv = self._runq_min()
+        if rv is not None and (bound is None or rv < bound):
+            return False
+        wv = self._wake_min()
+        return wv is None or (bound is not None and wv >= bound)
 
     def horizon(self) -> int:
         """Completed simulated time = max vtime reached."""
@@ -140,33 +250,35 @@ class Scheduler:
         if reason is None:
             return False
         kind, obj = reason
-        if kind == "recv":
-            ep: Endpoint = obj
-            vis = ep.head_visibility()
-            if vis is None:
-                return False
-            if bound is not None and vis >= bound:
-                self.stats.gate_deferrals += 1
-                return False
-            scope_mod.wake(task, at_vtime=vis)   # idle-until-interrupt
-            task._wait_reason = None
-            self.stats.wakes += 1
-            return True
-        if kind == "event":
-            if obj.set_at_vtime is None:
-                return False
-            if bound is not None and obj.set_at_vtime >= bound:
-                self.stats.gate_deferrals += 1
-                return False
-            scope_mod.wake(task, at_vtime=obj.set_at_vtime)
-            task._wait_reason = None
-            self.stats.wakes += 1
-            return True
-        return False
+        vis = (obj.head_visibility() if kind == "recv"
+               else obj.set_at_vtime)
+        if vis is None:
+            return False
+        if bound is not None and vis >= bound:
+            self.stats.gate_deferrals += 1
+            return False
+        scope_mod.wake(task, at_vtime=vis)   # idle-until-interrupt
+        task._wait_reason = None
+        task._wait_on = False
+        task._wait_v = None
+        self.stats.wakes += 1
+        return True
 
     def _wake_pass(self, bound: Optional[int] = None) -> None:
-        for t in self.tasks:
-            if t.state == State.BLOCKED:
+        """Wake every blocked task whose indexed pending wake-up lies
+        below ``bound`` (everything pending when ``bound`` is None).
+        Drains only the index entries below the gate — entries at or
+        past it stay for future, larger windows."""
+        q = self._wake_q
+        while q:
+            v, _, t = q[0]
+            if bound is not None and v >= bound:
+                break
+            heapq.heappop(q)
+            if t._wait_v == v:
+                t._wait_on = False      # live entry consumed
+                t._wait_v = None
+            if t.state is State.BLOCKED:
                 self._try_wake(t, bound=bound)
 
     # -- one action -----------------------------------------------------------
@@ -174,8 +286,6 @@ class Scheduler:
         if delta_ns < 0:
             raise ValueError("vtime cannot go backwards")
         task.vtime += delta_ns
-        for s in task.scopes:
-            s.invalidate()
 
     def _advance_on_cpu(self, task: VTask, delta_ns: int) -> None:
         """Advance vtime by a compute span, queuing for a simulated CPU
@@ -188,6 +298,11 @@ class Scheduler:
         end = start + delta_ns
         self._cpu_free_at[cpu] = end
         self._advance(task, end - task.vtime)
+
+    def _block(self, task: VTask, reason) -> None:
+        task.state = State.BLOCKED
+        task._wait_reason = reason
+        self._n_blocked += 1
 
     def _exec_action(self, task: VTask, action):
         """Returns value to send into the generator on next dispatch.
@@ -206,9 +321,8 @@ class Scheduler:
                     task.zero_progress += 1
                     if task.zero_progress >= self.preempt_after:
                         task.state = State.FAULTY
+                        self._n_unfinished -= 1
                         self.stats.preemptions += 1
-                        for s in task.scopes:
-                            s.invalidate()
                 else:
                     task.zero_progress = 0
             return None
@@ -247,10 +361,10 @@ class Scheduler:
                 return msg
             if vis is not None:
                 self.stats.gate_deferrals += 1
-            task.state = State.BLOCKED
-            task._wait_reason = ("recv", action.endpoint)
-            for s in task.scopes:
-                s.invalidate()
+            self._block(task, ("recv", action.endpoint))
+            if task not in action.endpoint._waiters:
+                action.endpoint._waiters.append(task)
+            self._wait_push(task, vis)
             return None
         if isinstance(action, Await):
             ev = action.event
@@ -260,10 +374,10 @@ class Scheduler:
                 return None
             if ev.set_at_vtime is not None:
                 self.stats.gate_deferrals += 1
-            task.state = State.BLOCKED
-            task._wait_reason = ("event", ev)
-            for s in task.scopes:
-                s.invalidate()
+            self._block(task, ("event", ev))
+            if task not in ev.waiters:
+                ev.waiters.append(task)
+            self._wait_push(task, ev.set_at_vtime)
             return None
         if isinstance(action, Yield):
             return None
@@ -291,8 +405,7 @@ class Scheduler:
             except StopIteration as stop:
                 task.state = State.DONE
                 task.result = getattr(stop, "value", None)
-                for s in task.scopes:
-                    s.invalidate()
+                self._n_unfinished -= 1
                 return
         value = self._exec_action(task, action)
         if task.state == State.BLOCKED:
@@ -309,67 +422,63 @@ class Scheduler:
 
         ``until_vtime`` is the conservative epoch gate: only vtasks with
         vtime < until_vtime may dispatch this round.  With ``strict``
-        (async engine), the gate also applies to idle-jump wake-ups: a
-        blocked vtask whose pending visibility lies at or past the gate
-        stays blocked, because a not-yet-sent remote message could still
+        (async engine), the gate also applies to wake-ups: a blocked
+        vtask whose pending visibility lies at or past the gate stays
+        blocked, because a not-yet-sent remote message could still
         become visible *earlier* — waking past the gate would let the
         vtask miss it."""
         self.stats.rounds += 1
         self._wake_pass(until_vtime if strict else None)
-        all_runnable = [t for t in self.runnable() if t.kind != "proxy"]
-        runnable = all_runnable
-        if until_vtime is not None:
-            runnable = [t for t in runnable if t.vtime < until_vtime]
-            if not runnable and all_runnable:
-                return False            # everything is past the epoch gate
-        if not runnable:
+        q = self._runq
+        if not self._runq_head():
+            # nothing runnable; the wake pass above already drained
+            # every pending wake-up below the gate
+            if self._n_blocked == 0:
+                return False            # all done/faulty
+            if self.distributed or (strict and until_vtime is not None):
+                # a remote host may still deliver; yield to orchestrator
+                return False
             blocked = [t for t in self.tasks
                        if t.state == State.BLOCKED and t.kind != "proxy"]
-            if not blocked:
-                return False
-            # idle jump: earliest pending visibility/event
-            horizon = None
-            wakeable = []
-            for t in blocked:
-                kind, obj = t._wait_reason or (None, None)
-                if kind == "recv":
-                    v = obj.head_visibility()
-                elif kind == "event":
-                    v = obj.set_at_vtime
-                else:
-                    v = None
-                if v is None:
-                    continue
-                if strict and until_vtime is not None and v >= until_vtime:
-                    self.stats.gate_deferrals += 1
-                    continue
-                wakeable.append(t)
-                horizon = v if horizon is None else min(horizon, v)
-            if horizon is None:
-                if self.distributed or (strict and until_vtime is not None):
-                    # a remote host may still deliver; yield to orchestrator
-                    return False
-                raise DeadlockError(
-                    f"host {self.host}: all tasks blocked with no pending "
-                    f"messages/events: {blocked}")
-            self.stats.idle_jumps += 1
-            for t in wakeable:
-                self._try_wake(t)
-            return True
-        # bounded-skew eligibility, lowest-vtime first; ineligible vtasks
-        # are rescheduled (counted as skew stalls) until peers catch up
-        runnable.sort(key=lambda t: (t.vtime, t.id))
-        eligible = []
-        for t in runnable:
+            raise DeadlockError(
+                f"host {self.host}: all tasks blocked with no pending "
+                f"messages/events: {blocked}")
+        if until_vtime is not None and q[0][0] >= until_vtime:
+            return False                # everything is past the epoch gate
+        # bounded-skew eligibility, lowest-(vtime, id) first — the heap
+        # pops in exactly the order the old full sort produced.
+        # Ineligible vtasks are re-queued (counted as skew stalls) until
+        # peers catch up.
+        picked: List[VTask] = []
+        stalled: List[VTask] = []
+        while len(picked) < self.n_cpus:
+            if not self._runq_head():
+                break
+            v, _, t = q[0]
+            if until_vtime is not None and v >= until_vtime:
+                break
+            heapq.heappop(q)
+            t._runq_on = False
             if scope_mod.all_eligible(t):
-                eligible.append(t)
+                picked.append(t)
             else:
                 self.stats.skew_stalls += 1
-        picked = eligible[: self.n_cpus]
+                stalled.append(t)
+        for t in stalled:
+            self._runq_push(t)
         if not picked:
             # every dispatchable vtask is skew-bound behind a proxy (remote)
             # vtime: yield to the orchestrator for a proxy sync.
             return False
+        if len(picked) == self.n_cpus and self._runq_head():
+            # visibility probe: the next-in-line vtask is examined even
+            # though the CPUs are full, so a skew-held vtask still shows
+            # up in the stall counter (the old full scan counted every
+            # ineligible runnable per round).
+            v, _, t = q[0]
+            if (until_vtime is None or v < until_vtime) \
+                    and not scope_mod.all_eligible(t):
+                self.stats.skew_stalls += 1
         self._strict_gate = until_vtime if strict else None
         try:
             for t in picked:
@@ -378,7 +487,13 @@ class Scheduler:
                     if sv >= 0:
                         self.stats.max_skew_seen = max(
                             self.stats.max_skew_seen, t.vtime - sv)
+                v_before = t.vtime
                 self._dispatch(t)
+                if t.state is State.RUNNABLE:
+                    self._runq_push(t)
+                    if t.vtime != v_before:
+                        for s in t.scopes:
+                            s.notify(t)
         finally:
             self._strict_gate = None
         return True

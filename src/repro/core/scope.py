@@ -4,7 +4,7 @@ A scope groups vtasks that must progress together within a bounded
 virtual-time skew.  A vtask may belong to multiple scopes; dispatch
 eligibility requires the bound to hold in *every* scope.
 
-scope.vtime (the cached minimum) is computed over RUNNABLE members only —
+scope.vtime (the member minimum) is computed over RUNNABLE members only —
 blocked vtasks are excluded (they cannot make progress and would pin the
 minimum, deadlocking e.g. VM boot where halted vCPUs lag the bootstrap
 vCPU).  On wake, a previously blocked vtask's vtime is forwarded to the
@@ -14,10 +14,20 @@ Forwarding must depend on nothing else: the scope's current member
 minimum is a function of the orchestration engine's window schedule, so
 forwarding to it would give every engine (single / barrier / async /
 multi-process dist) different timings for the same simulation.
+
+The minimum is tracked *incrementally*: each scope keeps a lazy
+min-heap of ``(vtime, id)`` member entries.  ``notify(task)`` pushes a
+fresh entry in O(log n) whenever a member's vtime changes or it becomes
+runnable (vtime is monotone, so stale entries are always <= the true
+value and surface at the head, where the query discards them); blocked/
+finished/removed members need no bookkeeping at all — their entries
+fail the validity check at query time.  This replaces the O(members)
+recompute per invalidation that dominated large-scope scheduling.
 """
 from __future__ import annotations
 
-from typing import Iterable, List, Optional
+import heapq
+from typing import List, Optional, Set, Tuple
 
 from repro.core.vtask import State, VTask
 
@@ -27,32 +37,45 @@ class Scope:
         self.name = name
         self.skew_bound_ns = int(skew_bound_ns)
         self.members: List[VTask] = []
-        self._cached_vtime: Optional[int] = None
+        self._member_set: Set[VTask] = set()
+        self._heap: List[Tuple[int, int, VTask]] = []
 
     def add(self, task: VTask) -> None:
-        if task not in self.members:
+        if task not in self._member_set:
             self.members.append(task)
+            self._member_set.add(task)
             if self not in task.scopes:
                 task.scopes.append(self)
-        self.invalidate()
+            self.notify(task)
 
     def remove(self, task: VTask) -> None:
-        if task in self.members:
+        if task in self._member_set:
             self.members.remove(task)
+            self._member_set.discard(task)
         if self in task.scopes:
             task.scopes.remove(self)
-        self.invalidate()
 
-    def invalidate(self) -> None:
-        self._cached_vtime = None
+    def notify(self, task: VTask) -> None:
+        """Index a member's current (vtime, state) in O(log n).  Must be
+        called whenever a member's vtime changes while runnable or it
+        transitions to RUNNABLE; all other transitions are handled
+        lazily (stale entries fail validation at query time)."""
+        if task.state is State.RUNNABLE:
+            heapq.heappush(self._heap, (task.vtime, task.id, task))
 
     @property
     def vtime(self) -> int:
-        """Cached min vtime over runnable members (+inf if none)."""
-        if self._cached_vtime is None:
-            vs = [t.vtime for t in self.members if t.state == State.RUNNABLE]
-            self._cached_vtime = min(vs) if vs else -1
-        return self._cached_vtime
+        """Min vtime over runnable members (-1 if none), amortized O(1):
+        pop stale heads (blocked/done/removed members, superseded
+        vtimes) until a live entry — the true minimum — surfaces."""
+        h = self._heap
+        while h:
+            v, _, t = h[0]
+            if (t.state is State.RUNNABLE and t.vtime == v
+                    and t in self._member_set):
+                return v
+            heapq.heappop(h)
+        return -1
 
     def eligible(self, task: VTask) -> bool:
         sv = self.vtime
@@ -68,6 +91,7 @@ class Scope:
         its pin bound."""
         return task.vtime + self.skew_bound_ns
 
+
 def all_eligible(task: VTask) -> bool:
     return all(s.eligible(task) for s in task.scopes)
 
@@ -82,8 +106,13 @@ def wake(task: VTask, at_vtime: Optional[int] = None) -> None:
     and therefore simulation results — engine-dependent (the
     single/barrier/async/dist equivalence bar in
     ``tests/engine_harness.py`` is what enforces this)."""
+    if task.sched is not None and task.state is State.BLOCKED \
+            and task.kind != "proxy":
+        task.sched._n_blocked -= 1
     if at_vtime is not None:
         task.vtime = max(task.vtime, at_vtime)
     task.state = State.RUNNABLE
     for s in task.scopes:
-        s.invalidate()
+        s.notify(task)
+    if task.sched is not None:
+        task.sched._runq_push(task)

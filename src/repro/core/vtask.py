@@ -89,6 +89,14 @@ class Event:
 
     def fire(self, vtime: int) -> None:
         self.set_at_vtime = vtime
+        # index the fire time for blocked waiters so the scheduler's
+        # wake pass finds them without scanning (visibility/event index)
+        for t in self.waiters:
+            r = t._wait_reason
+            if (r is not None and r[0] == "event" and r[1] is self
+                    and t.sched is not None):
+                t.sched._wait_push(t, vtime)
+        self.waiters.clear()
 
 
 # --------------------------- vtask ------------------------------------------
@@ -120,6 +128,13 @@ class VTask:
                       "msgs_tx": 0, "blocked_rounds": 0}
         self._wait_reason: Optional[Tuple[str, Any]] = None
         self._pending_action: Any = None   # blocked action awaiting retry
+        # scheduler back-reference + index bookkeeping (set by spawn;
+        # see repro.core.scheduler's runnable + visibility indexes)
+        self.sched: Any = None
+        self._runq_on = False              # a live runnable-heap entry exists
+        self._runq_v = -1                  # vtime of that entry
+        self._wait_on = False              # a live wake-index entry exists
+        self._wait_v: Optional[int] = None  # its wake time
 
     # -- scope membership --
     def join(self, scope) -> "VTask":

@@ -6,31 +6,41 @@ worker derives a bit-identical replica, see ``repro.dist.worker``),
 partitions the topology's hosts contiguously across them, and then runs
 the same conservative per-link-lookahead clock protocol as
 ``Orchestrator(mode="async")`` — except that host windows execute in
-real parallel processes and the LBTS null-message bounds travel over
-pipes instead of shared memory.
+real parallel processes and the LBTS clock bounds travel over pipes.
 
-Round structure (one "cross-partition sync round" = one A+B pair):
+Round structure — one coalesced round-trip per round:
 
-* **Phase A (sync)** — deliver cross-partition message envelopes
-  produced last round and broadcast (vtime, state) updates for every
-  proxied task; workers reply with per-host conservative next-event
-  times and an unfinished flag.
-* **Phase B (run)** — the coordinator computes LBTS clock bounds and
-  per-host earliest-input times (:func:`repro.core.orchestrator.
-  lbts_bounds` / :func:`~repro.core.orchestrator.earliest_input_time`,
-  the exact functions the in-process async engine uses) and tells each
-  worker to drain its hosts strictly below those bounds.  Workers run
-  concurrently and reply with outboxes + progress counters.
+* The coordinator computes LBTS clock bounds and per-host
+  earliest-input times with the same :class:`~repro.core.orchestrator.
+  LBTSSolver` the in-process async engine uses, from each host's
+  last-reported conservative next-event time *capped by the forwarded
+  send vtime of any envelope being delivered this round* (a delivered
+  message can wake its receiver no earlier than that, so the capped
+  bounds are always conservative — see ``repro.dist.worker``).
+* One packed binary ``STEP`` frame per worker carries that worker's
+  bounds + replica-state deltas + inbound envelope records; the worker
+  injects, runs its windows, and answers with one ``REPLY`` frame
+  (``repro.dist.frames``).  The old protocol paid two pickled
+  round-trips per round (phase A sync + phase B run) — coalescing and
+  struct-packing is most of the dist engine's wall-clock win.
+* **Adaptive skip**: a worker whose last reply showed no activity is
+  not stepped at all while it has no inbound envelopes, no relevant
+  replica updates, and unchanged bounds — re-running it would provably
+  be a no-op, so its cached clock state is reused.
+* **Sole-worker fast path**: with one worker there are no
+  cross-partition channels, so the worker free-runs the in-process
+  async engine (``run_all``) instead of paying a round-trip per window.
 
 Deadlock mirrors the in-process engines: a full round with no
-dispatches, wakes, proxy/replica changes, or in-flight messages while
-work remains is a wedged simulation — reported as
+dispatches, wakes, replica changes, or delivered envelopes while work
+remains is a wedged simulation — reported as
 ``SimReport.status == "deadlock"``, not a crash.
 
 Fault containment: workers are daemon processes, every coordinator
-receive has a timeout, and shutdown always terminates stragglers — a
-hung or crashed worker fails the run fast instead of wedging the
-caller (or CI).
+receive has a timeout (``Simulation.run(worker_timeout=...)`` plumbs
+straight through to the per-reply ``poll``), and shutdown always
+terminates stragglers — a hung or crashed worker fails the run fast
+instead of wedging the caller (or CI).
 
 Caveat: workers are *forked* (workload closures are not picklable), so
 a parent that already started non-fork-safe threads — notably JAX's
@@ -46,11 +56,12 @@ from __future__ import annotations
 
 import multiprocessing
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
-from repro.core.orchestrator import earliest_input_time, lbts_bounds
+from repro.core.orchestrator import LBTSSolver
+from repro.dist import frames
 from repro.sim.report import SimReport, _jsonable
 
 
@@ -90,6 +101,7 @@ class DistCoordinator:
         self.timeout = timeout
         self.rounds = 0
         self.envelopes_routed = 0
+        self.worker_skips = 0        # adaptive skips of idle workers
         self._conns: List[Any] = []
         self._procs: List[Any] = []
 
@@ -130,37 +142,42 @@ class DistCoordinator:
                 proc.kill()
                 proc.join(timeout=5.0)
 
-    def _send(self, w: int, tag: str, payload: Any) -> None:
+    def _send(self, w: int, frame: bytes) -> None:
         try:
-            self._conns[w].send((tag, payload))
+            self._conns[w].send_bytes(frame)
         except (BrokenPipeError, OSError) as e:
             raise DistWorkerError(f"dist worker {w} died: {e}") from e
 
-    def _recv(self, w: int, expect: str) -> Any:
+    def _recv(self, w: int, expect) -> Any:
+        """Receive one frame (timeout-guarded).  ``expect`` is a pickle
+        sub-tag or ``"reply"`` for the binary REPLY frame; a tuple of
+        sub-tags returns ``(sub_tag, payload)`` instead."""
         conn = self._conns[w]
         if not conn.poll(self.timeout):
             raise DistWorkerError(
                 f"dist worker {w} hung (> {self.timeout}s without a "
                 f"{expect!r} reply)")
         try:
-            tag, payload = conn.recv()
+            frame = conn.recv_bytes()
         except EOFError as e:
             raise DistWorkerError(f"dist worker {w} died mid-run") from e
-        if tag == "error":
+        tag = frame[:1]
+        if tag == frames.TAG_PICKLE:
+            sub, payload = frames.unpack_pickle(frame)
+            if sub == "error":
+                raise DistWorkerError(
+                    f"dist worker {w} failed:\n{payload}")
+            if isinstance(expect, tuple):
+                if sub in expect:
+                    return sub, payload
+            elif sub == expect:
+                return payload
             raise DistWorkerError(
-                f"dist worker {w} failed:\n{payload}")
-        if tag != expect:
-            raise DistWorkerError(
-                f"dist worker {w}: expected {expect!r}, got {tag!r}")
-        return payload
-
-    def _broadcast(self, tag: str, payloads: List[Any],
-                   expect: str) -> List[Any]:
-        """Send to every worker first, then collect — phase execution
-        overlaps across worker processes (the actual parallelism)."""
-        for w in range(self.n_workers):
-            self._send(w, tag, payloads[w])
-        return [self._recv(w, expect) for w in range(self.n_workers)]
+                f"dist worker {w}: expected {expect!r}, got {sub!r}")
+        if tag == frames.TAG_REPLY and expect == "reply":
+            return frames.Reply(frame)
+        raise DistWorkerError(
+            f"dist worker {w}: expected {expect!r}, got frame {tag!r}")
 
     # -- the run -------------------------------------------------------------
     def run(self) -> SimReport:
@@ -169,57 +186,115 @@ class DistCoordinator:
         try:
             readies = [self._recv(w, "ready")
                        for w in range(self.n_workers)]
-            lookahead = readies[0]["lookahead"]
-            hub_host = readies[0]["hub_host"]
-            status, detail = "ok", ""
-            pending: List[List] = [[] for _ in range(self.n_workers)]
-            updates: Dict[str, tuple] = {}
-            for _ in range(self.max_rounds):
-                synced = self._broadcast(
-                    "sync",
-                    [{"envelopes": pending[w], "updates": updates}
-                     for w in range(self.n_workers)],
-                    "synced")
-                pending = [[] for _ in range(self.n_workers)]
-                if not any(s["unfinished"] for s in synced):
-                    break
-                next_times: Dict[int, Optional[int]] = {}
-                for s in synced:
-                    next_times.update(s["next_times"])
-                lb = lbts_bounds(next_times, lookahead)
-                bounds = {h: earliest_input_time(h, lb, lookahead)
-                          for h in next_times}
-                rans = self._broadcast(
-                    "run",
-                    [{h: bounds[h] for h in self.partitions[w]}
-                     for w in range(self.n_workers)],
-                    "ran")
-                self.rounds += 1
-                progressed = any(s["applied"] for s in synced)
-                updates = {}
-                for r in rans:
-                    progressed = (progressed or r["dispatches"] > 0
-                                  or r["wakes"] > 0 or r["lazy_changed"]
-                                  or bool(r["outbox"]))
-                    updates.update(r["task_states"])
-                    for env in r["outbox"]:
-                        dst = self.owner[hub_host[env[1]]]
-                        pending[dst].append(env)
-                        self.envelopes_routed += 1
-                if not progressed:
-                    status = "deadlock"
-                    detail = "distributed simulation wedged"
-                    break
+            if self.n_workers == 1:
+                status, detail = self._run_sole_worker()
             else:
-                status = "deadlock"
-                detail = (f"dist engine exceeded {self.max_rounds} "
-                          f"rounds without finishing")
-            reports = self._broadcast(
-                "finalize", [None] * self.n_workers, "report")
+                status, detail = self._run_rounds(readies)
+            for w in range(self.n_workers):
+                self._send(w, frames.pack_pickle("finalize", None))
+            reports = [self._recv(w, "report")
+                       for w in range(self.n_workers)]
             wall = time.perf_counter() - t0
             return self._merge(status, detail, wall, reports)
         finally:
             self._shutdown()
+
+    def _run_sole_worker(self) -> Tuple[str, str]:
+        """One worker owns every host: no cross-partition channels, so
+        it free-runs the async engine.  The worker heartbeats a "tick"
+        every bounded chunk of rounds, so ``timeout`` stays a per-reply
+        liveness bound — a long healthy run keeps ticking, a hung
+        worker still fails fast."""
+        self._send(0, frames.pack_pickle("run_all", self.max_rounds))
+        while True:
+            msg = self._recv(0, ("tick", "ran_all"))
+            if msg[0] == "ran_all":
+                ran = msg[1]
+                self.rounds = ran["rounds"]
+                return ran["status"], ran["detail"]
+
+    def _run_rounds(self, readies: List[Dict[str, Any]]
+                    ) -> Tuple[str, str]:
+        # wire tables are identical across workers (bit-identical
+        # replicas): take worker 0's
+        lookahead = readies[0]["lookahead"]
+        hub_names = readies[0]["hub_names"]
+        hub_host = readies[0]["hub_host"]
+        task_names = readies[0]["task_names"]
+        task_idx = {n: i for i, n in enumerate(task_names)}
+        hub_idx_host = [hub_host[n] for n in hub_names]
+        interests: List[Set[int]] = [
+            {task_idx[n] for n in r["imports"]} for r in readies]
+        next_times: Dict[int, Optional[int]] = {}
+        unfinished: List[bool] = []
+        for r in readies:
+            next_times.update(r["next_times"])
+            unfinished.append(r["unfinished"])
+        solver = LBTSSolver(lookahead, next_times)
+        W = range(self.n_workers)
+        pending: List[List[bytes]] = [[] for _ in W]
+        caps: Dict[int, int] = {}   # host -> min in-flight send vtime
+        updates: Dict[int, Tuple[int, int]] = {}
+        last_bounds: List[Optional[Dict[int, Optional[int]]]] = \
+            [None for _ in W]
+        idle = [False for _ in W]
+        for _ in range(self.max_rounds):
+            if not any(unfinished) and not any(pending):
+                # note the pending check: a message can still be in
+                # flight after every task finished (e.g. a send to a
+                # task that died without receiving) — it must be
+                # delivered and replayed anyway or message/byte totals
+                # and link stats diverge from the in-process engines
+                return "ok", ""
+            eff_next = dict(next_times)
+            for h, cap in caps.items():
+                cur = eff_next[h]
+                eff_next[h] = cap if cur is None else min(cur, cap)
+            lb = solver.bounds(eff_next)
+            bounds = {h: solver.eit(h, lb) for h in next_times}
+            stepped: List[int] = []
+            delivered = False
+            for w in W:
+                wb = {h: bounds[h] for h in self.partitions[w]}
+                w_up = {i: v for i, v in updates.items()
+                        if i in interests[w]}
+                if (idle[w] and not pending[w] and not w_up
+                        and wb == last_bounds[w]):
+                    # provably a no-op round for this worker: no new
+                    # inputs and an unchanged window
+                    self.worker_skips += 1
+                    continue
+                delivered = delivered or bool(pending[w])
+                self._send(w, frames.pack_step(wb, w_up, pending[w]))
+                pending[w] = []
+                last_bounds[w] = wb
+                stepped.append(w)
+            if not stepped:
+                return "deadlock", "distributed simulation wedged"
+            self.rounds += 1
+            updates = {}
+            caps = {}
+            progressed = delivered
+            for w in stepped:
+                r = self._recv(w, "reply")
+                unfinished[w] = r.unfinished
+                active = bool(r.applied or r.dispatches or r.wakes
+                              or r.lazy_changed or r.envelopes)
+                idle[w] = not active
+                progressed = progressed or active
+                next_times.update(r.next_times)
+                updates.update(r.task_states)
+                for dst_hub, send_vt, record in r.envelopes:
+                    host = hub_idx_host[dst_hub]
+                    pending[self.owner[host]].append(record)
+                    prev = caps.get(host)
+                    caps[host] = (send_vt if prev is None
+                                  else min(prev, send_vt))
+                    self.envelopes_routed += 1
+            if not progressed:
+                return "deadlock", "distributed simulation wedged"
+        return "deadlock", (f"dist engine exceeded {self.max_rounds} "
+                            f"rounds without finishing")
 
     # -- report merging ------------------------------------------------------
     def _merge_progress(self, worker_progress: List[Dict[str, dict]]

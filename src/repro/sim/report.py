@@ -22,7 +22,6 @@ class HostReport:
     host: int
     dispatches: int
     rounds: int
-    idle_jumps: int
     skew_stalls: int
     max_skew_seen: int
     gate_deferrals: int
@@ -33,7 +32,7 @@ class HostReport:
     @classmethod
     def from_sched(cls, host: int, stats) -> "HostReport":
         return cls(host=host, dispatches=stats.dispatches,
-                   rounds=stats.rounds, idle_jumps=stats.idle_jumps,
+                   rounds=stats.rounds,
                    skew_stalls=stats.skew_stalls,
                    max_skew_seen=stats.max_skew_seen,
                    gate_deferrals=stats.gate_deferrals,

@@ -8,16 +8,24 @@ wedge the cluster (a failure mid-ring must deadlock identically
 everywhere).  On failure hypothesis shrinks to a minimal divergent
 scenario, which is exactly the repro an engine bug needs.
 
+The dist engines are pinned *explicitly* into the matrix (not just
+inherited from ``engines_for``'s defaults): the multi-process transport
+— envelope replay, binary frames, coalesced rounds, adaptive worker
+skipping — is exactly the code a refactor is most likely to break in a
+way unit tests miss, so every fuzz draw must exercise it.
+
 Skipped when hypothesis is absent (it is in requirements-dev.txt but
 not baked into the runtime image).
 """
+import os
+
 import pytest
 
 hyp = pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings  # noqa: E402
 from hypothesis import strategies as st  # noqa: E402
 
-from engine_harness import assert_engines_agree  # noqa: E402
+from engine_harness import assert_engines_agree, engines_for  # noqa: E402
 from repro.core.ipc import LinkSpec  # noqa: E402
 from repro.sim import (DegradeLink, FailTask, RackRing,  # noqa: E402
                        Scenario, Simulation, Straggler, Topology)
@@ -84,4 +92,12 @@ def test_random_scenarios_agree_across_engines(data):
         return Simulation(topo, wl, scenario,
                           placement=wl.default_placement())
 
-    assert_engines_agree(make, label=f"{n_racks}x{per_rack} racks")
+    engines = engines_for(n_workers, dist_workers=2)
+    if hasattr(os, "fork"):
+        # transport refactors must be fuzzed, not just unit-tested:
+        # the multi-process engine (1 worker fast path + K-worker
+        # coalesced rounds) is required in every draw's matrix
+        assert "dist:1" in engines, engines
+        assert n_workers == 1 or f"dist:{min(2, n_workers)}" in engines
+    assert_engines_agree(make, engines=engines,
+                         label=f"{n_racks}x{per_rack} racks")

@@ -9,8 +9,16 @@ byte totals, per-task final vtimes/states, progress arrays — so an
 engine refactor cannot silently shift simulated timings: any shift
 must come with a reviewed golden update.
 
-Engine-dependent counters (sync rounds, proxy syncs, wall clock) are
-deliberately excluded — engines are free to trade those off.
+Each golden also pins a ``perf`` record — the default engine's
+``sync_rounds`` and ``proxy_syncs`` aggregates — so a
+coordination-overhead regression (an engine suddenly needing more
+rounds or proxy refreshes for the same simulation) fails CI instead of
+relying on wall-clock eyeballing.  These are deterministic for a fixed
+engine; they are allowed to *change* with a reviewed ``--regen``, just
+never silently.
+
+Other engine-dependent counters (wall clock, window sizes) stay
+excluded — engines are free to trade those off.
 
 Regenerate after an *intentional* timing change:
 
@@ -75,7 +83,10 @@ def _gallery():
 
 def canonical(report) -> dict:
     d = report.to_dict()
-    return {k: d[k] for k in CANONICAL_FIELDS}
+    out = {k: d[k] for k in CANONICAL_FIELDS}
+    out["perf"] = {"sync_rounds": report.sync_rounds,
+                   "proxy_syncs": report.proxy_syncs}
+    return out
 
 
 def compute_traces() -> dict:
@@ -91,7 +102,7 @@ def test_gallery_matches_golden_trace(name):
         f"PYTHONPATH=src python {__file__} --regen")
     got = canonical(_gallery()[name]().run())
     want = golden[name]
-    for field in CANONICAL_FIELDS:
+    for field in CANONICAL_FIELDS + ("perf",):
         assert got[field] == want[field], (
             f"{name}: {field} shifted from the golden trace "
             f"(intentional? regenerate with --regen and review the "

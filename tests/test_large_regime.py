@@ -1,0 +1,44 @@
+"""Cross-engine equivalence at the >=64-host regime.
+
+The large regime is what the hot-path overhaul exists for — an indexed
+scheduler core, incremental LBTS bounds, quiescent-host skipping, and
+the batched binary dist transport all only matter when there are many
+hosts/vtasks — so the bit-identical bar must hold *there*, not just on
+the 4-host smoke topologies.  CI-sized iteration counts keep this
+cheap; ``benchmarks/cluster_bench.py::main_multihost_large`` runs the
+same shape at full size.
+"""
+import pytest
+
+from engine_harness import assert_engines_agree
+from repro.sim import (DegradeLink, RackRing, Scenario, Simulation,
+                       Straggler, Topology)
+
+N_RACKS = 16
+PER_RACK = 4  # 64 hosts
+
+
+def _make_sim(scenario):
+    def make():
+        wl = RackRing(n_racks=N_RACKS, hosts_per_rack=PER_RACK,
+                      n_iters=6, skew_bound_ns=2_000_000)
+        return Simulation(Topology.racks(N_RACKS, PER_RACK), wl,
+                          scenario, placement=wl.default_placement())
+    return make
+
+
+@pytest.mark.parametrize("name,scenario", [
+    ("baseline", Scenario()),
+    ("straggler", Scenario("slow rack", (Straggler("w4", 3.0),
+                                         Straggler("w5", 2.0)))),
+    ("degraded", Scenario("slow fabric", (DegradeLink(
+        fabric="hub", extra_ns=30_000, from_vtime=20_000),))),
+])
+def test_64_hosts_bit_identical_across_engines(name, scenario):
+    """barrier / async / dist(1 and 4 OS workers) agree bit-exactly on
+    a 64-host heterogeneous-latency rack topology."""
+    reports = assert_engines_agree(
+        _make_sim(scenario), dist_workers=4, worker_timeout=120.0,
+        label=f"64 hosts/{name}")
+    assert reports["async"].status == "ok"
+    assert reports["async"].n_hosts == N_RACKS * PER_RACK

@@ -271,3 +271,60 @@ def test_wedged_cluster_raises_deadlock(mode):
     orch.host(1).spawn(VTask("w1t", waiter(ep1), kind="modeled"))
     with pytest.raises(DeadlockError):
         orch.run()
+
+
+# -- incremental LBTS solver --------------------------------------------------
+
+def test_lbts_solver_matches_reference():
+    """The vectorized min-plus-closure solver (LBTSSolver) must produce
+    bit-identical clock bounds and earliest-input times to the
+    reference relaxation on arbitrary graphs — including unreachable
+    hosts, None next-times, asymmetric links, and repeated queries with
+    changed/unchanged inputs (the incremental cache)."""
+    import random
+
+    from repro.core.orchestrator import (LBTSSolver, earliest_input_time,
+                                         lbts_bounds)
+
+    rng = random.Random(7)
+    for trial in range(30):
+        n = rng.choice((1, 2, 3, 5, 8, 13))
+        hosts = list(range(n))
+        lookahead = {}
+        for s in hosts:
+            for d in hosts:
+                if s != d and rng.random() < 0.5:
+                    lookahead[(s, d)] = rng.choice(
+                        (1, 500, 2_000, 50_000))
+        solver = LBTSSolver(lookahead, hosts)
+        for _ in range(3):      # repeat: exercises the unchanged cache
+            next_times = {h: (None if rng.random() < 0.3
+                              else rng.randrange(0, 10_000_000))
+                          for h in hosts}
+            want_lb = lbts_bounds(next_times, lookahead)
+            got_lb = solver.bounds(next_times)
+            assert got_lb == want_lb, (trial, lookahead, next_times)
+            for h in hosts:
+                assert solver.eit(h, got_lb) == earliest_input_time(
+                    h, want_lb, lookahead), (trial, h)
+            # and again with identical inputs (cache hit path)
+            assert solver.bounds(next_times) == want_lb
+
+
+def test_quiescent_skip_preserves_results():
+    """A quiescent-host skip must be invisible: the async engine with
+    skipping produces the exact per-task timings of the barrier engine
+    (which never skips)."""
+    from repro.sim import RackRing, Scenario, Simulation, Straggler, Topology
+
+    def make():
+        wl = RackRing(n_racks=2, hosts_per_rack=2, n_iters=40,
+                      skew_bound_ns=2_000_000)
+        return Simulation(Topology.racks(2, 2), wl,
+                          Scenario("imb", (Straggler("w2", 3.0),)),
+                          placement=wl.default_placement())
+
+    a = make().run(engine="async", on_deadlock="raise")
+    b = make().run(engine="barrier", on_deadlock="raise")
+    assert a.tasks == b.tasks
+    assert a.messages == b.messages
