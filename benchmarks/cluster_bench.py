@@ -19,10 +19,16 @@ track the hot path PR-over-PR:
   indexed scheduler + incremental LBTS; barrier is skipped here (its
   per-min-latency epochs are exactly the cost the async engine
   removes).
+* **cells** (interference-heavy, co-located live workers bound to §3.3
+  memory-hierarchy cells) — every live call prices spatial interference
+  and warm-slot reconditioning, so this regime tracks the cell hot path
+  (the per-host live-cell multiset that replaced the O(tasks) coactive
+  scan); ``--smoke`` asserts its dispatch throughput stays above the
+  PR-4 scheduler floor.
 
 Outputs (single writer: everything is derived from the root schema):
   BENCH_cluster.json              — compact aggregates-only summary
-                                    (schema BENCH_cluster/v3, documented
+                                    (schema BENCH_cluster/v4, documented
                                     in README.md), committed at the repo
                                     root so the perf trajectory stays
                                     reviewable PR-over-PR
@@ -33,9 +39,15 @@ Outputs (single writer: everything is derived from the root schema):
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import pathlib
+
+try:        # as a package (benchmarks.run) or as a script
+    from benchmarks.sched_scale import SEED_REFERENCE_4096_DISPATCH_PER_S
+except ImportError:   # pragma: no cover - script invocation
+    from sched_scale import SEED_REFERENCE_4096_DISPATCH_PER_S
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 
@@ -168,6 +180,93 @@ def main_multihost_large(n_racks: int = 16, hosts_per_rack: int = 4,
     return rows
 
 
+def simulate_cells(engine: str = "async", *, n_hosts: int = 4,
+                   workers_per_host: int = 2, n_iters: int = 400,
+                   n_workers: int = DIST_WORKERS) -> dict:
+    """The cells regime: co-located live ring workers bound to §3.3
+    memory-hierarchy cells (one contended + one cool cell per host,
+    warm slots scarcer than cells so every switch reconditions).  Hosts
+    dispatch serially (n_cpus=1), the regime where cell state is
+    engine-exact."""
+    from repro.sim import RackRing, Scenario, Simulation, Topology
+
+    n = n_hosts * workers_per_host
+    cells = {f"w{i}": f"cell{i % workers_per_host}" for i in range(n)}
+    wl = RackRing(n_racks=n_hosts, hosts_per_rack=workers_per_host,
+                  n_iters=n_iters, compute_ns=20_000, cross_every=10,
+                  live=True, cells=cells, skew_bound_ns=2_000_000)
+    topo = Topology(n_hosts=n_hosts, n_cpus=1)
+    topo.cell("cell0", ways=3, working_set_frac=0.65, bw_share=0.4,
+              bw_demand=0.7, mem_frac=0.6)
+    if workers_per_host > 1:
+        topo.cell("cell1", ways=6, working_set_frac=0.4, bw_share=0.5,
+                  bw_demand=0.45, mem_frac=0.3)
+    topo.cell_config(n_warm_slots=1, recondition_ns=20_000)
+    sim = Simulation(
+        topo, wl, Scenario("cells"),
+        placement={f"w{i}": i // workers_per_host for i in range(n)})
+    if engine == "dist":
+        report = sim.run(engine="dist", n_workers=n_workers,
+                         on_deadlock="raise")
+    else:
+        report = sim.run(engine=engine, on_deadlock="raise")
+    assert all(t["state"] == "done" for t in report.tasks.values())
+    row = _aggregate(report)
+    row["engine"] = engine
+    row["cell_switches"] = sum(c["switches"]
+                               for c in report.cells.values())
+    row["cell_recondition_ns"] = sum(c["recondition_ns"]
+                                     for c in report.cells.values())
+    row["interference_events"] = sum(c["interference_events"]
+                                     for c in report.cells.values())
+    row["final_vtimes"] = [report.tasks[f"w{i}"]["vtime"]
+                           for i in range(n)]
+    row["cell_report"] = report.cells
+    return row
+
+
+def main_cells() -> dict:
+    engines = [("async", "async", 1)]
+    if HAS_FORK:
+        engines += [(f"dist_{DIST_WORKERS}w", "dist", DIST_WORKERS)]
+    rows = {}
+    for name, engine, k in engines:
+        rows[name] = simulate_cells(engine, n_workers=k)
+    base = next(iter(rows))
+    assert all(r["final_vtimes"] == rows[base]["final_vtimes"]
+               and r["cell_report"] == rows[base]["cell_report"]
+               for r in rows.values()), \
+        "engines disagree on cell-enabled simulation results"
+    a = rows["async"]
+    print(f"cells regime: {a['n_hosts']} hosts x 2 live workers in "
+          f"cells, {a['dispatches']} dispatches:")
+    for name, r in rows.items():
+        print(f"{name:>10s} x{r['n_workers']}: wall {r['wall_s']:.3f}s, "
+              f"{r['dispatch_per_s']} disp/s, "
+              f"{r['interference_events']} interference events, "
+              f"{r['cell_switches']} switches "
+              f"({r['cell_recondition_ns']/1e6:.2f} ms reconditioned)")
+    return rows
+
+
+def smoke_cells() -> None:
+    """CI smoke: the cells regime must emit its stats and keep dispatch
+    throughput above the PR-4 scheduler floor (half the seed
+    scheduler's 4096-task baseline — generous headroom for loaded
+    runners, trips only on a real cell-hot-path regression)."""
+    row = simulate_cells("async", n_hosts=2, n_iters=150)
+    assert row["status"] == "ok", row
+    assert row["interference_events"] > 0, row
+    assert row["cell_switches"] > 0, row
+    assert row["cell_recondition_ns"] > 0, row
+    floor = SEED_REFERENCE_4096_DISPATCH_PER_S / 2
+    assert row["dispatch_per_s"] > floor, (row["dispatch_per_s"], floor)
+    print(f"cells smoke ok: {row['dispatch_per_s']} disp/s with cells "
+          f"active (floor {floor:.0f}), "
+          f"{row['interference_events']} interference events, "
+          f"{row['cell_switches']} switches")
+
+
 def simulate_sharded_dist(*, n_chips: int = 512, n_hosts: int = 4,
                           n_steps: int = 3) -> dict:
     """The dist engine's parallelism case: a training ring sharded
@@ -267,6 +366,7 @@ def write_bench(bench: dict) -> None:
 def main():
     multihost = main_multihost()
     large = main_multihost_large()
+    cells = main_cells()
     sharded = simulate_sharded_dist() if HAS_FORK else None
     sharded_large = (simulate_sharded_dist(n_chips=2048, n_hosts=16)
                      if HAS_FORK else None)
@@ -288,12 +388,13 @@ def main():
     # aggregates only, so PR-over-PR diffs stay reviewable
     def strip(rs):
         return {name: {k: v for k, v in r.items()
-                       if k != "final_vtimes"}
+                       if k not in ("final_vtimes", "cell_report")}
                 for name, r in rs.items()}
     bench = {
-        "schema": "BENCH_cluster/v3",
+        "schema": "BENCH_cluster/v4",
         "multihost": strip(multihost),
         "multihost_large": strip(large),
+        "cells": strip(cells),
         "training": rows,
     }
     if HAS_FORK:
@@ -328,4 +429,11 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized cells-regime check; does not "
+                         "rewrite the root BENCH_cluster.json")
+    if ap.parse_args().smoke:
+        smoke_cells()
+    else:
+        main()

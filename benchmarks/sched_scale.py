@@ -14,8 +14,10 @@ Outputs:
                              full run is the canonical artifact
   results/sched_scale.json — raw rows of the last local run
 
-``--smoke`` runs a CI-sized subset (reference engine only, small
-n_tasks) and leaves the committed root artifact untouched.
+``--smoke`` runs a CI-sized subset (reference engine with and without
+§3.3 cells assigned, small n_tasks) and leaves the committed root
+artifact untouched; both row kinds must clear the same throughput
+floor, so a cell-hot-path regression trips CI like any other.
 """
 from __future__ import annotations
 
@@ -61,6 +63,51 @@ def bench_reference(n_tasks: int, n_scopes: int, steps: int = 20) -> dict:
             "dispatch_per_s": sched.stats.dispatches / wall}
 
 
+def bench_reference_cells(n_tasks: int, n_scopes: int,
+                          steps: int = 20) -> dict:
+    """The reference engine with every vtask live and bound to a §3.3
+    cell: each dispatch prices spatial interference off the per-host
+    live-cell multiset and warm-slot reconditioning, so this row tracks
+    the cell hot path (the indexed replacement for the old O(tasks)
+    coactive scan) against the same smoke floor as the plain rows."""
+    from repro.core import (CellManager, LiveCall, Scheduler, Scope, US,
+                            VTask)
+
+    n_cells = max(4, n_tasks // 64)
+    cm = CellManager(n_warm_slots=max(2, n_cells // 2))
+    for i in range(n_cells):
+        cm.create(f"c{i}", ways=3, working_set_frac=0.5,
+                  bw_share=1.0 / n_cells, bw_demand=1.5 / n_cells,
+                  mem_frac=0.4)
+    sched = Scheduler(n_cpus=max(8, n_tasks // 4), cells=cm)
+    scopes = [Scope(f"s{i}", 50 * US) for i in range(n_scopes)]
+    rng = np.random.default_rng(0)
+
+    def noop():
+        return None
+
+    def body(dur):
+        def gen():
+            for _ in range(steps):
+                yield LiveCall(noop, cost_ns=int(dur))
+        return gen()
+
+    for i in range(n_tasks):
+        t = VTask(f"t{i}", body(rng.integers(5, 50) * US), kind="live")
+        t.join(scopes[i % n_scopes])
+        if i % 7 == 0:
+            t.join(scopes[(i + 1) % n_scopes])
+        sched.spawn(t)
+        cm.assign(t, f"c{i % n_cells}")
+    t0 = time.perf_counter()
+    sched.run()
+    wall = time.perf_counter() - t0
+    assert cm.stats["switches"] > 0     # the regime really exercised it
+    return {"engine": "reference_cells", "n_tasks": n_tasks,
+            "dispatches": sched.stats.dispatches, "wall_s": wall,
+            "dispatch_per_s": sched.stats.dispatches / wall}
+
+
 def bench_vectorized(n_tasks: int, n_scopes: int, steps: int = 20) -> dict:
     import jax
 
@@ -101,7 +148,7 @@ def write_bench(rows) -> None:
     ref4k = [r for r in rows
              if r["engine"] == "reference" and r["n_tasks"] == 4096]
     bench = {
-        "schema": "BENCH_sched/v1",
+        "schema": "BENCH_sched/v2",    # v2: + reference_cells rows
         "rows": [{"engine": r["engine"], "n_tasks": r["n_tasks"],
                   "dispatch_per_s": round(r["dispatch_per_s"])}
                  for r in rows],
@@ -123,6 +170,7 @@ def main(smoke: bool = False):
     sizes = (256, 1024) if smoke else (256, 1024, 4096, 16384)
     for n in sizes:
         rows.append(bench_reference(n, max(4, n // 64)))
+        rows.append(bench_reference_cells(n, max(4, n // 64)))
         if not smoke:
             rows.append(bench_vectorized(n, max(4, n // 64)))
     if not smoke:

@@ -66,10 +66,11 @@ description, picks the engine automatically, and returns a structured
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Tuple, Union
 
 import numpy as np
 
+from repro.core.cells import Cell, CellManager
 from repro.core.ipc import Hub, LinkSpec
 from repro.core.scheduler import DeadlockError, Scheduler
 from repro.core.scope import Scope
@@ -249,19 +250,40 @@ class ProxyVTask(VTask):
 
 @dataclasses.dataclass
 class HostSpec:
+    """Declarative per-host configuration for hand-wired orchestration:
+    CPU budget plus the host's §3.3 memory-hierarchy cell allocations
+    (the facade derives the same thing from ``Topology.cell``
+    declarations + placement)."""
     host_id: int
     n_cpus: int = 8
+    cells: Tuple[Cell, ...] = ()
+
+    def cell_manager(self, **knobs) -> CellManager:
+        """Build this host's CellManager (``knobs`` are CellManager
+        calibration parameters: total_ways, miss_penalty, ...)."""
+        cm = CellManager(host=self.host_id, **knobs)
+        for cell in self.cells:
+            cm.add(cell)
+        return cm
 
 
 class Orchestrator:
-    def __init__(self, n_hosts: int = 1, n_cpus: int = 8,
+    def __init__(self, n_hosts: int = 1,
+                 n_cpus: Union[int, Dict[int, int]] = 8,
                  dcn_link: LinkSpec = LinkSpec(bandwidth_bps=25e9 * 8,
                                                latency_ns=10_000),
-                 mode: str = "async"):
+                 mode: str = "async",
+                 cells: Optional[Dict[int, CellManager]] = None):
         assert mode in ("async", "barrier"), mode
         self.mode = mode
+        if not isinstance(n_cpus, dict):
+            n_cpus = {h: n_cpus for h in range(n_hosts)}
+        # per-host cell state (§3.3): each host's scheduler gets its own
+        # CellManager — passed in by the facade, defaulted otherwise
         self.hosts: Dict[int, Scheduler] = {
-            h: Scheduler(host=h, n_cpus=n_cpus, distributed=True)
+            h: Scheduler(host=h, n_cpus=n_cpus.get(h, 8),
+                         distributed=True,
+                         cells=None if cells is None else cells.get(h))
             for h in range(n_hosts)}
         self.hubs: Dict[int, Hub] = {}
         self.dcn_link = dcn_link
@@ -276,6 +298,27 @@ class Orchestrator:
                       "max_proxy_staleness_ns": 0, "max_window_ns": 0,
                       "quiescent_skips": 0}
         self._solver: Optional[LBTSSolver] = None   # built on first run
+
+    @classmethod
+    def from_host_specs(cls, specs: List[HostSpec], *,
+                        dcn_link: LinkSpec = LinkSpec(
+                            bandwidth_bps=25e9 * 8, latency_ns=10_000),
+                        mode: str = "async",
+                        cell_knobs: Optional[dict] = None
+                        ) -> "Orchestrator":
+        """Hand-wiring entry point for heterogeneous hosts: one
+        :class:`HostSpec` per host (ids must be exactly 0..n-1), each
+        contributing its CPU budget and §3.3 cell allocations."""
+        ids = sorted(s.host_id for s in specs)
+        if ids != list(range(len(specs))):
+            raise ValueError(f"host ids must be 0..{len(specs) - 1}, "
+                             f"got {ids}")
+        return cls(
+            n_hosts=len(specs),
+            n_cpus={s.host_id: s.n_cpus for s in specs},
+            dcn_link=dcn_link, mode=mode,
+            cells={s.host_id: s.cell_manager(**(cell_knobs or {}))
+                   for s in specs})
 
     # -- wiring -----------------------------------------------------------------
     def host(self, h: int) -> Scheduler:

@@ -40,6 +40,9 @@ so none of it may scan the full task list):
 * Scope minima are maintained incrementally by the scopes themselves
   (see ``repro.core.scope``): O(log n) heap pushes on vtime changes
   replace the O(members) recompute per invalidation.
+* Cell co-activity (§3.3) is read from the :class:`CellManager`'s
+  per-host live-cell multiset — O(1) aggregate reads per LiveCall,
+  replacing the old O(tasks) coactive scan (see ``repro.core.cells``).
 """
 from __future__ import annotations
 
@@ -79,7 +82,10 @@ class Scheduler:
                  cpu_resource: bool = False):
         self.host = host
         self.n_cpus = n_cpus
-        self.cells = cells or CellManager()
+        # cell state is keyed by host (one manager per simulated host,
+        # facade-constructed in every engine); the default manager
+        # inherits this scheduler's host id
+        self.cells = cells or CellManager(host=host)
         self.tasks: List[VTask] = []
         self.preempt_after = preempt_after
         self.send_overhead_ns = send_overhead_ns
@@ -110,6 +116,13 @@ class Scheduler:
     def spawn(self, task: VTask) -> VTask:
         task.host = self.host
         task.sched = self
+        if task.cell is not None and task.cell in self.cells.cells:
+            # constructor-labelled cell (VTask(cell=...)): register it
+            # in this host's live-cell multiset so it spatially
+            # interferes like an explicitly assign()ed task.  An
+            # unknown name keeps the core's lenient no-op semantics
+            # (the facade validates declarations at build time).
+            self.cells.assign(task, task.cell)
         self.tasks.append(task)
         if task.kind != "proxy":
             if task.state in (State.RUNNABLE, State.BLOCKED):
@@ -328,7 +341,9 @@ class Scheduler:
             return None
         if isinstance(action, LiveCall):
             self.stats.live_calls += 1
-            slow = self.cells.slowdown(task, self._coactive_cells(task))
+            # co-activity comes from the manager's per-host live-cell
+            # multiset (O(1) aggregates), not a task scan
+            slow = self.cells.slowdown(task)
             if action.cost_ns is not None:
                 result = action.fn(*action.args, **action.kwargs)
                 delta = int(action.cost_ns * slow)
@@ -382,13 +397,6 @@ class Scheduler:
         if isinstance(action, Yield):
             return None
         raise TypeError(f"unknown action {action!r}")
-
-    def _coactive_cells(self, task: VTask) -> List[str]:
-        """Cells of other unfinished live tasks on this host (spatial
-        interference candidates)."""
-        return [t.cell for t in self.tasks
-                if t is not task and t.cell is not None
-                and t.state in (State.RUNNABLE, State.BLOCKED)]
 
     def _dispatch(self, task: VTask) -> None:
         task.stats["dispatches"] += 1

@@ -125,7 +125,8 @@ class VTask:
         self.inbox_hint: Optional[int] = None     # head-of-queue visibility
         self.zero_progress = 0                    # preemption counter
         self.stats = {"dispatches": 0, "live_ns": 0, "msgs_rx": 0,
-                      "msgs_tx": 0, "blocked_rounds": 0}
+                      "msgs_tx": 0, "blocked_rounds": 0,
+                      "cell_switches": 0}
         self._wait_reason: Optional[Tuple[str, Any]] = None
         self._pending_action: Any = None   # blocked action awaiting retry
         # scheduler back-reference + index bookkeeping (set by spawn;

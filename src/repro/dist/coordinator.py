@@ -333,6 +333,10 @@ class DistCoordinator:
             merged_tasks.update(r["tasks"])
         for _, prog in sim._programs():    # declaration order, like
             tasks[prog.name] = merged_tasks[prog.name]   # in-process
+        cells: Dict[str, Any] = {}
+        for r in reports:                  # per-host, owner-disjoint
+            cells.update(r["cells"])
+        cells = {h: cells[h] for h in sorted(cells, key=int)}
         return SimReport(
             status=status, mode="dist", n_hosts=sim.topology.n_hosts,
             vtime_ns=max(r["horizon"] for r in reports),
@@ -349,7 +353,7 @@ class DistCoordinator:
             progress=self._merge_progress(
                 [r["progress"] for r in reports]),
             scenario=sim.scenario.name, detail=detail,
-            n_workers=self.n_workers)
+            n_workers=self.n_workers, cells=cells)
 
 
 def run_dist(sim, n_workers: int = 2, *, max_rounds: int = 1_000_000,

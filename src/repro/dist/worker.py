@@ -300,7 +300,16 @@ class DistWorker:
                          for h in self.owned
                          for p in orch._host_proxies.get(h, ())),
                         default=0)
+        # §3.3 cell state is per host and only the owner executed these
+        # hosts, so each worker's snapshots are authoritative and
+        # disjoint — the coordinator merges them by host key.
+        cells = {}
+        for h in self.owned:
+            snap = orch.hosts[h].cells.snapshot()
+            if snap is not None:
+                cells[str(h)] = snap
         return {
+            "cells": cells,
             "hosts": [HostReport.from_sched(h, orch.hosts[h].stats)
                       for h in self.owned],
             "messages": sum(h.stats["messages"] for h in owned_hubs),

@@ -2,7 +2,11 @@
 
 One import gives everything needed to compose and run a simulation:
 
-* :class:`Topology` — hosts, per-pair interconnect links, CPU budget.
+* :class:`Topology` — hosts, per-pair interconnect links, CPU budget,
+  and §3.3 memory-hierarchy :class:`CellSpec` declarations
+  (``Topology.cell`` / ``Topology.cell_config``) that programs bind to
+  via ``Program.cell`` (validated at build, instantiated per host,
+  reported as ``SimReport.cells``).
 * :class:`Workload` — reusable vtask program factories (components +
   endpoints + fabrics + traffic + scopes).  Ports of the repo's
   workloads ship in :mod:`repro.sim.workloads`:
@@ -32,7 +36,7 @@ Quickstart::
         Scenario("slow chip", (Straggler("chip3", 2.0),))).run()
     print(report.to_json())
 """
-from repro.sim.topology import FabricSpec, Topology
+from repro.sim.topology import CellSpec, FabricSpec, Topology
 from repro.sim.workload import (EndpointSpec, Program, ScopeSpec,
                                 Workload)
 from repro.sim.scenario import (DegradeLink, FailHost, FailTask,
@@ -43,8 +47,9 @@ from repro.sim.simulation import Simulation
 from repro.sim.workloads import ChipRingTraining, ModeledServe, RackRing
 
 __all__ = [
-    "ChipRingTraining", "DegradeLink", "EndpointSpec", "FabricSpec",
-    "FailHost", "FailTask", "HostReport", "Injection", "Interference",
-    "ModeledServe", "Program", "RackRing", "Scenario", "ScopeSpec",
-    "SimReport", "Simulation", "Straggler", "Topology", "Workload",
+    "CellSpec", "ChipRingTraining", "DegradeLink", "EndpointSpec",
+    "FabricSpec", "FailHost", "FailTask", "HostReport", "Injection",
+    "Interference", "ModeledServe", "Program", "RackRing", "Scenario",
+    "ScopeSpec", "SimReport", "Simulation", "Straggler", "Topology",
+    "Workload",
 ]

@@ -74,6 +74,12 @@ class SimReport:
     scenario: str = "baseline"
     detail: str = ""                     # deadlock detail, if any
     n_workers: int = 1                   # OS worker processes (dist engine)
+    #: per-host §3.3 cell accounting, keyed by str(host): switches,
+    #: recondition_ns, interference/self-pressure events, and per-cell
+    #: slowdown histograms (CellManager.snapshot(); empty when the
+    #: simulation declared no cells).  Integer-valued, so engines can be
+    #: compared bit-exactly on it.
+    cells: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def to_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)

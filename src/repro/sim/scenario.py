@@ -77,12 +77,18 @@ class DegradeLink(Injection):
 @dataclasses.dataclass(frozen=True)
 class Interference(Injection):
     """Co-located load: ``bursts`` x ``burst_ns`` of modeled compute on
-    ``host`` (or wherever ``co_locate_with`` was placed).  Requires
-    ``Simulation(cpu_resource=True)`` to contend with the victim."""
+    ``host`` (or wherever ``co_locate_with`` was placed).  Two
+    contention axes, composable: ``Simulation(cpu_resource=True)``
+    queues the load's compute on the victim host's simulated CPUs, and
+    ``cell`` binds the load to a declared memory-hierarchy cell
+    (``Topology.cell``) so its bandwidth demand spatially interferes
+    with co-located live cells — no cpu_resource needed for that axis
+    (``Simulation(cells="auto")`` derives the cell instead)."""
     host: Optional[int] = None
     co_locate_with: Optional[str] = None
     bursts: int = 100
     burst_ns: int = 5_000
+    cell: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)

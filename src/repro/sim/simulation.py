@@ -18,6 +18,17 @@ Placement: ``placement="auto"`` routes component->host assignment
 through ``Orchestrator.co_locate`` on the merged workload traffic
 matrix; a dict pins components explicitly; ``"round_robin"`` spreads
 them.
+
+Cells (§3.3): ``Topology.cell`` declarations are validated against
+every ``Program.cell`` / ``Interference.cell`` reference at build time
+(an undeclared name is an error, not a silent no-op), instantiated as
+one :class:`~repro.core.cells.CellManager` per host that ends up
+hosting cell-bound components — identically in all four engines,
+including the dist workers' forked replicas — and reported back as
+``SimReport.cells``.  ``cells="auto"`` additionally derives a default
+cell for every program co-located with another program or an
+interference load (and for the loads themselves), so co-location
+implies a controlled resource domain without per-program declarations.
 """
 from __future__ import annotations
 
@@ -25,6 +36,7 @@ import math
 import time
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
+from repro.core.cells import CellManager
 from repro.core.ipc import Endpoint, Hub, Message
 from repro.core.orchestrator import Orchestrator
 from repro.core.scheduler import DeadlockError, Scheduler
@@ -34,7 +46,7 @@ from repro.sim.report import HostReport, SimReport, _jsonable
 from repro.sim.scenario import (DegradeLink, FailHost, FailTask,
                                 Interference, Scenario, Straggler,
                                 TaskHandle, fail_gated_body, scaled_body)
-from repro.sim.topology import FabricSpec, Topology
+from repro.sim.topology import CellSpec, FabricSpec, Topology
 from repro.sim.workload import Program, Workload
 
 PlacementSpec = Union[str, Dict[str, int]]
@@ -52,7 +64,8 @@ class Simulation:
                  placement: PlacementSpec = "auto",
                  mode: str = "auto",
                  capacity: Optional[int] = None,
-                 cpu_resource: bool = False):
+                 cpu_resource: bool = False,
+                 cells: str = "declared"):
         self.topology = topology
         self.workloads: List[Workload] = (
             [workloads] if isinstance(workloads, Workload)
@@ -61,6 +74,10 @@ class Simulation:
         self.placement_spec = placement
         self.capacity = capacity
         self.cpu_resource = cpu_resource
+        if cells not in ("declared", "auto"):
+            raise ValueError(f"cells must be 'declared' or 'auto', "
+                             f"got {cells!r}")
+        self.cells_mode = cells
         if mode == "auto":
             mode = "single" if topology.n_hosts == 1 else "async"
         if mode not in ("single", "async", "barrier"):
@@ -77,6 +94,7 @@ class Simulation:
         self.task_by_name: Dict[str, VTask] = {}
         self.scopes: List[Scope] = []
         self.placement: Dict[str, int] = {}
+        self.cell_managers: Dict[int, CellManager] = {}
         self._built = False
 
     # -- introspection helpers ----------------------------------------------
@@ -135,6 +153,97 @@ class Simulation:
                 names, self._merged_traffic(), n_hosts, capacity)
         raise ValueError(f"unknown placement {spec!r}")
 
+    # -- cells (§3.3) --------------------------------------------------------
+    def _resolve_interference(self) -> List[Tuple[Interference, int]]:
+        """Validate each Interference injection and pin it to a host
+        (declaration order preserved: the i-th entry becomes vtask
+        ``load{i}``)."""
+        out: List[Tuple[Interference, int]] = []
+        n_hosts = self.topology.n_hosts
+        for inj in self.scenario.injections:
+            if not isinstance(inj, Interference):
+                continue
+            host = inj.host
+            if host is not None and not 0 <= host < n_hosts:
+                raise ValueError(
+                    f"Interference host {host} outside "
+                    f"0..{n_hosts - 1}")
+            if host is None:
+                if inj.co_locate_with is None:
+                    raise ValueError(
+                        "Interference needs host or co_locate_with")
+                if inj.co_locate_with not in self.placement:
+                    raise ValueError(
+                        f"Interference co_locate_with targets "
+                        f"unknown program {inj.co_locate_with!r}")
+                host = self.placement[inj.co_locate_with]
+            out.append((inj, host))
+        return out
+
+    def _resolve_cells(self, programs,
+                       inter_targets: List[Tuple[Interference, int]]
+                       ) -> Tuple[Dict[str, str], List[Optional[str]]]:
+        """Map programs and interference loads to cells, derive auto
+        cells for co-located placements (``cells="auto"``), reject
+        undeclared references, and construct the per-host CellManagers
+        (``self.cell_managers``)."""
+        topo = self.topology
+        cell_specs: Dict[str, CellSpec] = dict(topo.cells)
+        cell_of: Dict[str, str] = {p.name: p.cell for _, p in programs
+                                   if p.cell}
+        load_cells: List[Optional[str]] = [inj.cell
+                                           for inj, _ in inter_targets]
+        if self.cells_mode == "auto":
+            # co-location implies a controlled resource domain: every
+            # program sharing a host with another program or an
+            # interference load gets a default cell, as does each load
+            prog_hosts: Dict[int, List[str]] = {}
+            for _, p in programs:
+                prog_hosts.setdefault(
+                    self.placement[p.name], []).append(p.name)
+            load_hosts = {h for _, h in inter_targets}
+            for h in sorted(prog_hosts):
+                if len(prog_hosts[h]) < 2 and h not in load_hosts:
+                    continue
+                for n in prog_hosts[h]:
+                    if n not in cell_of:
+                        auto = f"cell:{n}"
+                        cell_specs.setdefault(auto, CellSpec(name=auto))
+                        cell_of[n] = auto
+            for i in range(len(load_cells)):
+                if load_cells[i] is None:
+                    auto = f"cell:load{i}"
+                    cell_specs.setdefault(auto, CellSpec(name=auto))
+                    load_cells[i] = auto
+        # a Program.cell naming an undeclared cell used to be a silent
+        # no-op (slowdown 1.0, switch cost 0 — see repro.core.cells);
+        # through the facade, that masks misconfiguration, so it is a
+        # build-time error.
+        bad = [(p.name, p.cell) for _, p in programs
+               if p.cell and p.cell not in cell_specs]
+        bad += [(f"Interference#{i}", c)
+                for i, c in enumerate(load_cells)
+                if c and c not in cell_specs]
+        if bad:
+            raise ValueError(
+                f"undeclared cells referenced (declare them with "
+                f"Topology.cell(name, ...)): {bad}")
+        self.cell_managers = {}
+        if cell_specs:
+            need: Dict[int, set] = {}
+            for n, c in cell_of.items():
+                need.setdefault(self.placement[n], set()).add(c)
+            for i, (_inj, h) in enumerate(inter_targets):
+                if load_cells[i]:
+                    need.setdefault(h, set()).add(load_cells[i])
+            for h in sorted(need):
+                cm = CellManager(host=h, **topo.cell_knobs)
+                for name, spec in cell_specs.items():  # decl. order
+                    if name in need[h]:
+                        cm.add(spec.to_cell())
+                self.cell_managers[h] = cm
+        return cell_of, load_cells
+
     # -- build ---------------------------------------------------------------
     def build(self) -> "Simulation":
         if self._built:
@@ -145,11 +254,23 @@ class Simulation:
         names = [p.name for _, p in programs]
         self.placement = self._resolve_placement(names)
 
+        # §3.3 cells: resolve Interference targets early (their hosts
+        # feed auto-cell derivation and per-host manager construction),
+        # validate every Program.cell / Interference.cell reference
+        # against the Topology declarations, and build one CellManager
+        # per host that hosts cell-bound components — before the engine
+        # exists, so every engine (and every forked dist replica) gets
+        # identical per-host cell state.
+        inter_targets = self._resolve_interference()
+        cell_of, load_cells = self._resolve_cells(programs,
+                                                  inter_targets)
+
         # engine + hubs
         single = self.mode == "single"
         fabric_eps: Dict[str, List[str]] = {f.name: [] for f in fabrics}
         if single:
-            self.scheduler = Scheduler(n_cpus=topo.n_cpus)
+            self.scheduler = Scheduler(n_cpus=topo.n_cpus,
+                                       cells=self.cell_managers.get(0))
             for fab in fabrics:
                 self.hubs[fab.name] = Hub(fab.name, fab.link)
 
@@ -158,7 +279,8 @@ class Simulation:
         else:
             self.orchestrator = Orchestrator(
                 n_hosts=topo.n_hosts, n_cpus=topo.n_cpus,
-                dcn_link=topo.default_host_link, mode=self.mode)
+                dcn_link=topo.default_host_link, mode=self.mode,
+                cells=self.cell_managers or None)
             for (a, b), link in topo.host_links.items():
                 self.orchestrator.connect_hosts(a, b, link)
             host_hubs: Dict[int, Hub] = {}
@@ -230,10 +352,15 @@ class Simulation:
                 handle = TaskHandle()
                 body = fail_gated_body(body, handle, f.at_compute,
                                        f.at_vtime)
-            task = VTask(prog.name, body, kind=prog.kind, cell=prog.cell)
+            task = VTask(prog.name, body, kind=prog.kind)
             if handle is not None:
                 handle.task = task
-            self._sched_for(host).spawn(task)
+            sched = self._sched_for(host)
+            sched.spawn(task)
+            if prog.name in cell_of:
+                # assign (not just a VTask backref): registers the task
+                # in the host manager's live-cell multiset
+                sched.cells.assign(task, cell_of[prog.name])
             self.tasks.append(task)
             self.task_by_name[prog.name] = task
 
@@ -269,31 +396,20 @@ class Simulation:
                     self.scopes.extend(self.orchestrator.global_scope(
                         ss.name, members, skew_bound_ns=ss.skew_bound_ns))
 
-        # link degradation hooks + interference load
-        n_loads = 0
+        # link degradation hooks + interference loads (targets resolved
+        # and validated before the engine was built; spawn order — and
+        # therefore vtask ids — matches the old interleaved loop)
         for inj in self.scenario.injections:
             if isinstance(inj, DegradeLink):
                 self._install_degrade(inj, fabrics, fabric_eps, ep_host)
-            elif isinstance(inj, Interference):
-                host = inj.host
-                if host is not None and not 0 <= host < topo.n_hosts:
-                    raise ValueError(
-                        f"Interference host {host} outside "
-                        f"0..{topo.n_hosts - 1}")
-                if host is None:
-                    if inj.co_locate_with is None:
-                        raise ValueError(
-                            "Interference needs host or co_locate_with")
-                    if inj.co_locate_with not in self.placement:
-                        raise ValueError(
-                            f"Interference co_locate_with targets "
-                            f"unknown program {inj.co_locate_with!r}")
-                    host = self.placement[inj.co_locate_with]
-                load = VTask(f"load{n_loads}",
-                             _load_body(inj.bursts, inj.burst_ns),
-                             kind="modeled")
-                self._sched_for(host).spawn(load)
-                n_loads += 1
+        for i, (inj, host) in enumerate(inter_targets):
+            load = VTask(f"load{i}",
+                         _load_body(inj.bursts, inj.burst_ns),
+                         kind="modeled")
+            sched = self._sched_for(host)
+            sched.spawn(load)
+            if load_cells[i]:
+                sched.cells.assign(load, load_cells[i])
 
         if self.cpu_resource:
             for sched in self._scheds():
@@ -436,6 +552,11 @@ class Simulation:
         else:
             vtime = self.scheduler.horizon()
             sync_rounds = proxy_syncs = cross = staleness = window = 0
+        cells = {}
+        for s in self._scheds():
+            snap = s.cells.snapshot()
+            if snap is not None:
+                cells[str(s.host)] = snap
         return SimReport(
             status=status, mode=self.mode, n_hosts=self.topology.n_hosts,
             vtime_ns=vtime, wall_s=wall, messages=msgs, bytes=byts,
@@ -446,7 +567,7 @@ class Simulation:
                             "host": t.host} for t in self.tasks},
             progress={wl.name: _jsonable(wl.progress())
                       for wl in self.workloads},
-            scenario=self.scenario.name, detail=detail)
+            scenario=self.scenario.name, detail=detail, cells=cells)
 
     # -- conveniences --------------------------------------------------------
     def done(self) -> bool:

@@ -1,21 +1,55 @@
 """Declarative cluster topology for `repro.sim`.
 
 A :class:`Topology` names the *machines*: how many hosts run the
-simulation, how many simulated CPUs each host's scheduler gets, and the
-interconnect :class:`~repro.core.ipc.LinkSpec` of every host pair.  The
-logical message *fabrics* (ICI rings, DCN, service networks) belong to
-the workloads (see :class:`repro.sim.workload.Workload.fabrics`); the
+simulation, how many simulated CPUs each host's scheduler gets, the
+interconnect :class:`~repro.core.ipc.LinkSpec` of every host pair, and
+the §3.3 memory-hierarchy :class:`CellSpec` declarations programs may
+bind to (``Program.cell`` / ``Interference.cell``).  The logical
+message *fabrics* (ICI rings, DCN, service networks) belong to the
+workloads (see :class:`repro.sim.workload.Workload.fabrics`); the
 topology only says what hardware they are mapped onto.
 
 Host-pair links double as the conservative synchronization lookahead of
 the async orchestration engine — see ``Orchestrator.connect_hosts``.
+Cell declarations are *names + knobs*: cell state itself is per host —
+the :class:`~repro.sim.simulation.Simulation` instantiates a declared
+cell on every host where one of its programs lands, each with
+independent warm/interference state (see ``repro.core.cells``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Any, Dict, Tuple
 
+from repro.core.cells import Cell
 from repro.core.ipc import LinkSpec
+
+#: CellManager calibration knobs accepted by :meth:`Topology.cell_config`
+CELL_KNOBS = ("total_ways", "miss_penalty", "recondition_ns",
+              "residue_frac", "n_warm_slots")
+
+
+@dataclasses.dataclass(frozen=True)
+class CellSpec:
+    """A declared §3.3 cell: a named controlled resource domain (CAT
+    way allocation, MBA bandwidth share, working-set/memory profile)
+    that programs bind to via ``Program.cell``.  Instantiated per host
+    at build time."""
+    name: str
+    ways: int = 4                     # CAT way allocation
+    bw_share: float = 0.5             # MBA throttle (fraction of machine BW)
+    bw_demand: float = 0.3            # workload's bandwidth appetite
+    working_set_frac: float = 0.5     # working set / LLC size
+    mem_frac: float = 0.3             # memory-bound fraction of runtime
+    cpus: Tuple[int, ...] = ()
+    numa: int = 0
+
+    def to_cell(self) -> Cell:
+        return Cell(name=self.name, ways=self.ways,
+                    bw_share=self.bw_share, bw_demand=self.bw_demand,
+                    working_set_frac=self.working_set_frac,
+                    mem_frac=self.mem_frac, cpus=tuple(self.cpus),
+                    numa=self.numa)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,6 +78,31 @@ class Topology:
         self.default_host_link = default_host_link
         # insertion order is preserved and becomes the connect order
         self.host_links: Dict[Tuple[int, int], LinkSpec] = {}
+        # §3.3 cell declarations (name -> CellSpec, declaration order —
+        # which becomes the per-host creation order) + per-host
+        # CellManager calibration knobs
+        self.cells: Dict[str, CellSpec] = {}
+        self.cell_knobs: Dict[str, Any] = {}
+
+    def cell(self, name: str, **knobs) -> "Topology":
+        """Declare a memory-hierarchy cell (``knobs`` are the
+        :class:`CellSpec` fields: ways, bw_share, bw_demand,
+        working_set_frac, mem_frac, cpus, numa)."""
+        if name in self.cells:
+            raise ValueError(f"cell {name!r} already declared")
+        self.cells[name] = CellSpec(name=name, **knobs)
+        return self
+
+    def cell_config(self, **knobs) -> "Topology":
+        """Set CellManager calibration knobs applied to every host's
+        manager (total_ways, miss_penalty, recondition_ns,
+        residue_frac, n_warm_slots)."""
+        unknown = sorted(set(knobs) - set(CELL_KNOBS))
+        if unknown:
+            raise ValueError(f"unknown cell knobs {unknown}; "
+                             f"expected {CELL_KNOBS}")
+        self.cell_knobs.update(knobs)
+        return self
 
     def link(self, a: int, b: int, spec: LinkSpec) -> "Topology":
         """Declare the interconnect between hosts ``a`` and ``b``."""

@@ -22,6 +22,12 @@ from repro.sim.workload import (EndpointSpec, Program, ScopeSpec,
                                 Workload)
 
 
+def _live_step() -> None:
+    """Trivial fork-safe body for cost-derived live iterations (the
+    cost comes from ``cost_ns``; the call just has to be real)."""
+    return None
+
+
 class ChipRingTraining(Workload):
     """Data-parallel training: one vtask per chip.
 
@@ -38,12 +44,16 @@ class ChipRingTraining(Workload):
 
     def __init__(self, spec: ClusterSpec, step_cost: StepCost,
                  n_steps: int, *, skew_bound_ns: int = 1_000_000,
-                 live_step_fn: Optional[Callable] = None):
+                 live_step_fn: Optional[Callable] = None,
+                 cells: Optional[Dict[str, str]] = None):
         self.spec = spec
         self.step_cost = step_cost
         self.n_steps = n_steps
         self.skew_bound_ns = skew_bound_ns
         self.live_step_fn = live_step_fn
+        # program name -> declared cell name (§3.3); chips with an
+        # entry bind their live steps to that memory-hierarchy cell
+        self.cells = cells or {}
         self.done_steps = np.zeros(spec.n_chips, dtype=np.int64)
 
     def fabrics(self) -> List[FabricSpec]:
@@ -94,7 +104,8 @@ class ChipRingTraining(Workload):
             out.append(Program(
                 name=f"chip{c}", make_body=self._chip_body(c),
                 endpoints=eps,
-                kind="live" if self.live_step_fn else "modeled"))
+                kind="live" if self.live_step_fn else "modeled",
+                cell=self.cells.get(f"chip{c}")))
         return out
 
     def traffic(self) -> Dict[Tuple[str, str], float]:
@@ -134,7 +145,9 @@ class RackRing(Workload):
                  msg_bytes: int = 4096, cross_every: int = 20,
                  skew_bound_ns: int = 0,
                  local_link: LinkSpec = LinkSpec(bandwidth_bps=80e9 * 8,
-                                                 latency_ns=500)):
+                                                 latency_ns=500),
+                 live: bool = False,
+                 cells: Optional[Dict[str, str]] = None):
         self.n_racks = n_racks
         self.hosts_per_rack = hosts_per_rack
         self.n_workers = n_racks * hosts_per_rack
@@ -144,6 +157,12 @@ class RackRing(Workload):
         self.cross_every = cross_every
         self.skew_bound_ns = skew_bound_ns
         self.local_link = local_link
+        # live=True swaps each iteration's modeled Compute for a
+        # cost-derived LiveCall, so workers can bind to §3.3 cells
+        # (``cells``: worker name -> declared cell name) and pick up
+        # spatial-interference / reconditioning charges
+        self.live = live
+        self.cells = cells or {}
         self.iters_done = np.zeros(self.n_workers, dtype=np.int64)
 
     def fabrics(self) -> List[FabricSpec]:
@@ -162,7 +181,11 @@ class RackRing(Workload):
 
             def body():
                 for i in range(self.n_iters):
-                    yield Compute(self.compute_ns)
+                    if self.live:
+                        yield LiveCall(_live_step,
+                                       cost_ns=self.compute_ns)
+                    else:
+                        yield Compute(self.compute_ns)
                     if self.hosts_per_rack > 1:
                         yield Send(ep, f"w{right}", self.msg_bytes)
                         yield Recv(ep)
@@ -184,7 +207,9 @@ class RackRing(Workload):
                 eps += (EndpointSpec(f"lead{r}", "hub"),)
             out.append(Program(name=f"w{h}",
                                make_body=self._worker_body(h),
-                               endpoints=eps, kind="modeled"))
+                               endpoints=eps,
+                               kind="live" if self.live else "modeled",
+                               cell=self.cells.get(f"w{h}")))
         return out
 
     def default_placement(self) -> Dict[str, int]:

@@ -10,6 +10,10 @@ assert bit-identical simulation results:
 * ``status`` (a wedged cluster must wedge identically),
 * ``vtime_ns`` / per-task outcomes (final vtimes, states, hosts),
 * message/byte totals and per-workload progress arrays,
+* per-host §3.3 cell accounting (``SimReport.cells``: switches,
+  reconditioning time, interference/self-pressure events, per-cell
+  slowdown histograms — cell state is keyed by host, so every engine
+  must charge the identical costs),
 * per-link visibility-slack stats (multi-host engines, which share hub
   naming; the ``single`` engine materializes per-fabric hubs instead).
 
@@ -34,7 +38,7 @@ from repro.sim import Simulation, SimReport
 
 #: fields every engine must agree on, bit-exactly
 CORE_FIELDS = ("status", "n_hosts", "vtime_ns", "messages", "bytes",
-               "tasks", "progress")
+               "tasks", "progress", "cells")
 
 HAS_FORK = hasattr(os, "fork")
 

@@ -4,6 +4,8 @@ import pytest
 from repro.core import CellManager, Compute, LiveCall, Scheduler, Scope, \
     State, US, VTask
 from repro.core.cells import _hash01
+from repro.sim import (Interference, RackRing, Scenario, Simulation,
+                       Topology)
 
 
 def test_spatial_interference_bandwidth():
@@ -92,3 +94,362 @@ def test_isolated_cell_runs_at_cost():
     sched.spawn(t)
     sched.run()
     assert t.vtime == 100 * US
+
+
+# -- state model: assignment-keyed live-cell multiset -------------------------
+
+
+def test_indexed_coactive_matches_explicit_list():
+    """The engine hot path (no explicit coactive list) reads the
+    per-host live-cell multiset; it must price exactly what an explicit
+    list of every other assigned cell prices.  (Power-of-two shares so
+    aggregate-minus-own equals the explicit sum bit-exactly.)"""
+    cm = CellManager()
+    specs = dict(ways=4, bw_share=0.25, bw_demand=0.5, mem_frac=0.5,
+                 working_set_frac=0.5)
+    tasks = []
+    for n in ("a", "b", "c"):
+        cm.create(n, **specs)
+        t = VTask(f"t.{n}", None, kind="live")
+        cm.assign(t, n)
+        tasks.append(t)
+    ta = tasks[0]
+    assert cm.slowdown(ta) == cm.slowdown(ta, ["b", "c"])
+    assert cm.slowdown(ta) > cm.slowdown(ta, [])
+
+
+def test_release_stops_interference():
+    cm = CellManager()
+    specs = dict(ways=4, bw_share=0.3, bw_demand=0.6, mem_frac=0.5,
+                 working_set_frac=0.2)
+    cm.create("a", **specs)
+    cm.create("b", **specs)
+    ta, tb = VTask("a", None, kind="live"), VTask("b", None, kind="live")
+    cm.assign(ta, "a")
+    cm.assign(tb, "b")
+    contended = cm.slowdown(ta)
+    cm.release("b")
+    assert cm.slowdown(ta) < contended      # multiset updated
+
+
+def test_release_clears_task_backrefs():
+    """A released cell must stop charging its tasks even if the same
+    name is created again later — stale ``task.cell`` backrefs used to
+    silently bind old tasks to the new cell."""
+    cm = CellManager(n_warm_slots=2)
+    cm.create("a", ways=2, working_set_frac=0.9)
+    t = VTask("t", None, kind="live")
+    cm.assign(t, "a")
+    assert cm.slowdown(t) > 1.0
+    cm.release("a")
+    assert t.cell is None
+    # same name, different (benign) knobs: the old task must not
+    # resurrect into it
+    cm.create("a", ways=12, working_set_frac=0.1)
+    assert cm.slowdown(t) == 1.0
+    assert cm.switch_cost(t) == 0
+    t2 = VTask("t2", None, kind="live")
+    cm.assign(t2, "a")
+    assert cm.switch_cost(t2) > 0           # the new cell works
+
+
+def test_switch_counter_unified():
+    """``stats["switches"]`` is the one switch counter (the old manager
+    kept a second private ``_switches`` that double-counted into the
+    residue hash)."""
+    cm = CellManager(n_warm_slots=1, recondition_ns=10_000)
+    cm.create("a")
+    cm.create("b")
+    ta, tb = VTask("a", None, kind="live"), VTask("b", None, kind="live")
+    cm.assign(ta, "a")
+    cm.assign(tb, "b")
+    for _ in range(2):
+        cm.switch_cost(ta)
+        cm.switch_cost(tb)
+    assert not hasattr(cm, "_switches")
+    assert cm.stats["switches"] == 4
+    snap = cm.snapshot()
+    assert snap["switches"] == 4
+    assert snap["cells"]["a"]["switches"] == 2
+    assert snap["cells"]["b"]["switches"] == 2
+    assert snap["recondition_ns"] == sum(
+        c["recondition_ns"] for c in snap["cells"].values())
+
+
+def test_residue_is_process_independent():
+    """Reconditioning residues key on the task *name* + its own cold
+    ordinal — never on vtask ids (which drift across builds in one
+    process) or a shared counter (which drifts with interleaving)."""
+    def charges():
+        cm = CellManager(n_warm_slots=1, recondition_ns=10_000)
+        cm.create("a")
+        cm.create("b")
+        ta = VTask("w0", None, kind="live")
+        tb = VTask("w1", None, kind="live")
+        cm.assign(ta, "a")
+        cm.assign(tb, "b")
+        return [cm.switch_cost(t) for t in (ta, tb, ta, tb)]
+
+    assert charges() == charges()   # ids advanced; charges must not
+
+
+def test_interference_vs_self_pressure_split():
+    """A solo working-set overflow is not "interference among
+    co-located live hosts": s > 1.0 with no co-active cells must land
+    in ``self_pressure_events``, not ``interference_events``."""
+    cm = CellManager()
+    cm.create("solo", ways=2, working_set_frac=0.9, bw_share=0.3,
+              bw_demand=0.5, mem_frac=0.3)
+    t = VTask("t", None, kind="live")
+    cm.assign(t, "solo")
+    assert cm.slowdown(t) > 1.0             # cache overflow, alone
+    assert cm.stats["interference_events"] == 0
+    assert cm.stats["self_pressure_events"] == 1
+    # now add a contending neighbor: the *extra* multiplier is
+    # interference, and both counters advance independently
+    cm.create("noisy", ways=2, bw_share=0.3, bw_demand=0.9,
+              mem_frac=1.0, working_set_frac=0.9)
+    tn = VTask("n", None, kind="live")
+    cm.assign(tn, "noisy")
+    cm.create("quiet", ways=12, working_set_frac=0.1, bw_share=0.5,
+              bw_demand=0.05, mem_frac=0.1)
+    tq = VTask("q", None, kind="live")
+    cm.assign(tq, "quiet")
+    s = cm.slowdown(t)
+    assert s > 1.0
+    assert cm.stats["interference_events"] == 1
+    assert cm.stats["self_pressure_events"] == 2
+    # the quiet cell gets its (tiny) demand even under contention:
+    # neither self-pressured nor interfered with
+    cm.slowdown(tq)
+    assert cm.stats["interference_events"] == 1
+    assert cm.stats["self_pressure_events"] == 2
+
+
+# -- warm-slot eviction order under the indexed scheduler ---------------------
+
+
+def test_warm_slot_eviction_order_under_indexed_dispatch():
+    """Three cells cycling through two warm slots: the indexed
+    scheduler dispatches in (vtime, id) order, so every live call finds
+    its cell evicted (LRU churn) and the final warm set is the last two
+    cells in dispatch order."""
+    cm = CellManager(n_warm_slots=2, recondition_ns=0)
+    for n in ("a", "b", "c"):
+        cm.create(n, ways=12, working_set_frac=0.1, bw_demand=0.1,
+                  bw_share=0.5, mem_frac=0.1)
+    sched = Scheduler(n_cpus=1, cells=cm)
+
+    def live_body():
+        for _ in range(2):
+            yield LiveCall(lambda: 1, cost_ns=100 * US)
+
+    for n in ("a", "b", "c"):
+        t = VTask(n, live_body(), kind="live")
+        cm.assign(t, n)
+        sched.spawn(t)
+    sched.run()
+    # dispatch order: a@0 b@0 c@0 (id ties) then a@100us b@100us
+    # c@100us; with 2 slots over a 3-cycle every entry is cold
+    assert cm.stats["switches"] == 6
+    snap = cm.snapshot()
+    assert [snap["cells"][n]["switches"] for n in "abc"] == [2, 2, 2]
+    assert cm.warm_cells == ("b", "c")   # LRU-first after the last round
+
+
+def test_warm_hit_keeps_slot_warm():
+    """Back-to-back calls from the same cell are warm (move-to-end, no
+    recharge), and a warm hit refreshes recency for LRU eviction."""
+    cm = CellManager(n_warm_slots=2, recondition_ns=10_000)
+    for n in ("a", "b", "c"):
+        cm.create(n)
+    ta = VTask("a", None, kind="live")
+    tb = VTask("b", None, kind="live")
+    tc = VTask("c", None, kind="live")
+    for t, n in ((ta, "a"), (tb, "b"), (tc, "c")):
+        cm.assign(t, n)
+    assert cm.switch_cost(ta) > 0        # warm: [a]
+    assert cm.switch_cost(tb) > 0        # warm: [a, b]
+    assert cm.switch_cost(ta) == 0       # hit refreshes a: [b, a]
+    assert cm.switch_cost(tc) > 0        # evicts b (LRU): [a, c]
+    assert cm.warm_cells == ("a", "c")
+    assert cm.switch_cost(tb) > 0        # b was evicted -> cold again
+
+
+def test_assign_is_idempotent_and_constructor_label_registers():
+    """assign() keys membership on the manager's own records, not on
+    ``task.cell`` — so a task pre-labelled via ``VTask(cell=...)``
+    still enters the live-cell multiset, and double-assign does not
+    double-count."""
+    cm = CellManager()
+    cm.create("a", bw_demand=0.8, bw_share=0.5, working_set_frac=0.2,
+              mem_frac=0.5)
+    cm.create("b", bw_demand=0.8, bw_share=0.5, working_set_frac=0.2,
+              mem_frac=0.5)
+    ta = VTask("ta", None, kind="live", cell="a")   # constructor label
+    cm.assign(ta, "a")
+    cm.assign(ta, "a")
+    assert cm._assigned == {"a": 1}
+    tb = VTask("tb", None, kind="live")
+    cm.assign(tb, "b")
+    # both registered: 1.6 total demand > 1.0 -> real contention
+    assert cm.slowdown(ta) == cm.slowdown(ta, ["b"]) > 1.0
+    assert cm.stats["interference_events"] > 0
+
+
+def test_constructor_cell_registers_on_spawn():
+    """The core-API path — ``sched.spawn(VTask(..., cell=...))`` with
+    no explicit assign() — must produce spatial interference exactly
+    like assigned tasks (the multiset rewrite must not silently drop
+    it); an unknown name keeps the lenient core no-op."""
+    cm = CellManager(recondition_ns=0)
+    specs = dict(bw_demand=0.8, bw_share=0.5, working_set_frac=0.2,
+                 mem_frac=1.0)
+    cm.create("a", **specs)
+    cm.create("b", **specs)
+    sched = Scheduler(n_cpus=1, cells=cm)
+
+    def live_body():
+        yield LiveCall(lambda: 1, cost_ns=100 * US)
+
+    ta = VTask("ta", live_body(), kind="live", cell="a")
+    tb = VTask("tb", live_body(), kind="live", cell="b")
+    tu = VTask("tu", live_body(), kind="live", cell="unknown")
+    for t in (ta, tb, tu):
+        sched.spawn(t)
+    sched.run()
+    assert cm._assigned == {"a": 1, "b": 1}
+    assert cm.stats["interference_events"] > 0
+    assert ta.vtime > 100 * US          # contention landed in vtime
+    assert tu.vtime == 100 * US         # unknown cell: lenient no-op
+
+
+def test_host_spec_cell_manager_wiring():
+    """Hand-wired orchestration path: HostSpec carries per-host cell
+    allocations and from_host_specs builds one manager per host."""
+    from repro.core import Cell
+    from repro.core.orchestrator import HostSpec, Orchestrator
+
+    specs = [HostSpec(0, n_cpus=2, cells=(Cell("a", ways=2),)),
+             HostSpec(1, n_cpus=4)]
+    orch = Orchestrator.from_host_specs(
+        specs, cell_knobs=dict(n_warm_slots=2))
+    assert orch.hosts[0].n_cpus == 2
+    assert orch.hosts[1].n_cpus == 4
+    assert list(orch.hosts[0].cells.cells) == ["a"]
+    assert orch.hosts[0].cells.host == 0
+    assert orch.hosts[0].cells.n_warm_slots == 2
+    assert orch.hosts[1].cells.cells == {}
+    with pytest.raises(ValueError, match="host ids"):
+        Orchestrator.from_host_specs([HostSpec(1), HostSpec(2)])
+
+
+# -- facade: declarations, validation, report ---------------------------------
+
+
+def _cells_topo():
+    topo = Topology.single_host(n_cpus=1)
+    topo.cell("hot", ways=2, working_set_frac=0.7, bw_share=0.3,
+              bw_demand=0.7, mem_frac=0.6)
+    topo.cell("cold", ways=8, working_set_frac=0.3, bw_share=0.5,
+              bw_demand=0.4, mem_frac=0.2)
+    return topo
+
+
+def test_undeclared_cell_is_a_build_error():
+    """Satellite bugfix: a Program.cell naming an undeclared cell used
+    to silently no-op (slowdown 1.0 / switch cost 0) — through the
+    facade it is now a build-time error."""
+    wl = RackRing(n_racks=1, hosts_per_rack=2, n_iters=2, live=True,
+                  cells={"w0": "typo"})
+    sim = Simulation(_cells_topo(), wl)
+    with pytest.raises(ValueError, match="undeclared cell"):
+        sim.build()
+
+
+def test_undeclared_interference_cell_is_a_build_error():
+    wl = RackRing(n_racks=1, hosts_per_rack=2, n_iters=2)
+    sim = Simulation(
+        _cells_topo(), wl,
+        Scenario("noisy", (Interference(host=0, cell="typo"),)))
+    with pytest.raises(ValueError, match="undeclared cell"):
+        sim.build()
+
+
+def test_core_still_masks_unknown_cell():
+    """The core manager keeps the lenient semantics the facade now
+    guards against (documents exactly what the old silent no-op masked:
+    a typo'd cell priced nothing)."""
+    cm = CellManager()
+    t = VTask("t", None, kind="live")
+    t.cell = "typo"
+    assert cm.slowdown(t, []) == 1.0
+    assert cm.switch_cost(t) == 0
+
+
+def test_facade_builds_per_host_managers_and_reports():
+    cells = {"w0": "hot", "w1": "cold", "w2": "hot", "w3": "cold"}
+    wl = RackRing(n_racks=2, hosts_per_rack=2, n_iters=10,
+                  compute_ns=30_000, live=True, cells=cells,
+                  skew_bound_ns=2_000_000)
+    topo = Topology(n_hosts=2, n_cpus=1)
+    topo.cell("hot", ways=2, working_set_frac=0.7, bw_share=0.3,
+              bw_demand=0.7, mem_frac=0.6)
+    topo.cell("cold", ways=8, working_set_frac=0.3, bw_share=0.5,
+              bw_demand=0.2, mem_frac=0.2)
+    topo.cell_config(n_warm_slots=1, recondition_ns=25_000)
+    sim = Simulation(topo, wl,
+                     placement={"w0": 0, "w1": 0, "w2": 1, "w3": 1})
+    report = sim.run()
+    # one manager per host, cell state independent per host
+    assert sorted(sim.cell_managers) == [0, 1]
+    assert sim.cell_managers[0] is not sim.cell_managers[1]
+    assert sim.cell_managers[0].n_warm_slots == 1
+    assert sorted(report.cells) == ["0", "1"]
+    for host in ("0", "1"):
+        assert report.cells[host]["switches"] > 0
+        assert report.cells[host]["cells"]["hot"]["live_calls"] == 10
+    # the report is JSON-clean
+    report.to_json()
+
+
+def test_interference_cell_slows_victim_without_cpu_resource():
+    """The cell axis of Interference: a modeled load bound to a
+    declared cell spatially interferes with a co-located live victim —
+    no simulated-CPU queuing required."""
+    def run(scenario):
+        wl = RackRing(n_racks=1, hosts_per_rack=1, n_iters=10,
+                      compute_ns=100_000, live=True,
+                      cells={"w0": "hot"})
+        return Simulation(_cells_topo(), wl, scenario).run()
+
+    quiet = run(Scenario("quiet"))
+    noisy = run(Scenario("noisy", (
+        Interference(co_locate_with="w0", cell="cold", bursts=5),)))
+    assert noisy.tasks["w0"]["vtime"] > quiet.tasks["w0"]["vtime"]
+    assert noisy.cells["0"]["interference_events"] > 0
+    assert quiet.cells["0"]["interference_events"] == 0
+
+
+def test_auto_cells_for_colocated_placements():
+    """``cells="auto"``: co-location implies a controlled resource
+    domain — every co-located program (and interference load) gets a
+    derived cell without explicit declarations."""
+    wl = RackRing(n_racks=1, hosts_per_rack=2, n_iters=5,
+                  compute_ns=50_000, live=True)
+    sim = Simulation(
+        Topology.single_host(n_cpus=1), wl,
+        Scenario("noisy", (Interference(host=0, bursts=3),)),
+        cells="auto")
+    report = sim.run()
+    cm = sim.cell_managers[0]
+    assert sorted(cm.cells) == ["cell:load0", "cell:w0", "cell:w1"]
+    assert sim.tasks[0].cell == "cell:w0"
+    assert report.cells["0"]["cells"]["cell:w0"]["live_calls"] == 5
+    # a lone program on its host derives nothing
+    alone = Simulation(Topology.single_host(n_cpus=1),
+                       RackRing(n_racks=1, hosts_per_rack=1,
+                                n_iters=2, live=True),
+                       cells="auto")
+    alone.build()
+    assert alone.cell_managers == {}

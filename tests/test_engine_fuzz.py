@@ -48,6 +48,36 @@ workloads = st.tuples(
 
 
 @st.composite
+def cell_plans(draw, n_workers: int):
+    """Optionally bind every worker to a §3.3 cell (live iterations +
+    per-host cell state): the engines must then also agree bit-exactly
+    on slowdown multipliers, warm-slot switches, and reconditioning
+    residues (SimReport.cells is in the harness CORE_FIELDS).
+
+    ``colocate`` stacks two workers per host (serial hosts, n_cpus=1)
+    so the multiset actually holds co-active cells — spatial
+    interference and warm-slot LRU eviction get fuzzed, not just the
+    solo self-pressure path."""
+    if not draw(st.booleans()):
+        return None
+    return {
+        "cells": {f"w{w}": f"c{w % 2}" for w in range(n_workers)},
+        "colocate": n_workers >= 2 and draw(st.booleans()),
+        "specs": (
+            dict(ways=draw(st.sampled_from((2, 4))),
+                 working_set_frac=0.7, bw_share=0.3,
+                 bw_demand=draw(st.sampled_from((0.5, 0.8))),
+                 mem_frac=0.5),
+            dict(ways=6, working_set_frac=0.4, bw_share=0.5,
+                 bw_demand=0.4, mem_frac=0.3),
+        ),
+        "knobs": dict(n_warm_slots=draw(st.sampled_from((1, 2))),
+                      recondition_ns=draw(st.sampled_from((0,
+                                                           20_000)))),
+    }
+
+
+@st.composite
 def scenarios(draw, n_workers: int):
     injections = []
     for w in range(n_workers):
@@ -78,19 +108,33 @@ def test_random_scenarios_agree_across_engines(data):
                                                        label="workload")
     n_workers = n_racks * per_rack
     scenario = data.draw(scenarios(n_workers), label="scenario")
+    cell_plan = data.draw(cell_plans(n_workers), label="cells")
 
     def make():
         wl = RackRing(n_racks=n_racks, hosts_per_rack=per_rack,
                       n_iters=n_iters, compute_ns=compute_ns,
-                      cross_every=cross_every, skew_bound_ns=skew)
+                      cross_every=cross_every, skew_bound_ns=skew,
+                      live=cell_plan is not None,
+                      cells=cell_plan["cells"] if cell_plan else None)
         topo = Topology.racks(
             n_racks, per_rack,
             intra_link=LinkSpec(bandwidth_bps=80e9 * 8,
                                 latency_ns=intra),
             cross_link=LinkSpec(bandwidth_bps=25e9 * 8,
-                                latency_ns=cross))
-        return Simulation(topo, wl, scenario,
-                          placement=wl.default_placement())
+                                latency_ns=cross),
+            # cell state transitions are engine-exact on serial hosts
+            n_cpus=1 if cell_plan else 4)
+        placement = wl.default_placement()
+        if cell_plan:
+            for i, spec in enumerate(cell_plan["specs"]):
+                topo.cell(f"c{i}", **spec)
+            topo.cell_config(**cell_plan["knobs"])
+            if cell_plan["colocate"]:
+                # stack worker pairs: each occupied host's multiset now
+                # holds both cells (co-active interference + LRU churn);
+                # surplus hosts simply idle
+                placement = {f"w{w}": w // 2 for w in range(n_workers)}
+        return Simulation(topo, wl, scenario, placement=placement)
 
     engines = engines_for(n_workers, dist_workers=2)
     if hasattr(os, "fork"):

@@ -1,13 +1,14 @@
 """Golden-trace regression for the example scenario gallery.
 
 ``tests/golden/gallery.json`` is the canonical compact SimReport for
-the three scenarios ``examples/cluster_sim.py`` showcases (straggler +
+the four scenarios ``examples/cluster_sim.py`` showcases (straggler +
 mid-run host death, mid-run cross-rack link degradation, co-located
-serve+train interference), at CI smoke sizes.  The test re-runs them
+serve+train interference, co-located live cells with §3.3
+memory-hierarchy charges), at CI smoke sizes.  The test re-runs them
 and diffs the *timing-bearing* fields — status, horizon, message and
-byte totals, per-task final vtimes/states, progress arrays — so an
-engine refactor cannot silently shift simulated timings: any shift
-must come with a reviewed golden update.
+byte totals, per-task final vtimes/states, progress arrays, per-host
+cell accounting — so an engine refactor cannot silently shift
+simulated timings: any shift must come with a reviewed golden update.
 
 Each golden also pins a ``perf`` record — the default engine's
 ``sync_rounds`` and ``proxy_syncs`` aggregates — so a
@@ -39,7 +40,7 @@ GOLDEN = pathlib.Path(__file__).parent / "golden" / "gallery.json"
 
 #: the canonical (deterministic, machine-independent) report subset
 CANONICAL_FIELDS = ("scenario", "status", "n_hosts", "vtime_ns",
-                    "messages", "bytes", "tasks", "progress")
+                    "messages", "bytes", "tasks", "progress", "cells")
 
 N_ITERS = 40
 N_STEPS = 8
@@ -76,9 +77,23 @@ def _gallery():
             Scenario("co-located serve + train"),
             cpu_resource=True)
 
+    def colocated_cells():
+        cells = {"w0": "hot", "w1": "cold", "w2": "hot", "w3": "cold"}
+        wl = RackRing(n_racks=1, hosts_per_rack=4, n_iters=N_ITERS,
+                      compute_ns=50_000, live=True, cells=cells,
+                      skew_bound_ns=2_000_000)
+        topo = Topology.single_host(n_cpus=1)
+        topo.cell("hot", ways=2, working_set_frac=0.7, bw_share=0.3,
+                  bw_demand=0.7, mem_frac=0.6)
+        topo.cell("cold", ways=8, working_set_frac=0.3, bw_share=0.5,
+                  bw_demand=0.4, mem_frac=0.2)
+        topo.cell_config(n_warm_slots=2, recondition_ns=20_000)
+        return Simulation(topo, wl, Scenario("co-located cells"))
+
     return {"straggler_host_death": straggler_host_death,
             "degraded_link": degraded_link,
-            "colocated_serve_train": colocated_serve_train}
+            "colocated_serve_train": colocated_serve_train,
+            "colocated_cells": colocated_cells}
 
 
 def canonical(report) -> dict:

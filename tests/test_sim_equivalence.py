@@ -275,6 +275,49 @@ def _rack_sim(scenario=None, n_iters=40):
                       placement=wl.default_placement())
 
 
+# -- cell-enabled scenarios (§3.3): cell state is keyed by host, so
+# -- single/barrier/async/dist must charge identical interference and
+# -- reconditioning costs.  Hosts dispatch serially (n_cpus=1), the
+# -- regime in which warm-slot transitions are provably engine-exact
+# -- (see repro.core.cells).
+
+
+def _cells_colocated_sim():
+    """Single host, four live ring workers over three cells with warm
+    slots scarcer than cells (eviction churn): single + barrier +
+    async + dist:1."""
+    cells = {"w0": "a", "w1": "b", "w2": "c", "w3": "a"}
+    wl = RackRing(n_racks=1, hosts_per_rack=4, n_iters=25,
+                  compute_ns=40_000, live=True, cells=cells,
+                  skew_bound_ns=2_000_000)
+    topo = Topology.single_host(n_cpus=1)
+    topo.cell("a", ways=2, working_set_frac=0.7, bw_share=0.3,
+              bw_demand=0.6, mem_frac=0.6)
+    topo.cell("b", ways=6, working_set_frac=0.5, bw_share=0.4,
+              bw_demand=0.5, mem_frac=0.4)
+    topo.cell("c", ways=4, working_set_frac=0.6, bw_share=0.3,
+              bw_demand=0.4, mem_frac=0.5)
+    topo.cell_config(n_warm_slots=2, recondition_ns=20_000)
+    return Simulation(topo, wl)
+
+
+def _cells_sharded_sim():
+    """Two racks of two live workers, one rack per host: per-host cell
+    state + cross-host leader ring under barrier/async/dist:1/dist:2."""
+    cells = {"w0": "hot", "w1": "cold", "w2": "hot", "w3": "cold"}
+    wl = RackRing(n_racks=2, hosts_per_rack=2, n_iters=30,
+                  compute_ns=30_000, cross_every=5, live=True,
+                  cells=cells, skew_bound_ns=2_000_000)
+    topo = Topology(n_hosts=2, n_cpus=1)
+    topo.cell("hot", ways=3, working_set_frac=0.65, bw_share=0.4,
+              bw_demand=0.7, mem_frac=0.6)
+    topo.cell("cold", ways=6, working_set_frac=0.4, bw_share=0.5,
+              bw_demand=0.45, mem_frac=0.3)
+    topo.cell_config(n_warm_slots=1, recondition_ns=30_000)
+    return Simulation(topo, wl,
+                      placement={"w0": 0, "w1": 0, "w2": 1, "w3": 1})
+
+
 FACADE_SCENARIOS = {
     "baseline": lambda: _rack_sim(),
     "stragglers": lambda: _rack_sim(
@@ -307,9 +350,49 @@ FACADE_SCENARIOS = {
          ModeledServe(n_clients=2, n_requests=6,
                       service_ns=500_000)],
         cpu_resource=True),
+    "cells_colocated": _cells_colocated_sim,
+    "cells_sharded": _cells_sharded_sim,
 }
 
 
 @pytest.mark.parametrize("name", sorted(FACADE_SCENARIOS))
 def test_all_engines_agree_on_facade_scenarios(name, engine_harness):
     engine_harness(FACADE_SCENARIOS[name], label=name)
+
+
+def test_cell_stats_cross_engine_and_nontrivial(engine_harness):
+    """The cell-enabled scenarios must not just agree — they must
+    actually exercise the subsystem: spatial interference events,
+    warm-slot switches, reconditioning time folded into vtimes, and a
+    per-host/per-cell report section identical across every engine
+    (including across OS process boundaries)."""
+    reports = engine_harness(_cells_sharded_sim, label="cells_sharded")
+    rep = reports["async"]
+    assert rep.status == "ok"
+    assert sorted(rep.cells) == ["0", "1"]
+    for host in ("0", "1"):
+        snap = rep.cells[host]
+        assert snap["interference_events"] > 0
+        assert snap["switches"] > 0
+        assert snap["recondition_ns"] > 0
+        assert sorted(snap["cells"]) == ["cold", "hot"]
+        hot = snap["cells"]["hot"]
+        assert hot["live_calls"] == 30   # this host's hot worker's iters
+        assert hot["max_slowdown_ppm"] > 1_000_000
+        assert sum(hot["slowdown_hist"].values()) == hot["live_calls"]
+    # dist with real worker processes reports the same section
+    # (fork-less platforms have no dist engines in the matrix)
+    if "dist:2" in reports:
+        assert reports["dist:2"].cells == rep.cells
+    # and the reconditioning/interference really landed in vtime:
+    # an identical sim with no cells finishes strictly earlier
+    def no_cells():
+        wl = RackRing(n_racks=2, hosts_per_rack=2, n_iters=30,
+                      compute_ns=30_000, cross_every=5, live=True,
+                      skew_bound_ns=2_000_000)
+        return Simulation(Topology(n_hosts=2, n_cpus=1), wl,
+                          placement={"w0": 0, "w1": 0,
+                                     "w2": 1, "w3": 1})
+    bare = no_cells().run(engine="async")
+    assert bare.cells == {}
+    assert rep.vtime_ns > bare.vtime_ns
