@@ -25,10 +25,18 @@ track the hot path PR-over-PR:
   (the per-host live-cell multiset that replaced the O(tasks) coactive
   scan); ``--smoke`` asserts its dispatch throughput stays above the
   PR-4 scheduler floor.
+* **vectorized** (same rack scenario through the compiled array
+  engine) — one more row in the multihost head-to-head, held to the
+  same bit-identical-results assertion as the rest of the matrix
+  (exact-tier conformance on real bench inputs, not just unit tests).
+* **sweep** (vmap batched configuration exploration) — V straggler
+  variants of the rack scenario in one ``Simulation.sweep`` dispatch;
+  records configs/s and the speedup over running the same variants
+  through sequential vectorized runs.
 
 Outputs (single writer: everything is derived from the root schema):
   BENCH_cluster.json              — compact aggregates-only summary
-                                    (schema BENCH_cluster/v4, documented
+                                    (schema BENCH_cluster/v5, documented
                                     in README.md), committed at the repo
                                     root so the perf trajectory stays
                                     reviewable PR-over-PR
@@ -103,6 +111,9 @@ def simulate_multihost(engine: str, *, n_workers: int = DIST_WORKERS,
     if engine == "dist":
         report = sim.run(engine="dist", n_workers=n_workers,
                          on_deadlock="raise")
+    elif engine == "vectorized":
+        report = sim.run(engine="vectorized", on_deadlock="raise")
+        assert report.tier == "exact", report.tier
     else:
         report = sim.run(engine=engine, on_deadlock="raise")
     assert all(t["state"] == "done" for t in report.tasks.values())
@@ -128,7 +139,8 @@ def _engine_rows(engines, **kwargs) -> dict:
 
 
 def main_multihost() -> dict:
-    engines = [("barrier", "barrier", 1), ("async", "async", 1)]
+    engines = [("barrier", "barrier", 1), ("async", "async", 1),
+               ("vectorized", "vectorized", 1)]
     if HAS_FORK:
         engines += [("dist_1w", "dist", 1),
                     (f"dist_{DIST_WORKERS}w", "dist", DIST_WORKERS)]
@@ -267,6 +279,74 @@ def smoke_cells() -> None:
           f"{row['cell_switches']} switches")
 
 
+def main_sweep(n_variants: int = 32, *, n_iters: int = 300,
+               warm: bool = True) -> dict:
+    """The vmap batched-sweep regime: ``n_variants`` straggler variants
+    of the rack scenario in one ``Simulation.sweep`` dispatch, compared
+    against running the same variants through sequential vectorized
+    ``run()`` calls (both jit-warmed, so the ratio isolates the batching
+    win, not compile time)."""
+    import time
+
+    from repro.sim import RackRing, Scenario, Simulation, Straggler, \
+        Topology
+
+    def make(sc=None):
+        wl = RackRing(n_racks=2, hosts_per_rack=2, n_iters=n_iters,
+                      skew_bound_ns=2_000_000)
+        return Simulation(Topology.racks(2, 2), wl, sc,
+                          placement=wl.default_placement())
+
+    axis = [Scenario(f"v{i}", (Straggler(f"w{i % 4}",
+                                         1.0 + (i % 5) * 0.5),))
+            for i in range(n_variants)]
+    if warm:
+        make().sweep(axis)              # compile the batched loop
+    res = make().sweep(axis)
+    # sequential baseline: the same variants, one vectorized run each
+    # (second variant timed so its tape shape is already compiled)
+    make(axis[0]).run(engine="vectorized")
+    t0 = time.perf_counter()
+    solo_reports = [make(sc).run(engine="vectorized") for sc in axis]
+    solo_wall = time.perf_counter() - t0
+    for sc, batched, solo in zip(axis, res.reports, solo_reports):
+        assert batched.tasks == solo.tasks, \
+            f"sweep lane diverged from solo run on {sc.name}"
+    row = {
+        "n_variants": n_variants,
+        "n_hosts": res.reports[0].n_hosts,
+        "tick_ns": res.tick_ns,
+        "tier": res.tier,
+        "wall_s": round(res.wall_s, 4),
+        "configs_per_s": round(res.configs_per_s, 1),
+        "solo_vectorized_wall_s": round(solo_wall, 4),
+        "speedup_vs_sequential": round(
+            solo_wall / max(res.wall_s, 1e-9), 2),
+        "bit_identical_to_solo": True,
+    }
+    print(f"sweep regime: {n_variants} variants in {row['wall_s']:.3f}s "
+          f"({row['configs_per_s']:.1f} configs/s, "
+          f"{row['speedup_vs_sequential']:.1f}x vs sequential "
+          f"vectorized runs, bit-identical lanes)")
+    return row
+
+
+def smoke_vectorized() -> None:
+    """CI smoke for the compiled engine on bench inputs: the vectorized
+    row must be bit-identical to async on the rack scenario, and a small
+    sweep must be bit-identical lane-for-lane to solo runs."""
+    ref = simulate_multihost("async", n_iters=40)
+    vec = simulate_multihost("vectorized", n_iters=40)
+    assert vec["final_vtimes"] == ref["final_vtimes"], (vec, ref)
+    assert vec["messages"] == ref["messages"]
+    assert vec["vtime_ns"] == ref["vtime_ns"]
+    row = main_sweep(8, n_iters=40, warm=False)
+    assert row["bit_identical_to_solo"]
+    print(f"vectorized smoke ok: bit-identical to async on the rack "
+          f"scenario ({vec['dispatch_per_s']} disp/s), sweep lanes "
+          f"bit-identical to solo runs")
+
+
 def simulate_sharded_dist(*, n_chips: int = 512, n_hosts: int = 4,
                           n_steps: int = 3) -> dict:
     """The dist engine's parallelism case: a training ring sharded
@@ -367,6 +447,7 @@ def main():
     multihost = main_multihost()
     large = main_multihost_large()
     cells = main_cells()
+    sweep = main_sweep()
     sharded = simulate_sharded_dist() if HAS_FORK else None
     sharded_large = (simulate_sharded_dist(n_chips=2048, n_hosts=16)
                      if HAS_FORK else None)
@@ -391,10 +472,13 @@ def main():
                        if k not in ("final_vtimes", "cell_report")}
                 for name, r in rs.items()}
     bench = {
-        "schema": "BENCH_cluster/v4",
+        # v5: + the vectorized engine row in multihost and the vmap
+        # batched-sweep regime (configs/s)
+        "schema": "BENCH_cluster/v5",
         "multihost": strip(multihost),
         "multihost_large": strip(large),
         "cells": strip(cells),
+        "sweep": sweep,
         "training": rows,
     }
     if HAS_FORK:
@@ -431,9 +515,10 @@ def main():
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="CI-sized cells-regime check; does not "
+                    help="CI-sized cells + vectorized checks; does not "
                          "rewrite the root BENCH_cluster.json")
     if ap.parse_args().smoke:
         smoke_cells()
+        smoke_vectorized()
     else:
         main()

@@ -76,14 +76,21 @@ def _kernel(send_ref, ser_ref, link_ref, lat_ref, out_ref, carry_ref, *,
 
 
 def hub_route(send_vtime, size_bytes, link_id, link_bw_Bps, link_lat_ns,
-              *, block=2048, interpret=False):
+              *, ser_ns=None, block=2048, interpret=False):
     """Visibility times (ns int32) for sorted messages.
 
     send_vtime (M,) int32; size_bytes (M,) int32; link_id (M,) int32;
-    link_bw_Bps/link_lat_ns (L,) per-link tables."""
+    link_bw_Bps/link_lat_ns (L,) per-link tables.  ``ser_ns`` (M,)
+    bypasses the float32 size/bandwidth serialization math with exact
+    precomputed per-message durations — the vectorized engine's
+    tick-quantized tapes need bit-exact integer queuing (float32 only
+    carries 24 mantissa bits, so ``size * 1e9`` already rounds)."""
     m = send_vtime.shape[0]
-    ser = (size_bytes.astype(jnp.float32) * 1e9
-           / link_bw_Bps[link_id]).astype(jnp.int32)
+    if ser_ns is not None:
+        ser = ser_ns.astype(jnp.int32)
+    else:
+        ser = (size_bytes.astype(jnp.float32) * 1e9
+               / link_bw_Bps[link_id]).astype(jnp.int32)
     lat = link_lat_ns[link_id].astype(jnp.int32)
     block = min(block, 1 << int(math.ceil(math.log2(max(m, 1)))))
     assert block & (block - 1) == 0

@@ -38,18 +38,22 @@ Quickstart::
 """
 from repro.sim.topology import CellSpec, FabricSpec, Topology
 from repro.sim.workload import (EndpointSpec, Program, ScopeSpec,
+                                VecCompute, VecMark, VecRecv, VecSend,
                                 Workload)
 from repro.sim.scenario import (DegradeLink, FailHost, FailTask,
                                 Injection, Interference, Scenario,
                                 Straggler)
 from repro.sim.report import HostReport, SimReport
 from repro.sim.simulation import Simulation
+from repro.sim.vectorized import SweepResult, UnsupportedByEngine
 from repro.sim.workloads import ChipRingTraining, ModeledServe, RackRing
+from repro.core.engine_jax import TickRangeError
 
 __all__ = [
     "CellSpec", "ChipRingTraining", "DegradeLink", "EndpointSpec",
     "FabricSpec", "FailHost", "FailTask", "HostReport", "Injection",
     "Interference", "ModeledServe", "Program", "RackRing", "Scenario",
-    "ScopeSpec", "SimReport", "Simulation", "Straggler", "Topology",
-    "Workload",
+    "ScopeSpec", "SimReport", "Simulation", "Straggler", "SweepResult",
+    "TickRangeError", "Topology", "UnsupportedByEngine", "VecCompute",
+    "VecMark", "VecRecv", "VecSend", "Workload",
 ]

@@ -56,7 +56,7 @@ def _jsonable(value: Any) -> Any:
 @dataclasses.dataclass
 class SimReport:
     status: str                      # "ok" | "deadlock"
-    mode: str                        # "single" | "async" | "barrier" | "dist"
+    mode: str    # "single" | "async" | "barrier" | "dist" | "vectorized"
     n_hosts: int
     vtime_ns: int                    # simulated horizon
     wall_s: float
@@ -80,6 +80,13 @@ class SimReport:
     #: simulation declared no cells).  Integer-valued, so engines can be
     #: compared bit-exactly on it.
     cells: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    #: vectorized engine only: the compiled tick size and which bar of
+    #: the two-tier conformance contract this run sits under ("exact" =
+    #: every additive ns quantity was tick-divisible, results are
+    #: bit-identical to the reference engines; "tolerance" = quantized,
+    #: vtimes within the declared bound).  0/"" for the other engines.
+    tick_ns: int = 0
+    tier: str = ""
 
     def to_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)

@@ -244,6 +244,49 @@ class Simulation:
                 self.cell_managers[h] = cm
         return cell_of, load_cells
 
+    # -- scenario fault plan -------------------------------------------------
+    def _resolve_fault_plan(self, names: List[str]
+                            ) -> Tuple[Dict[str, float],
+                                       Dict[str, FailTask]]:
+        """Resolve Straggler/FailTask/FailHost injections to per-task
+        compute scale factors and fail points.  Failure precedence (see
+        tests/test_scenario_edges.py): an explicit FailTask always wins
+        over a FailHost expansion regardless of declaration order; two
+        explicit FailTasks on one program is an error; overlapping
+        FailHosts on one host keep the earliest death.  Shared by
+        ``build()`` (generator wrappers) and the vectorized compiler
+        (fail_pc/fail_vtime arrays), so both engines kill identically.
+        Requires ``self.placement`` (FailHost expansion)."""
+        scale: Dict[str, float] = {}
+        fails: Dict[str, FailTask] = {}
+        explicit_fails: set = set()
+        n_hosts = self.topology.n_hosts
+        for inj in self.scenario.injections:
+            if isinstance(inj, Straggler):
+                scale[inj.task] = scale.get(inj.task, 1.0) * inj.slowdown
+            elif isinstance(inj, FailTask):
+                if inj.task in explicit_fails:
+                    raise ValueError(f"two failures for {inj.task!r}")
+                fails[inj.task] = inj
+                explicit_fails.add(inj.task)
+            elif isinstance(inj, FailHost):
+                if not 0 <= inj.host < n_hosts:
+                    raise ValueError(
+                        f"FailHost host {inj.host} outside "
+                        f"0..{n_hosts - 1}")
+                for n, h in self.placement.items():
+                    if h != inj.host or n in explicit_fails:
+                        continue
+                    prev = fails.get(n)
+                    if prev is None or inj.at_vtime < prev.at_vtime:
+                        fails[n] = FailTask(n, at_vtime=inj.at_vtime)
+        unknown = [(t, "Straggler") for t in scale if t not in names] + \
+                  [(t, "FailTask") for t in fails if t not in names]
+        if unknown:
+            raise ValueError(f"injections target unknown programs: "
+                             f"{unknown}")
+        return scale, fails
+
     # -- build ---------------------------------------------------------------
     def build(self) -> "Simulation":
         if self._built:
@@ -296,38 +339,8 @@ class Simulation:
                     raise KeyError(f"unknown fabric {fabric!r}")
                 return host_hubs[host]
 
-        # scenario: per-task wrappers.  Failure precedence (see tests/
-        # test_scenario_edges.py): an explicit FailTask always wins over
-        # a FailHost expansion regardless of declaration order; two
-        # explicit FailTasks on one program is an error; overlapping
-        # FailHosts on one host keep the earliest death.
-        scale: Dict[str, float] = {}
-        fails: Dict[str, FailTask] = {}
-        explicit_fails: set = set()
-        for inj in self.scenario.injections:
-            if isinstance(inj, Straggler):
-                scale[inj.task] = scale.get(inj.task, 1.0) * inj.slowdown
-            elif isinstance(inj, FailTask):
-                if inj.task in explicit_fails:
-                    raise ValueError(f"two failures for {inj.task!r}")
-                fails[inj.task] = inj
-                explicit_fails.add(inj.task)
-            elif isinstance(inj, FailHost):
-                if not 0 <= inj.host < topo.n_hosts:
-                    raise ValueError(
-                        f"FailHost host {inj.host} outside "
-                        f"0..{topo.n_hosts - 1}")
-                for n, h in self.placement.items():
-                    if h != inj.host or n in explicit_fails:
-                        continue
-                    prev = fails.get(n)
-                    if prev is None or inj.at_vtime < prev.at_vtime:
-                        fails[n] = FailTask(n, at_vtime=inj.at_vtime)
-        unknown = [(t, "Straggler") for t in scale if t not in names] + \
-                  [(t, "FailTask") for t in fails if t not in names]
-        if unknown:
-            raise ValueError(f"injections target unknown programs: "
-                             f"{unknown}")
+        # scenario: per-task fault plan (see _resolve_fault_plan)
+        scale, fails = self._resolve_fault_plan(names)
 
         # spawn, in declaration order (determinism: vtask ids, scope and
         # task-list order all follow this loop)
@@ -475,7 +488,10 @@ class Simulation:
     def run(self, *, engine: Optional[str] = None, n_workers: int = 2,
             on_deadlock: str = "report",
             max_rounds: Optional[int] = None,
-            worker_timeout: float = 120.0) -> SimReport:
+            worker_timeout: float = 120.0,
+            tick_ns: Optional[int] = None,
+            pallas: str = "auto",
+            verify: bool = False) -> SimReport:
         """Execute and return a SimReport.
 
         ``engine`` overrides the construction-time ``mode``:
@@ -483,13 +499,31 @@ class Simulation:
         engine; ``engine="dist"`` shards the topology's hosts across
         ``n_workers`` real OS worker processes (`repro.dist`), merging
         per-worker reports — results are bit-identical to the
-        in-process engines.  ``max_rounds`` bounds the engine's
-        dispatch rounds / sync epochs; None keeps each engine's own
-        (generous) default.  ``worker_timeout`` (dist only) fails a
-        hung worker fast instead of wedging the caller."""
+        in-process engines.  ``engine="vectorized"`` compiles the
+        scenario to JAX arrays and runs the jitted round loop
+        (`repro.sim.vectorized`): bit-identical on the exact tier
+        (auto tick), within a declared tolerance under an explicit
+        ``tick_ns``; inadmissible scenarios raise
+        :class:`~repro.sim.vectorized.UnsupportedByEngine`.
+        ``max_rounds`` bounds the engine's dispatch rounds / sync
+        epochs; None keeps each engine's own (generous) default.
+        ``worker_timeout`` (dist only) fails a hung worker fast instead
+        of wedging the caller.  ``tick_ns``/``pallas``/``verify``
+        (vectorized only): quantization tick override, kernel path
+        ("auto"/"on"/"off"/"interpret"), and a cross-check of the
+        batched hub fan-out against the round loop."""
         if on_deadlock not in ("report", "raise"):
             raise ValueError(f"on_deadlock must be 'report' or 'raise', "
                              f"got {on_deadlock!r}")
+        if engine == "vectorized":
+            from repro.sim.vectorized import run_vectorized_sim
+            report = run_vectorized_sim(
+                self, tick_ns=tick_ns, pallas=pallas,
+                max_rounds=max_rounds, verify=verify)
+            if report.status == "deadlock" and on_deadlock == "raise":
+                raise DeadlockError(report.detail
+                                    or "vectorized simulation wedged")
+            return report
         if engine == "dist":
             from repro.dist import run_dist
             report = run_dist(
@@ -568,6 +602,24 @@ class Simulation:
             progress={wl.name: _jsonable(wl.progress())
                       for wl in self.workloads},
             scenario=self.scenario.name, detail=detail, cells=cells)
+
+    def sweep(self, axis: Sequence[Scenario], *,
+              tick_ns: Optional[int] = None,
+              max_rounds: Optional[int] = None):
+        """Vectorized batched configuration sweep: run one simulation
+        per :class:`Scenario` in ``axis`` as a single ``jax.vmap``
+        dispatch over stacked compiled tapes (this Simulation's
+        topology/workloads/placement are shared; only the scenario
+        varies).  Variants must share scenario *structure* — the same
+        tapes, messages and channels; injections may change compute
+        scales, fail points and degrade extras.  Returns a
+        :class:`~repro.sim.vectorized.SweepResult` whose per-variant
+        reports are bit-identical to ``run(engine="vectorized")`` on
+        each scenario alone (and, on the exact tier, to the reference
+        engines)."""
+        from repro.sim.vectorized import sweep_vectorized
+        return sweep_vectorized(self, list(axis), tick_ns=tick_ns,
+                                max_rounds=max_rounds)
 
     # -- conveniences --------------------------------------------------------
     def done(self) -> bool:

@@ -113,6 +113,14 @@ class Topology:
         self.host_links[(min(a, b), max(a, b))] = spec
         return self
 
+    def host_link(self, a: int, b: int) -> LinkSpec:
+        """The effective interconnect of host pair (a, b): the declared
+        per-pair link, else ``default_host_link`` — the same resolution
+        the engines use (``Orchestrator.connect_hosts`` wiring, degrade
+        hooks, the vectorized compiler)."""
+        return self.host_links.get((min(a, b), max(a, b)),
+                                   self.default_host_link)
+
     # -- canned shapes -------------------------------------------------------
     @classmethod
     def single_host(cls, n_cpus: int = 8) -> "Topology":

@@ -49,6 +49,47 @@ class Program:
     cell: Optional[str] = None
 
 
+#: -- vectorized-engine op descriptors ------------------------------------
+#: A workload that can be compiled by the vectorized engine lowers each
+#: *modeled* program body to a flat op list (`Workload.vec_ops`).  The
+#: descriptors mirror the generator actions one-for-one: the vectorized
+#: compiler (``repro.sim.vectorized``) proves the lowering admissible
+#: (single-producer channels, no live calls, ...) and raises
+#: ``UnsupportedByEngine`` otherwise — a workload returning ``None``
+#: simply opts out.
+
+
+@dataclasses.dataclass(frozen=True)
+class VecCompute:
+    """Modeled compute: advance the task's vtime by ``ns``."""
+    ns: int
+
+
+@dataclasses.dataclass(frozen=True)
+class VecSend:
+    """Send ``size_bytes`` from owned endpoint ``endpoint`` to ``dst``."""
+    endpoint: str
+    dst: str
+    size_bytes: int
+
+
+@dataclasses.dataclass(frozen=True)
+class VecRecv:
+    """Blocking receive on owned endpoint ``endpoint`` (payload unused —
+    payload-dependent control flow is not lowerable)."""
+    endpoint: str
+
+
+@dataclasses.dataclass(frozen=True)
+class VecMark:
+    """Progress side effect: ``progress()[array][index] = value``, placed
+    exactly where the generator body performs the assignment (so fault
+    injections truncate progress identically in every engine)."""
+    array: str
+    index: int
+    value: int
+
+
 @dataclasses.dataclass(frozen=True)
 class ScopeSpec:
     """A bounded-skew scope over ``members`` (None = every program of the
@@ -78,3 +119,12 @@ class Workload:
 
     def progress(self) -> Dict[str, Any]:
         return {}
+
+    def vec_ops(self) -> Optional[Dict[str, List[Any]]]:
+        """Program name -> flat op list (:class:`VecCompute` /
+        :class:`VecSend` / :class:`VecRecv` / :class:`VecMark`),
+        action-for-action identical to the generator bodies.  ``None``
+        (the default) means the workload has no vectorized lowering and
+        ``Simulation.run(engine="vectorized")`` raises
+        ``UnsupportedByEngine``."""
+        return None

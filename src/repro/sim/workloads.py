@@ -19,6 +19,7 @@ from repro.core.ipc import LinkSpec
 from repro.core.vtask import Compute, LiveCall, Recv, Send
 from repro.sim.topology import FabricSpec
 from repro.sim.workload import (EndpointSpec, Program, ScopeSpec,
+                                VecCompute, VecMark, VecRecv, VecSend,
                                 Workload)
 
 
@@ -128,6 +129,32 @@ class ChipRingTraining(Workload):
 
     def progress(self) -> Dict[str, np.ndarray]:
         return {"done_steps": self.done_steps}
+
+    def vec_ops(self):
+        """Vectorized lowering — op-for-op the ``_chip_body`` stream
+        (modeled computes only; live steps have no array form)."""
+        if self.live_step_fn is not None:
+            return None
+        spec, cost = self.spec, self.step_cost
+        out = {}
+        for c in range(spec.n_chips):
+            p = c // spec.chips_per_pod
+            right = p * spec.chips_per_pod + (c + 1) % spec.chips_per_pod
+            leader = spec.n_pods > 1 and c % spec.chips_per_pod == 0
+            other = (p + 1) % spec.n_pods
+            ops = []
+            for step in range(self.n_steps):
+                ops.append(VecCompute(cost.compute_ns))
+                ops.append(VecSend(f"chip{c}", f"chip{right}",
+                                   cost.ici_bytes))
+                ops.append(VecRecv(f"chip{c}"))
+                if leader:
+                    ops.append(VecSend(f"pod{p}", f"pod{other}",
+                                       cost.dcn_bytes))
+                    ops.append(VecRecv(f"pod{p}"))
+                ops.append(VecMark("done_steps", c, step + 1))
+            out[f"chip{c}"] = ops
+        return out
 
 
 class RackRing(Workload):
@@ -252,6 +279,35 @@ class RackRing(Workload):
 
     def progress(self) -> Dict[str, np.ndarray]:
         return {"iters_done": self.iters_done}
+
+    def vec_ops(self):
+        """Vectorized lowering — op-for-op the ``_worker_body`` stream
+        (modeled iterations only)."""
+        if self.live:
+            return None
+        out = {}
+        for h in range(self.n_workers):
+            r = h // self.hosts_per_rack
+            slot = h % self.hosts_per_rack
+            right = (r * self.hosts_per_rack
+                     + (slot + 1) % self.hosts_per_rack)
+            is_leader = slot == 0
+            next_rack = (r + 1) % self.n_racks
+            ops = []
+            for i in range(self.n_iters):
+                ops.append(VecCompute(self.compute_ns))
+                if self.hosts_per_rack > 1:
+                    ops.append(VecSend(f"w{h}", f"w{right}",
+                                       self.msg_bytes))
+                    ops.append(VecRecv(f"w{h}"))
+                if (is_leader and self.n_racks > 1
+                        and (i + 1) % self.cross_every == 0):
+                    ops.append(VecSend(f"lead{r}", f"lead{next_rack}",
+                                       self.msg_bytes))
+                    ops.append(VecRecv(f"lead{r}"))
+                ops.append(VecMark("iters_done", h, i + 1))
+            out[f"w{h}"] = ops
+        return out
 
 
 class ModeledServe(Workload):

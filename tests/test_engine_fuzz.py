@@ -14,16 +14,17 @@ inherited from ``engines_for``'s defaults): the multi-process transport
 skipping — is exactly the code a refactor is most likely to break in a
 way unit tests miss, so every fuzz draw must exercise it.
 
-Skipped when hypothesis is absent (it is in requirements-dev.txt but
-not baked into the runtime image).
+The hypothesis-driven draws skip when hypothesis is absent (it is in
+requirements-dev.txt but not baked into the runtime image); the
+deterministic vectorized sweep at the bottom always runs.
 """
 import os
 
-import pytest
-
-hyp = pytest.importorskip("hypothesis")
-from hypothesis import HealthCheck, given, settings  # noqa: E402
-from hypothesis import strategies as st  # noqa: E402
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+except ImportError:                                 # pragma: no cover
+    st = None
 
 from engine_harness import assert_engines_agree, engines_for  # noqa: E402
 from repro.core.ipc import LinkSpec  # noqa: E402
@@ -32,116 +33,224 @@ from repro.sim import (DegradeLink, FailTask, RackRing,  # noqa: E402
 
 LATENCIES = (500, 2_000, 10_000, 50_000)
 
-topologies = st.tuples(
-    st.integers(min_value=1, max_value=2),      # n_racks
-    st.integers(min_value=1, max_value=2),      # hosts_per_rack
-    st.sampled_from(LATENCIES),                 # intra-rack latency
-    st.sampled_from(LATENCIES),                 # cross-rack latency
-)
+if st is not None:
+    topologies = st.tuples(
+        st.integers(min_value=1, max_value=2),      # n_racks
+        st.integers(min_value=1, max_value=2),      # hosts_per_rack
+        st.sampled_from(LATENCIES),                 # intra-rack latency
+        st.sampled_from(LATENCIES),                 # cross-rack latency
+    )
 
-workloads = st.tuples(
-    st.integers(min_value=2, max_value=8),      # n_iters
-    st.sampled_from((2_000, 5_000, 20_000)),    # compute_ns
-    st.integers(min_value=2, max_value=4),      # cross_every
-    st.sampled_from((0, 100_000, 2_000_000)),   # skew_bound_ns
-)
-
-
-@st.composite
-def cell_plans(draw, n_workers: int):
-    """Optionally bind every worker to a §3.3 cell (live iterations +
-    per-host cell state): the engines must then also agree bit-exactly
-    on slowdown multipliers, warm-slot switches, and reconditioning
-    residues (SimReport.cells is in the harness CORE_FIELDS).
-
-    ``colocate`` stacks two workers per host (serial hosts, n_cpus=1)
-    so the multiset actually holds co-active cells — spatial
-    interference and warm-slot LRU eviction get fuzzed, not just the
-    solo self-pressure path."""
-    if not draw(st.booleans()):
-        return None
-    return {
-        "cells": {f"w{w}": f"c{w % 2}" for w in range(n_workers)},
-        "colocate": n_workers >= 2 and draw(st.booleans()),
-        "specs": (
-            dict(ways=draw(st.sampled_from((2, 4))),
-                 working_set_frac=0.7, bw_share=0.3,
-                 bw_demand=draw(st.sampled_from((0.5, 0.8))),
-                 mem_frac=0.5),
-            dict(ways=6, working_set_frac=0.4, bw_share=0.5,
-                 bw_demand=0.4, mem_frac=0.3),
-        ),
-        "knobs": dict(n_warm_slots=draw(st.sampled_from((1, 2))),
-                      recondition_ns=draw(st.sampled_from((0,
-                                                           20_000)))),
-    }
+    workloads = st.tuples(
+        st.integers(min_value=2, max_value=8),      # n_iters
+        st.sampled_from((2_000, 5_000, 20_000)),    # compute_ns
+        st.integers(min_value=2, max_value=4),      # cross_every
+        st.sampled_from((0, 100_000, 2_000_000)),   # skew_bound_ns
+    )
 
 
-@st.composite
-def scenarios(draw, n_workers: int):
-    injections = []
-    for w in range(n_workers):
-        kind = draw(st.sampled_from(("none", "none", "straggler",
-                                     "fail")))
-        if kind == "straggler":
-            injections.append(Straggler(
-                f"w{w}", draw(st.sampled_from((1.5, 2.0, 3.0)))))
-        elif kind == "fail":
-            injections.append(FailTask(
-                f"w{w}",
-                at_compute=draw(st.integers(min_value=0, max_value=3))))
-    if draw(st.booleans()):
-        injections.append(DegradeLink(
-            fabric="hub",
-            extra_ns=draw(st.sampled_from((1_000, 25_000))),
-            from_vtime=draw(st.sampled_from((0, 30_000)))))
-    return Scenario("fuzz", tuple(injections))
+    @st.composite
+    def cell_plans(draw, n_workers: int):
+        """Optionally bind every worker to a §3.3 cell (live iterations +
+        per-host cell state): the engines must then also agree bit-exactly
+        on slowdown multipliers, warm-slot switches, and reconditioning
+        residues (SimReport.cells is in the harness CORE_FIELDS).
+
+        ``colocate`` stacks two workers per host (serial hosts, n_cpus=1)
+        so the multiset actually holds co-active cells — spatial
+        interference and warm-slot LRU eviction get fuzzed, not just the
+        solo self-pressure path."""
+        if not draw(st.booleans()):
+            return None
+        return {
+            "cells": {f"w{w}": f"c{w % 2}" for w in range(n_workers)},
+            "colocate": n_workers >= 2 and draw(st.booleans()),
+            "specs": (
+                dict(ways=draw(st.sampled_from((2, 4))),
+                     working_set_frac=0.7, bw_share=0.3,
+                     bw_demand=draw(st.sampled_from((0.5, 0.8))),
+                     mem_frac=0.5),
+                dict(ways=6, working_set_frac=0.4, bw_share=0.5,
+                     bw_demand=0.4, mem_frac=0.3),
+            ),
+            "knobs": dict(n_warm_slots=draw(st.sampled_from((1, 2))),
+                          recondition_ns=draw(st.sampled_from((0,
+                                                               20_000)))),
+        }
 
 
-@settings(max_examples=15, deadline=None,
-          suppress_health_check=[HealthCheck.too_slow])
-@given(data=st.data())
-def test_random_scenarios_agree_across_engines(data):
-    n_racks, per_rack, intra, cross = data.draw(topologies,
-                                                label="topology")
-    n_iters, compute_ns, cross_every, skew = data.draw(workloads,
-                                                       label="workload")
-    n_workers = n_racks * per_rack
-    scenario = data.draw(scenarios(n_workers), label="scenario")
-    cell_plan = data.draw(cell_plans(n_workers), label="cells")
+    @st.composite
+    def scenarios(draw, n_workers: int):
+        injections = []
+        for w in range(n_workers):
+            kind = draw(st.sampled_from(("none", "none", "straggler",
+                                         "fail")))
+            if kind == "straggler":
+                injections.append(Straggler(
+                    f"w{w}", draw(st.sampled_from((1.5, 2.0, 3.0)))))
+            elif kind == "fail":
+                injections.append(FailTask(
+                    f"w{w}",
+                    at_compute=draw(st.integers(min_value=0, max_value=3))))
+        if draw(st.booleans()):
+            injections.append(DegradeLink(
+                fabric="hub",
+                extra_ns=draw(st.sampled_from((1_000, 25_000))),
+                from_vtime=draw(st.sampled_from((0, 30_000)))))
+        return Scenario("fuzz", tuple(injections))
 
-    def make():
-        wl = RackRing(n_racks=n_racks, hosts_per_rack=per_rack,
-                      n_iters=n_iters, compute_ns=compute_ns,
-                      cross_every=cross_every, skew_bound_ns=skew,
-                      live=cell_plan is not None,
-                      cells=cell_plan["cells"] if cell_plan else None)
-        topo = Topology.racks(
-            n_racks, per_rack,
-            intra_link=LinkSpec(bandwidth_bps=80e9 * 8,
-                                latency_ns=intra),
-            cross_link=LinkSpec(bandwidth_bps=25e9 * 8,
-                                latency_ns=cross),
-            # cell state transitions are engine-exact on serial hosts
-            n_cpus=1 if cell_plan else 4)
-        placement = wl.default_placement()
-        if cell_plan:
-            for i, spec in enumerate(cell_plan["specs"]):
-                topo.cell(f"c{i}", **spec)
-            topo.cell_config(**cell_plan["knobs"])
-            if cell_plan["colocate"]:
-                # stack worker pairs: each occupied host's multiset now
-                # holds both cells (co-active interference + LRU churn);
-                # surplus hosts simply idle
-                placement = {f"w{w}": w // 2 for w in range(n_workers)}
-        return Simulation(topo, wl, scenario, placement=placement)
 
-    engines = engines_for(n_workers, dist_workers=2)
-    if hasattr(os, "fork"):
-        # transport refactors must be fuzzed, not just unit-tested:
-        # the multi-process engine (1 worker fast path + K-worker
-        # coalesced rounds) is required in every draw's matrix
-        assert "dist:1" in engines, engines
-        assert n_workers == 1 or f"dist:{min(2, n_workers)}" in engines
-    assert_engines_agree(make, engines=engines,
-                         label=f"{n_racks}x{per_rack} racks")
+    @settings(max_examples=15, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(data=st.data())
+    def test_random_scenarios_agree_across_engines(data):
+        n_racks, per_rack, intra, cross = data.draw(topologies,
+                                                    label="topology")
+        n_iters, compute_ns, cross_every, skew = data.draw(workloads,
+                                                           label="workload")
+        n_workers = n_racks * per_rack
+        scenario = data.draw(scenarios(n_workers), label="scenario")
+        cell_plan = data.draw(cell_plans(n_workers), label="cells")
+
+        def make():
+            wl = RackRing(n_racks=n_racks, hosts_per_rack=per_rack,
+                          n_iters=n_iters, compute_ns=compute_ns,
+                          cross_every=cross_every, skew_bound_ns=skew,
+                          live=cell_plan is not None,
+                          cells=cell_plan["cells"] if cell_plan else None)
+            topo = Topology.racks(
+                n_racks, per_rack,
+                intra_link=LinkSpec(bandwidth_bps=80e9 * 8,
+                                    latency_ns=intra),
+                cross_link=LinkSpec(bandwidth_bps=25e9 * 8,
+                                    latency_ns=cross),
+                # cell state transitions are engine-exact on serial hosts
+                n_cpus=1 if cell_plan else 4)
+            placement = wl.default_placement()
+            if cell_plan:
+                for i, spec in enumerate(cell_plan["specs"]):
+                    topo.cell(f"c{i}", **spec)
+                topo.cell_config(**cell_plan["knobs"])
+                if cell_plan["colocate"]:
+                    # stack worker pairs: each occupied host's multiset now
+                    # holds both cells (co-active interference + LRU churn);
+                    # surplus hosts simply idle
+                    placement = {f"w{w}": w // 2 for w in range(n_workers)}
+            return Simulation(topo, wl, scenario, placement=placement)
+
+        engines = engines_for(n_workers, dist_workers=2)
+        if hasattr(os, "fork"):
+            # transport refactors must be fuzzed, not just unit-tested:
+            # the multi-process engine (1 worker fast path + K-worker
+            # coalesced rounds) is required in every draw's matrix
+            assert "dist:1" in engines, engines
+            assert n_workers == 1 or f"dist:{min(2, n_workers)}" in engines
+        assert_engines_agree(make, engines=engines,
+                             label=f"{n_racks}x{per_rack} racks")
+
+
+    # ---------------------------------------------------------------- vectorized
+
+
+    def _vec_make(n_racks, per_rack, intra, cross, n_iters, compute_ns,
+                  cross_every, skew, scenario):
+        """Modeled (non-cell) RackRing factory on the admissible surface of
+        the vectorized engine."""
+        def make():
+            wl = RackRing(n_racks=n_racks, hosts_per_rack=per_rack,
+                          n_iters=n_iters, compute_ns=compute_ns,
+                          cross_every=cross_every, skew_bound_ns=skew)
+            topo = Topology.racks(
+                n_racks, per_rack,
+                intra_link=LinkSpec(bandwidth_bps=80e9 * 8,
+                                    latency_ns=intra),
+                cross_link=LinkSpec(bandwidth_bps=25e9 * 8,
+                                    latency_ns=cross),
+                n_cpus=4)
+            return Simulation(topo, wl, scenario,
+                              placement=wl.default_placement())
+        return make
+
+
+    @settings(max_examples=10, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(data=st.data())
+    def test_random_scenarios_vectorized_exact(data):
+        """Exact tier under fuzz: every modeled draw — stragglers, fail
+        points, degraded links included — must compile at the auto tick and
+        match the async reference bit-exactly (CORE_FIELDS + links)."""
+        from engine_harness import assert_vectorized_exact
+
+        n_racks, per_rack, intra, cross = data.draw(topologies,
+                                                    label="topology")
+        n_iters, compute_ns, cross_every, skew = data.draw(workloads,
+                                                           label="workload")
+        scenario = data.draw(scenarios(n_racks * per_rack),
+                             label="scenario")
+        assert_vectorized_exact(
+            _vec_make(n_racks, per_rack, intra, cross, n_iters, compute_ns,
+                      cross_every, skew, scenario),
+            label=f"vec {n_racks}x{per_rack}")
+
+
+    @settings(max_examples=6, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(data=st.data())
+    def test_random_scenarios_vectorized_tolerance(data):
+        """Tolerance tier under fuzz: a deliberately coarse explicit tick
+        must keep every schedule-independent invariant exact and every
+        vtime within the engine's own published bound (tol_ns)."""
+        from engine_harness import assert_vectorized_tolerance
+        from repro.sim.vectorized import compile_simulation
+
+        n_racks, per_rack, intra, cross = data.draw(topologies,
+                                                    label="topology")
+        n_iters, compute_ns, cross_every, skew = data.draw(workloads,
+                                                           label="workload")
+        scenario = data.draw(scenarios(n_racks * per_rack),
+                             label="scenario")
+        make = _vec_make(n_racks, per_rack, intra, cross, n_iters,
+                         compute_ns, cross_every, skew, scenario)
+        tol = compile_simulation(make(), tick_ns=100).tol_ns
+        assert_vectorized_tolerance(make, 100, vtime_tol_ns=max(tol, 100),
+                                    label=f"vec-tol {n_racks}x{per_rack}")
+
+
+def test_deterministic_sweep_48_draws():
+    """One vmap sweep over 48 injection-value draws (fixed topology and
+    tapes, so a single compile serves all variants); every lane must
+    match a solo async reference run bit-exactly."""
+    import numpy as np
+
+    from engine_harness import run_engine
+    from repro.sim import FailHost
+
+    rng = np.random.default_rng(7)
+    axis = []
+    for i in range(48):
+        inj = [Straggler(f"w{rng.integers(0, 4)}",
+                         float(rng.choice((1.5, 2.0, 2.5, 3.0)))),
+               DegradeLink(fabric="hub",
+                           extra_ns=int(rng.choice((0, 1_000, 25_000))),
+                           from_vtime=int(rng.choice((0, 30_000))))]
+        if rng.random() < 0.25:
+            inj.append(FailHost(int(rng.integers(0, 4)),
+                                at_vtime=int(rng.integers(1, 40) *
+                                             10_000)))
+        axis.append(Scenario(f"draw{i}", tuple(inj)))
+
+    def base(sc=Scenario("base")):
+        wl = RackRing(n_racks=2, hosts_per_rack=2, n_iters=6,
+                      compute_ns=5_000, cross_every=2,
+                      skew_bound_ns=100_000)
+        return Simulation(Topology.racks(2, 2), wl, sc,
+                          placement=wl.default_placement())
+
+    res = base().sweep(axis)
+    assert len(res.reports) == 48
+    for sc, rep in zip(axis, res.reports):
+        ref = run_engine(lambda: base(sc), "async")
+        assert rep.status == ref.status, sc
+        assert rep.vtime_ns == ref.vtime_ns, sc
+        assert rep.tasks == ref.tasks, sc
+        assert rep.progress == ref.progress, sc

@@ -104,9 +104,33 @@ def canonical(report) -> dict:
     return out
 
 
+def vec_canonical(report) -> dict:
+    """Canonical subset of a vectorized-engine run: the same
+    timing-bearing fields plus the compiled tick/tier (no ``perf`` —
+    round counts are engine-dependent)."""
+    d = report.to_dict()
+    out = {k: d[k] for k in CANONICAL_FIELDS}
+    out["tier"] = report.tier
+    out["tick_ns"] = report.tick_ns
+    return out
+
+
 def compute_traces() -> dict:
-    return {name: canonical(make().run())
-            for name, make in sorted(_gallery().items())}
+    from repro.sim import UnsupportedByEngine
+
+    traces = {}
+    for name, make in sorted(_gallery().items()):
+        rec = canonical(make().run())
+        try:
+            # exact-tier scenarios additionally pin the vectorized
+            # compiler's output; cpu_resource/cell scenarios raise and
+            # simply carry no vectorized row
+            rec["vectorized"] = vec_canonical(
+                make().run(engine="vectorized", verify=True))
+        except UnsupportedByEngine:
+            pass
+        traces[name] = rec
+    return traces
 
 
 @pytest.mark.parametrize("name", sorted(_gallery()))
@@ -122,6 +146,34 @@ def test_gallery_matches_golden_trace(name):
             f"{name}: {field} shifted from the golden trace "
             f"(intentional? regenerate with --regen and review the "
             f"diff)\n got: {got[field]!r}\nwant: {want[field]!r}")
+
+
+#: gallery scenarios on the vectorized engine's admissible surface —
+#: their golden records also pin the compiled (exact-tier) output
+VEC_SCENARIOS = ("straggler_host_death", "degraded_link")
+
+
+@pytest.mark.parametrize("name", VEC_SCENARIOS)
+def test_gallery_vectorized_matches_golden_trace(name):
+    golden = json.loads(GOLDEN.read_text())
+    want = golden[name].get("vectorized")
+    assert want is not None, (
+        f"no vectorized golden for {name!r}; regenerate with "
+        f"PYTHONPATH=src python {__file__} --regen")
+    rep = _gallery()[name]().run(engine="vectorized", verify=True)
+    got = vec_canonical(rep)
+    assert rep.tier == "exact", f"{name}: compiled tier={rep.tier!r}"
+    for field in CANONICAL_FIELDS + ("tier", "tick_ns"):
+        assert got[field] == want[field], (
+            f"{name}: vectorized {field} shifted from the golden "
+            f"trace\n got: {got[field]!r}\nwant: {want[field]!r}")
+    # and the compiled run must agree with the *reference engine's*
+    # committed golden on every shared timing-bearing field: two
+    # independently stored records, one simulation
+    for field in CANONICAL_FIELDS:
+        assert got[field] == golden[name][field], (
+            f"{name}: vectorized diverges from the reference golden "
+            f"on {field}: {got[field]!r} != {golden[name][field]!r}")
 
 
 if __name__ == "__main__":

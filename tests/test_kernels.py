@@ -223,3 +223,152 @@ def test_hub_route_vs_ref(m, n_links, block):
     ref = hub_visibility_ref(send, size, link_id, bw, lat)
     # serialization rounding: float32 vs float64 division -> +-1ns slop
     np.testing.assert_allclose(np.asarray(out, np.int64), ref, atol=16)
+
+
+# ------------------------------------------------- minskew edge cases (sim)
+
+
+INF = 2**30
+
+
+def _minskew_case(vtime, runnable, membership, skew, **kw):
+    vtime = jnp.asarray(vtime, jnp.int32)
+    runnable = np.asarray(runnable, bool)
+    membership = np.asarray(membership, bool)
+    skew = jnp.asarray(skew, jnp.int32)
+    minima, elig = minskew(vtime, jnp.asarray(runnable, jnp.int8),
+                           jnp.asarray(membership, jnp.int8), skew,
+                           interpret=True, **kw)
+    ref_min, ref_elig = kref.minskew_ref(np.asarray(vtime), runnable,
+                                         membership, np.asarray(skew))
+    np.testing.assert_array_equal(np.asarray(minima), ref_min)
+    np.testing.assert_array_equal(np.asarray(elig) != 0, ref_elig)
+    return np.asarray(minima), np.asarray(elig) != 0
+
+
+def test_minskew_all_masked():
+    """No runnable member anywhere: minima must be INF and nothing may
+    dispatch (a fixpoint round of the vectorized engine)."""
+    n, s = 40, 6
+    minima, elig = _minskew_case(
+        RNG.integers(0, 10_000, n), np.zeros(n, bool),
+        RNG.random((n, s)) < 0.4, RNG.integers(1, 500, s))
+    assert (minima == INF).all()
+    assert not elig.any()
+
+
+def test_minskew_empty_scope():
+    """A scope with zero members is INF-min and must not gate anyone
+    (the `minima == INF` escape in the eligibility rule)."""
+    n, s = 24, 4
+    membership = RNG.random((n, s)) < 0.5
+    membership[:, 2] = False                      # nobody in scope 2
+    minima, elig = _minskew_case(
+        RNG.integers(0, 10_000, n), np.ones(n, bool), membership,
+        np.zeros(s, np.int32))
+    assert minima[2] == INF
+    # zero skew + all runnable: exactly the global-min members of each
+    # populated scope dispatch, so someone must be eligible
+    assert elig.any()
+
+
+def test_minskew_sentinel_vtimes():
+    """Blocked tasks park at vtime INF in the vectorized engine; INF
+    lanes must neither win minima nor become eligible."""
+    n, s = 16, 3
+    vtime = RNG.integers(0, 10_000, n)
+    vtime[::2] = INF
+    runnable = np.ones(n, bool)
+    runnable[::2] = False
+    minima, elig = _minskew_case(vtime, runnable,
+                                 np.ones((n, s), bool),
+                                 RNG.integers(1, 100, s))
+    assert (minima < INF).all()
+    assert not elig[::2].any()
+
+
+def test_minskew_int32_boundary():
+    """vtimes near the top of the tick range: minima + skew crosses
+    2**30 but must not wrap int32."""
+    n, s = 12, 2
+    vtime = (INF - 1 - RNG.integers(0, 2_000, n)).astype(np.int64)
+    minima, elig = _minskew_case(vtime, np.ones(n, bool),
+                                 np.ones((n, s), bool),
+                                 np.full(s, 5_000, np.int32))
+    assert (minima >= INF - 2_001).all()
+    assert elig.all()                   # all within skew of the min
+
+
+def test_minskew_tiny_shapes():
+    """N and S far below one block (padding-dominated grid)."""
+    minima, elig = _minskew_case([7], [True], [[True]], [0])
+    assert minima[0] == 7 and elig[0]
+    _minskew_case(RNG.integers(0, 100, 3), [True, False, True],
+                  RNG.random((3, 2)) < 0.5, [10, 20])
+
+
+# ------------------------------------------------ hub_route ser_ns bypass
+
+
+@pytest.mark.parametrize("m,block", [(1, 64), (7, 64), (129, 64),
+                                     (500, 128)])
+def test_hub_route_ser_ns_bitexact(m, block):
+    """With integer ``ser_ns`` the kernel must match the sequential
+    oracle *bit-exactly* — no float32 serialization slop.  This is the
+    contract the vectorized sim engine's exact tier rides on (its tapes
+    precompute tick-exact durations; f32 only carries 24 mantissa bits,
+    so e.g. 163e9/1e9 would truncate to 162)."""
+    n_links = 5
+    link_id = np.sort(RNG.integers(0, n_links, m)).astype(np.int32)
+    send = np.zeros(m, np.int64)
+    for l in range(n_links):
+        idx = np.where(link_id == l)[0]
+        send[idx] = np.sort(RNG.integers(0, 50_000, len(idx)))
+    ser = RNG.integers(0, 10_000, m).astype(np.int32)
+    ser[RNG.random(m) < 0.2] = 163       # the f32-hostile value
+    size = np.ones(m, np.int32)          # decoys: must be ignored
+    bw = np.full(n_links, 1.0)
+    lat = RNG.integers(0, 5_000, n_links).astype(np.int32)
+    out = hub_route(jnp.asarray(send, jnp.int32), jnp.asarray(size),
+                    jnp.asarray(link_id), jnp.asarray(bw, jnp.float32),
+                    jnp.asarray(lat), ser_ns=jnp.asarray(ser),
+                    block=block, interpret=True)
+    ref = hub_visibility_ref(send, size, link_id, bw, lat, ser_ns=ser)
+    np.testing.assert_array_equal(np.asarray(out, np.int64), ref)
+
+
+def test_hub_visibility_ser_ns_bitexact():
+    """The jnp scan path honors the same ser_ns bypass, bit-exactly."""
+    from repro.core.engine_jax import hub_visibility
+
+    m, n_links = 200, 4
+    link_id = np.sort(RNG.integers(0, n_links, m)).astype(np.int32)
+    send = np.zeros(m, np.int64)
+    for l in range(n_links):
+        idx = np.where(link_id == l)[0]
+        send[idx] = np.sort(RNG.integers(0, 50_000, len(idx)))
+    ser = RNG.integers(0, 10_000, m).astype(np.int32)
+    lat = RNG.integers(0, 5_000, n_links).astype(np.int32)
+    out = hub_visibility(jnp.asarray(send, jnp.int32),
+                         jnp.ones(m, jnp.int32), jnp.asarray(link_id),
+                         jnp.ones(n_links, jnp.float32),
+                         jnp.asarray(lat), ser_ns=jnp.asarray(ser))
+    ref = hub_visibility_ref(send, np.ones(m, np.int32), link_id,
+                             np.ones(n_links), lat, ser_ns=ser)
+    np.testing.assert_array_equal(np.asarray(out, np.int64), ref)
+
+
+def test_hub_route_float32_mantissa_demo():
+    """Regression pin for the bug the bypass fixes: a 163 ns
+    serialization at 1 GB/ns-scale bandwidth truncates to 162 under
+    the float32 path, and stays 163 under ser_ns."""
+    send = jnp.zeros(1, jnp.int32)
+    size = jnp.asarray([163], jnp.int32)
+    link = jnp.zeros(1, jnp.int32)
+    bw = jnp.asarray([1e9], jnp.float32)
+    lat = jnp.zeros(1, jnp.int32)
+    f32 = int(hub_route(send, size, link, bw, lat, interpret=True)[0])
+    exact = int(hub_route(send, size, link, bw, lat,
+                          ser_ns=jnp.asarray([163], jnp.int32),
+                          interpret=True)[0])
+    assert f32 == 162 and exact == 163
