@@ -33,10 +33,16 @@ track the hot path PR-over-PR:
   variants of the rack scenario in one ``Simulation.sweep`` dispatch;
   records configs/s and the speedup over running the same variants
   through sequential vectorized runs.
+* **live_recovery** (recorded-cost replay of the marquee live
+  scenario) — the real sharded trainer's failure-recovery trace
+  (tests/golden/live_recovery_trace.json) replayed under async and
+  dist; records the recovery window (detect -> resumed vtime span) and
+  holds replay dispatch throughput above the scheduler floor, so the
+  live replay path stays on the hot-path budget.
 
 Outputs (single writer: everything is derived from the root schema):
   BENCH_cluster.json              — compact aggregates-only summary
-                                    (schema BENCH_cluster/v5, documented
+                                    (schema BENCH_cluster/v6, documented
                                     in README.md), committed at the repo
                                     root so the perf trajectory stays
                                     reviewable PR-over-PR
@@ -279,6 +285,75 @@ def smoke_cells() -> None:
           f"{row['cell_switches']} switches")
 
 
+def simulate_live_recovery(engine: str = "async", *,
+                           n_workers: int = DIST_WORKERS) -> dict:
+    """One replay of the recorded marquee trace under ``engine``.  Pure
+    replay: pinned integer costs, no JAX work — the row measures the
+    live subsystem's scheduling overhead and the recovery window."""
+    from repro.live import CostLedger
+    from repro.sim import live_recovery_sim, recovery_timeline
+
+    trace = ROOT / "tests" / "golden" / "live_recovery_trace.json"
+    sim = live_recovery_sim(CostLedger.replay(trace))
+    if engine == "dist":
+        report = sim.run(engine="dist", n_workers=n_workers,
+                         on_deadlock="raise")
+    else:
+        report = sim.run(engine=engine, on_deadlock="raise")
+    assert report.status == "ok", report.detail
+    tl = recovery_timeline(report)
+    v = {e["event"]: e["vtime"] for e in tl}
+    assert v["detect"] < v["restore"] < v["remesh"] <= v["resumed"], tl
+    row = _aggregate(report)
+    row["engine"] = engine
+    row["recovery_ns"] = v["resumed"] - v["detect"]
+    row["restore_ns"] = v["restore"] - v["detect"]
+    row["remesh_ns"] = v["remesh"] - v["restore"]
+    row["final_vtimes"] = sorted(t["vtime"]
+                                 for t in report.tasks.values())
+    row["live_section"] = report.to_dict()["live"]
+    return row
+
+
+def main_live_recovery() -> dict:
+    engines = [("async", "async", 1)]
+    if HAS_FORK:
+        engines += [(f"dist_{DIST_WORKERS}w", "dist", DIST_WORKERS)]
+    rows = {}
+    for name, engine, k in engines:
+        rows[name] = simulate_live_recovery(engine, n_workers=k)
+    base = next(iter(rows))
+    assert all(r["final_vtimes"] == rows[base]["final_vtimes"]
+               and r["live_section"] == rows[base]["live_section"]
+               for r in rows.values()), \
+        "engines disagree on the live recovery replay"
+    a = rows["async"]
+    print(f"live recovery regime (recorded-cost replay, "
+          f"{a['n_hosts']} hosts):")
+    for name, r in rows.items():
+        print(f"{name:>10s} x{r['n_workers']}: recovery window "
+              f"{r['recovery_ns']/1e6:.1f} ms (restore "
+              f"{r['restore_ns']/1e6:.1f} + remesh "
+              f"{r['remesh_ns']/1e6:.1f}), wall {r['wall_s']:.3f}s, "
+              f"{r['dispatch_per_s']} disp/s")
+    return rows
+
+
+def smoke_live_recovery() -> None:
+    """CI smoke: the recorded marquee trace must replay cleanly with an
+    ordered recovery timeline, and the replay path's dispatch
+    throughput must clear the same generous floor as the cells regime
+    (half the seed scheduler's 4096-task baseline) — live replay is
+    modeled-cost scheduling and must stay on that budget."""
+    row = simulate_live_recovery("async")
+    assert row["recovery_ns"] > 0, row
+    floor = SEED_REFERENCE_4096_DISPATCH_PER_S / 2
+    assert row["dispatch_per_s"] > floor, (row["dispatch_per_s"], floor)
+    print(f"live recovery smoke ok: recovery window "
+          f"{row['recovery_ns']/1e6:.1f} ms, {row['dispatch_per_s']} "
+          f"disp/s (floor {floor:.0f})")
+
+
 def main_sweep(n_variants: int = 32, *, n_iters: int = 300,
                warm: bool = True) -> dict:
     """The vmap batched-sweep regime: ``n_variants`` straggler variants
@@ -448,6 +523,7 @@ def main():
     large = main_multihost_large()
     cells = main_cells()
     sweep = main_sweep()
+    live = main_live_recovery()
     sharded = simulate_sharded_dist() if HAS_FORK else None
     sharded_large = (simulate_sharded_dist(n_chips=2048, n_hosts=16)
                      if HAS_FORK else None)
@@ -469,16 +545,19 @@ def main():
     # aggregates only, so PR-over-PR diffs stay reviewable
     def strip(rs):
         return {name: {k: v for k, v in r.items()
-                       if k not in ("final_vtimes", "cell_report")}
+                       if k not in ("final_vtimes", "cell_report",
+                                    "live_section")}
                 for name, r in rs.items()}
     bench = {
-        # v5: + the vectorized engine row in multihost and the vmap
-        # batched-sweep regime (configs/s)
-        "schema": "BENCH_cluster/v5",
+        # v6: + the live_recovery replay regime (recovery window +
+        # replay dispatch throughput); v5 added the vectorized engine
+        # row in multihost and the vmap batched-sweep regime
+        "schema": "BENCH_cluster/v6",
         "multihost": strip(multihost),
         "multihost_large": strip(large),
         "cells": strip(cells),
         "sweep": sweep,
+        "live_recovery": strip(live),
         "training": rows,
     }
     if HAS_FORK:
@@ -520,5 +599,6 @@ if __name__ == "__main__":
     if ap.parse_args().smoke:
         smoke_cells()
         smoke_vectorized()
+        smoke_live_recovery()
     else:
         main()

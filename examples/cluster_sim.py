@@ -228,6 +228,55 @@ def run_scenarios(n_iters: int = 120, n_steps: int = 20,
           f"{hot['max_slowdown_ppm']/1e6:.2f}x)")
 
 
+def run_live_recovery(dist_workers: int = 2):
+    """Live recovery demo (replay mode): the marquee scenario — a real
+    sharded Trainer recorded once under simulated time (the checked-in
+    trace at tests/golden/live_recovery_trace.json; re-record with
+    ``python -m repro.live record``) takes a FailHost mid-run, restores
+    the last committed checkpoint, elastically re-meshes, and resumes.
+    Replaying the pinned costs reproduces the recorded vtimes
+    bit-exactly on every engine — no JAX work happens here."""
+    import pathlib
+
+    from repro.live import CostLedger
+    from repro.sim import live_recovery_sim, recovery_timeline
+
+    trace = (pathlib.Path(__file__).parent.parent / "tests" / "golden"
+             / "live_recovery_trace.json")
+    print("\nlive trainer recovery (recorded-cost replay):")
+    engines = ["barrier", "async"]
+    if hasattr(os, "fork"):
+        engines.append("dist")
+    results = {}
+    for engine in engines:
+        sim = live_recovery_sim(CostLedger.replay(trace))
+        if engine == "dist":
+            report = sim.run(engine="dist", n_workers=dist_workers)
+        else:
+            report = sim.run(engine=engine)
+        results[engine] = report
+        assert report.status == "ok", report.detail
+    base = results[engines[0]]
+    for engine in engines[1:]:
+        r = results[engine]
+        assert (r.tasks, r.vtime_ns, r.live) == \
+            (base.tasks, base.vtime_ns, base.live), \
+            f"{engine} diverged from {engines[0]}"
+    tl = recovery_timeline(base)
+    names = {e["event"]: e["vtime"] for e in tl}
+    print(f"  engines {'/'.join(engines)} bit-identical; recovery "
+          f"timeline (vtime):")
+    for e in tl:
+        print(f"    {e['event']:8s} step {e['step']} at "
+              f"{e['vtime']/1e6:10.2f} ms")
+    assert names["detect"] < names["restore"] <= names["resumed"]
+    print(f"  final step "
+          f"{base.live['live_train']['tasks']['live.trainer']['final_step']}"
+          f" reached after 1 restart, horizon "
+          f"{base.vtime_ns/1e6:.0f} ms")
+    return results
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3_4b")
@@ -244,6 +293,8 @@ if __name__ == "__main__":
             run_multihost(n_iters=60)
         run_scenarios(n_iters=40, n_steps=8,
                       multihost=not args.skip_multihost)
+        if not args.skip_multihost:
+            run_live_recovery()
     else:
         run(args.arch, args.steps, args.variant)
         if not args.skip_multihost:

@@ -345,12 +345,22 @@ class Scheduler:
             # multiset (O(1) aggregates), not a task scan
             slow = self.cells.slowdown(task)
             if action.cost_ns is not None:
+                if action.cost_ns <= 0:
+                    raise ValueError(
+                        f"task {task.name!r}: LiveCall "
+                        f"{action.label or action.fn!r} has "
+                        f"cost_ns={action.cost_ns}; live costs must be "
+                        f">= 1 ns (a 0-cost live call would let the "
+                        f"task spin without advancing vtime)")
                 result = action.fn(*action.args, **action.kwargs)
                 delta = int(action.cost_ns * slow)
             else:
                 result, host_delta = task.clock.measure(
                     action.fn, *action.args, **action.kwargs)
-                delta = int(host_delta * slow)
+                # zero/negative measured spans (sub-ns callables, timer
+                # warp) must still advance vtime — conservative
+                # lookahead needs monotone progress
+                delta = max(1, int(host_delta * slow))
             delta += self.cells.switch_cost(task)
             task.stats["live_ns"] += delta
             self._advance_on_cpu(task, delta)

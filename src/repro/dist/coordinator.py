@@ -62,6 +62,7 @@ import numpy as np
 
 from repro.core.orchestrator import LBTSSolver
 from repro.dist import frames
+from repro.sim.live import merge_live_sections
 from repro.sim.report import SimReport, _jsonable
 
 
@@ -353,7 +354,9 @@ class DistCoordinator:
             progress=self._merge_progress(
                 [r["progress"] for r in reports]),
             scenario=sim.scenario.name, detail=detail,
-            n_workers=self.n_workers, cells=cells)
+            n_workers=self.n_workers, cells=cells,
+            live=merge_live_sections([r.get("live", {})
+                                      for r in reports]))
 
 
 def run_dist(sim, n_workers: int = 2, *, max_rounds: int = 1_000_000,

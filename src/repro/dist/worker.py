@@ -308,8 +308,19 @@ class DistWorker:
             snap = orch.hosts[h].cells.snapshot()
             if snap is not None:
                 cells[str(h)] = snap
+        # live sections: per-task entries restricted to owned tasks (the
+        # owner executed them; the rest is deterministic build-time data
+        # the coordinator dedups)
+        owned_tasks = {t.name for t in self.sim.tasks
+                       if self.owner[t.host] == self.id}
+        live = {}
+        for wl in self.sim.workloads:
+            sec = wl.live_report(owned_tasks)
+            if sec is not None:
+                live[wl.name] = sec
         return {
             "cells": cells,
+            "live": live,
             "hosts": [HostReport.from_sched(h, orch.hosts[h].stats)
                       for h in self.owned],
             "messages": sum(h.stats["messages"] for h in owned_hubs),

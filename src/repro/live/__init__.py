@@ -1,0 +1,10 @@
+"""`repro.live` — recorded-cost ledger for live-execution workloads.
+
+See :mod:`repro.live.recorder` for the record/replay model and
+:mod:`repro.sim.live` for the workloads that consume it.
+"""
+from repro.live.recorder import (TRACE_SCHEMA, CostLedger,
+                                 LiveTraceError, LiveTraceMismatch)
+
+__all__ = ["TRACE_SCHEMA", "CostLedger", "LiveTraceError",
+           "LiveTraceMismatch"]

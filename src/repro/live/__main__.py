@@ -1,0 +1,59 @@
+"""CLI for the live recovery scenario's record/replay ledger.
+
+Record the marquee trace (real sharded trainer; needs >= 2 devices,
+e.g. ``XLA_FLAGS=--xla_force_host_platform_device_count=4``)::
+
+    python -m repro.live record --out tests/golden/live_recovery_trace.json
+
+Replay it deterministically on any engine (no JAX work)::
+
+    python -m repro.live replay --trace tests/golden/live_recovery_trace.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.live")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    rec = sub.add_parser("record", help="record the live recovery trace")
+    rec.add_argument("--out", required=True)
+    rec.add_argument("--arch", default="qwen3_4b")
+    rec.add_argument("--engine", default="async")
+    rec.add_argument("--calibration", type=float, default=1.0)
+    rec.add_argument("--n-steps", type=int, default=8)
+    rec.add_argument("--checkpoint-every", type=int, default=3)
+    rep = sub.add_parser("replay", help="replay a recorded trace")
+    rep.add_argument("--trace", required=True)
+    rep.add_argument("--engine", default="async")
+    rep.add_argument("--n-workers", type=int, default=2)
+    args = ap.parse_args(argv)
+
+    if args.cmd == "record":
+        from repro.sim.live import record_live_recovery
+        report, ledger = record_live_recovery(
+            args.out, arch=args.arch, engine=args.engine,
+            calibration=args.calibration, n_steps=args.n_steps,
+            checkpoint_every=args.checkpoint_every)
+        print(f"recorded {args.out} "
+              f"({sum(len(v) for v in ledger.tasks.values())} costs)")
+    else:
+        from repro.live import CostLedger
+        from repro.sim.live import live_recovery_sim, recovery_timeline
+        sim = live_recovery_sim(CostLedger.replay(args.trace))
+        report = sim.run(engine=args.engine, n_workers=args.n_workers)
+        print(json.dumps({"status": report.status,
+                          "engine": report.mode,
+                          "vtime_ns": report.vtime_ns,
+                          "recovery": recovery_timeline(report)},
+                         indent=1))
+        if report.status != "ok" or not recovery_timeline(report):
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

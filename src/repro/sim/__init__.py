@@ -47,13 +47,21 @@ from repro.sim.report import HostReport, SimReport
 from repro.sim.simulation import Simulation
 from repro.sim.vectorized import SweepResult, UnsupportedByEngine
 from repro.sim.workloads import ChipRingTraining, ModeledServe, RackRing
+from repro.sim.live import (LiveProgram, LiveTrainerRecovery,
+                            TrainerStack, live_recovery_sim,
+                            record_live_recovery, recovery_timeline)
+from repro.live import (CostLedger, LiveTraceError, LiveTraceMismatch,
+                        TRACE_SCHEMA)
 from repro.core.engine_jax import TickRangeError
 
 __all__ = [
-    "CellSpec", "ChipRingTraining", "DegradeLink", "EndpointSpec",
-    "FabricSpec", "FailHost", "FailTask", "HostReport", "Injection",
-    "Interference", "ModeledServe", "Program", "RackRing", "Scenario",
-    "ScopeSpec", "SimReport", "Simulation", "Straggler", "SweepResult",
-    "TickRangeError", "Topology", "UnsupportedByEngine", "VecCompute",
-    "VecMark", "VecRecv", "VecSend", "Workload",
+    "CellSpec", "ChipRingTraining", "CostLedger", "DegradeLink",
+    "EndpointSpec", "FabricSpec", "FailHost", "FailTask", "HostReport",
+    "Injection", "Interference", "LiveProgram", "LiveTraceError",
+    "LiveTraceMismatch", "LiveTrainerRecovery", "ModeledServe",
+    "Program", "RackRing", "Scenario", "ScopeSpec", "SimReport",
+    "Simulation", "Straggler", "SweepResult", "TRACE_SCHEMA",
+    "TickRangeError", "Topology", "TrainerStack", "UnsupportedByEngine",
+    "VecCompute", "VecMark", "VecRecv", "VecSend", "Workload",
+    "live_recovery_sim", "record_live_recovery", "recovery_timeline",
 ]

@@ -87,6 +87,12 @@ class SimReport:
     #: vtimes within the declared bound).  0/"" for the other engines.
     tick_ns: int = 0
     tier: str = ""
+    #: live-execution sections, keyed by workload name (repro.sim.live):
+    #: ledger mode + calibration and per-task records — for the marquee
+    #: recovery scenario, the detection → restore → re-mesh → resumed
+    #: timeline with vtimes.  Empty for fully modeled simulations, and
+    #: integer-vtimed so the cross-engine harness compares it bit-exactly.
+    live: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def to_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)

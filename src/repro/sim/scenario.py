@@ -122,8 +122,10 @@ def scaled_body(body: Iterator, factor: float) -> Iterator:
         if isinstance(action, Compute):
             action = dataclasses.replace(action, ns=int(action.ns * factor))
         elif isinstance(action, LiveCall) and action.cost_ns is not None:
+            # clamp: a straggler factor must never scale a live cost to
+            # 0 — the scheduler rejects non-positive live costs
             action = dataclasses.replace(
-                action, cost_ns=int(action.cost_ns * factor))
+                action, cost_ns=max(1, int(action.cost_ns * factor)))
         result = yield action
 
 

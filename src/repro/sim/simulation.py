@@ -342,6 +342,20 @@ class Simulation:
         # scenario: per-task fault plan (see _resolve_fault_plan)
         scale, fails = self._resolve_fault_plan(names)
 
+        # workload interception (Program.on_fail): a program may observe
+        # its resolved failure at build time — "kill" keeps the normal
+        # early-close wrapper, "survive" suppresses it (the workload
+        # models the reaction itself, e.g. a live driver's recovery)
+        for wl, prog in programs:
+            if prog.on_fail is not None and prog.name in fails:
+                verdict = prog.on_fail(fails[prog.name])
+                if verdict == "survive":
+                    del fails[prog.name]
+                elif verdict != "kill":
+                    raise ValueError(
+                        f"program {prog.name!r}: on_fail returned "
+                        f"{verdict!r} (expected 'kill' or 'survive')")
+
         # spawn, in declaration order (determinism: vtask ids, scope and
         # task-list order all follow this loop)
         ep_host: Dict[str, int] = {}
@@ -368,6 +382,8 @@ class Simulation:
             task = VTask(prog.name, body, kind=prog.kind)
             if handle is not None:
                 handle.task = task
+            if prog.handle is not None:
+                prog.handle.task = task
             sched = self._sched_for(host)
             sched.spawn(task)
             if prog.name in cell_of:
@@ -526,6 +542,8 @@ class Simulation:
             return report
         if engine == "dist":
             from repro.dist import run_dist
+            from repro.sim.live import check_dist_live
+            check_dist_live(self.workloads)
             report = run_dist(
                 self, n_workers=n_workers, timeout=worker_timeout,
                 **({} if max_rounds is None
@@ -601,7 +619,9 @@ class Simulation:
                             "host": t.host} for t in self.tasks},
             progress={wl.name: _jsonable(wl.progress())
                       for wl in self.workloads},
-            scenario=self.scenario.name, detail=detail, cells=cells)
+            scenario=self.scenario.name, detail=detail, cells=cells,
+            live={wl.name: sec for wl in self.workloads
+                  for sec in [wl.live_report()] if sec is not None})
 
     def sweep(self, axis: Sequence[Scenario], *,
               tick_ns: Optional[int] = None,

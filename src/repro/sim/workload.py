@@ -41,12 +41,29 @@ BodyFactory = Callable[[Dict[str, Endpoint]], Iterator]
 
 @dataclasses.dataclass
 class Program:
-    """One vtask, declaratively: name, body factory, owned endpoints."""
+    """One vtask, declaratively: name, body factory, owned endpoints.
+
+    ``on_fail`` lets a workload intercept the fault plan: when the
+    scenario resolves a failure for this program (an explicit
+    ``FailTask`` or a ``FailHost`` expansion), the facade calls
+    ``on_fail(failspec)`` at build time instead of blindly wrapping the
+    body.  Return ``"kill"`` to keep the normal early-close wrapper
+    (the workload just observed the death — e.g. a live trainer noting
+    which shard host dies and when), or ``"survive"`` to suppress it
+    (the program reacts to the failure itself, like a live driver
+    running detection + checkpoint recovery).
+
+    ``handle``: a :class:`~repro.sim.scenario.TaskHandle` the facade
+    fills with the spawned VTask, so bodies that need their own vtime
+    (live drivers making vtime-gated decisions) can read it.
+    """
     name: str
     make_body: BodyFactory
     endpoints: Tuple[EndpointSpec, ...] = ()
     kind: str = "modeled"            # "modeled" | "live"
     cell: Optional[str] = None
+    on_fail: Optional[Callable[[Any], str]] = None
+    handle: Optional[Any] = None
 
 
 #: -- vectorized-engine op descriptors ------------------------------------
@@ -127,4 +144,28 @@ class Workload:
         (the default) means the workload has no vectorized lowering and
         ``Simulation.run(engine="vectorized")`` raises
         ``UnsupportedByEngine``."""
+        return None
+
+    # -- live-execution hooks (repro.sim.live) -------------------------------
+    def live_mode(self) -> Optional[str]:
+        """``"record"``/``"replay"`` for live workloads (the ledger
+        mode), ``None`` for modeled ones.  The facade uses it to reject
+        record mode under the dist engine (forked workers measuring wall
+        time cannot produce one coherent trace)."""
+        return None
+
+    def live_fns(self) -> Dict[str, Any]:
+        """Program name -> the real callable it wraps.  The dist engine
+        pickles nothing (workers are forked), but a live fn that cannot
+        be pickled is a reliable proxy for fork-unsafe captured state
+        (JAX handles, locks, open files), so ``engine="dist"`` checks
+        these at the facade and raises a clear error naming the fn."""
+        return {}
+
+    def live_report(self, tasks: Optional[set] = None
+                    ) -> Optional[Dict[str, Any]]:
+        """Post-run live section for :attr:`SimReport.live` (``None``
+        for modeled workloads).  ``tasks`` restricts per-task entries to
+        a subset — dist workers pass the task names they own, so the
+        coordinator can merge disjoint worker sections."""
         return None

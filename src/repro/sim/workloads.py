@@ -46,12 +46,20 @@ class ChipRingTraining(Workload):
     def __init__(self, spec: ClusterSpec, step_cost: StepCost,
                  n_steps: int, *, skew_bound_ns: int = 1_000_000,
                  live_step_fn: Optional[Callable] = None,
+                 ledger=None,
                  cells: Optional[Dict[str, str]] = None):
+        if ledger is not None and live_step_fn is None \
+                and ledger.mode == "record":
+            raise ValueError("a record-mode ledger needs live_step_fn "
+                             "(the real callable to measure)")
         self.spec = spec
         self.step_cost = step_cost
         self.n_steps = n_steps
         self.skew_bound_ns = skew_bound_ns
         self.live_step_fn = live_step_fn
+        # optional repro.live.CostLedger: per-(chip, step) recorded costs
+        # replace the static cost model for live steps (record/replay)
+        self.ledger = ledger
         # program name -> declared cell name (§3.3); chips with an
         # entry bind their live steps to that memory-hierarchy cell
         self.cells = cells or {}
@@ -80,7 +88,12 @@ class ChipRingTraining(Workload):
 
             def body():
                 for step in range(self.n_steps):
-                    if live_fn is not None:
+                    if self.ledger is not None:
+                        _, ns = self.ledger.charge(
+                            f"chip{c}", f"step:{step}", live_fn)
+                        yield LiveCall(_live_step, cost_ns=ns,
+                                       label=f"step:{step}")
+                    elif live_fn is not None:
                         yield LiveCall(live_fn, cost_ns=cost.compute_ns)
                     else:
                         yield Compute(cost.compute_ns)
@@ -105,7 +118,8 @@ class ChipRingTraining(Workload):
             out.append(Program(
                 name=f"chip{c}", make_body=self._chip_body(c),
                 endpoints=eps,
-                kind="live" if self.live_step_fn else "modeled",
+                kind="live" if (self.live_step_fn or self.ledger)
+                else "modeled",
                 cell=self.cells.get(f"chip{c}")))
         return out
 
@@ -130,10 +144,25 @@ class ChipRingTraining(Workload):
     def progress(self) -> Dict[str, np.ndarray]:
         return {"done_steps": self.done_steps}
 
+    def live_mode(self):
+        return self.ledger.mode if self.ledger is not None else None
+
+    def live_fns(self):
+        if self.live_step_fn is None:
+            return {}
+        return {f"chip{c}": self.live_step_fn
+                for c in range(self.spec.n_chips)}
+
+    def live_report(self, tasks=None):
+        if self.ledger is None:
+            return None
+        return {"mode": self.ledger.mode,
+                "calibration": self.ledger.calibration, "tasks": {}}
+
     def vec_ops(self):
         """Vectorized lowering — op-for-op the ``_chip_body`` stream
         (modeled computes only; live steps have no array form)."""
-        if self.live_step_fn is not None:
+        if self.live_step_fn is not None or self.ledger is not None:
             return None
         spec, cost = self.spec, self.step_cost
         out = {}
@@ -241,6 +270,11 @@ class RackRing(Workload):
 
     def default_placement(self) -> Dict[str, int]:
         return {f"w{h}": h for h in range(self.n_workers)}
+
+    def live_fns(self):
+        if not self.live:
+            return {}
+        return {f"w{h}": _live_step for h in range(self.n_workers)}
 
     def stragglers(self, rack_slowdown: Tuple[float, ...]):
         """Per-rack compute multipliers -> per-worker Straggler

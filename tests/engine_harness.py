@@ -54,7 +54,7 @@ from repro.sim import Simulation, SimReport
 
 #: fields every engine must agree on, bit-exactly
 CORE_FIELDS = ("status", "n_hosts", "vtime_ns", "messages", "bytes",
-               "tasks", "progress", "cells")
+               "tasks", "progress", "cells", "live")
 
 HAS_FORK = hasattr(os, "fork")
 

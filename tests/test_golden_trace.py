@@ -1,10 +1,11 @@
 """Golden-trace regression for the example scenario gallery.
 
 ``tests/golden/gallery.json`` is the canonical compact SimReport for
-the four scenarios ``examples/cluster_sim.py`` showcases (straggler +
+the five scenarios ``examples/cluster_sim.py`` showcases (straggler +
 mid-run host death, mid-run cross-rack link degradation, co-located
 serve+train interference, co-located live cells with §3.3
-memory-hierarchy charges), at CI smoke sizes.  The test re-runs them
+memory-hierarchy charges, and the live trainer recovery replayed from
+its checked-in recorded trace), at CI smoke sizes.  The test re-runs them
 and diffs the *timing-bearing* fields — status, horizon, message and
 byte totals, per-task final vtimes/states, progress arrays, per-host
 cell accounting — so an engine refactor cannot silently shift
@@ -32,11 +33,14 @@ import sys
 import pytest
 
 from repro.core.cluster import ClusterSpec, StepCost
-from repro.sim import (ChipRingTraining, DegradeLink, FailHost,
-                       ModeledServe, RackRing, Scenario, Simulation,
-                       Straggler, Topology)
+from repro.sim import (ChipRingTraining, CostLedger, DegradeLink,
+                       FailHost, ModeledServe, RackRing, Scenario,
+                       Simulation, Straggler, Topology,
+                       live_recovery_sim)
 
 GOLDEN = pathlib.Path(__file__).parent / "golden" / "gallery.json"
+LIVE_TRACE = (pathlib.Path(__file__).parent / "golden"
+              / "live_recovery_trace.json")
 
 #: the canonical (deterministic, machine-independent) report subset
 CANONICAL_FIELDS = ("scenario", "status", "n_hosts", "vtime_ns",
@@ -90,10 +94,18 @@ def _gallery():
         topo.cell_config(n_warm_slots=2, recondition_ns=20_000)
         return Simulation(topo, wl, Scenario("co-located cells"))
 
+    def live_recovery():
+        # the marquee live scenario, replayed from the checked-in
+        # recorded trace (one record run of the real sharded trainer;
+        # re-record with `python -m repro.live record`) — golden-pinned
+        # like any modeled scenario, recovery timeline included
+        return live_recovery_sim(CostLedger.replay(LIVE_TRACE))
+
     return {"straggler_host_death": straggler_host_death,
             "degraded_link": degraded_link,
             "colocated_serve_train": colocated_serve_train,
-            "colocated_cells": colocated_cells}
+            "colocated_cells": colocated_cells,
+            "live_recovery": live_recovery}
 
 
 def canonical(report) -> dict:
@@ -101,6 +113,10 @@ def canonical(report) -> dict:
     out = {k: d[k] for k in CANONICAL_FIELDS}
     out["perf"] = {"sync_rounds": report.sync_rounds,
                    "proxy_syncs": report.proxy_syncs}
+    if report.live:
+        # live sections (recovery timelines) are golden-pinned too;
+        # omitted when empty so pre-live gallery rows stay byte-identical
+        out["live"] = d["live"]
     return out
 
 
@@ -141,6 +157,9 @@ def test_gallery_matches_golden_trace(name):
         f"PYTHONPATH=src python {__file__} --regen")
     got = canonical(_gallery()[name]().run())
     want = golden[name]
+    assert got.get("live") == want.get("live"), (
+        f"{name}: live section shifted from the golden trace\n"
+        f" got: {got.get('live')!r}\nwant: {want.get('live')!r}")
     for field in CANONICAL_FIELDS + ("perf",):
         assert got[field] == want[field], (
             f"{name}: {field} shifted from the golden trace "

@@ -1,0 +1,318 @@
+"""Live-execution subsystem: record/replay ledger, clock edges, the
+cross-engine bar for replayed live scenarios, and the marquee trainer
+recovery (replayed from the checked-in golden trace; the real-trainer
+record run itself is exercised subprocess-side like the seed's elastic
+re-shard test)."""
+import json
+import pathlib
+
+import pytest
+
+from repro.core import LiveCall, Scheduler, State, VTask
+from repro.core.vtime import LiveClock
+from repro.live import (TRACE_SCHEMA, CostLedger, LiveTraceError,
+                        LiveTraceMismatch)
+from repro.sim import (LiveProgram, Scenario, Simulation, Topology,
+                       UnsupportedByEngine, live_recovery_sim,
+                       recovery_timeline)
+from repro.sim.live import check_dist_live
+
+from engine_harness import HAS_FORK, engines_for, run_engine
+
+GOLDEN_TRACE = (pathlib.Path(__file__).parent / "golden"
+                / "live_recovery_trace.json")
+
+
+def work(step):
+    return sum(range(200 + step))
+
+
+# ---------------------------------------------------------------------------
+# ledger unit tests
+# ---------------------------------------------------------------------------
+
+
+def test_ledger_record_measures_and_replays_pinned():
+    led = CostLedger.record(calibration=3.0)
+    r, cost = led.charge("t", "step:0", work, (0,))
+    assert r == work(0) and cost >= 1
+    led2 = CostLedger.replay(led.to_dict())
+    r2, cost2 = led2.charge("t", "step:0")
+    assert r2 is None and cost2 == cost
+
+
+def test_ledger_zero_span_clamped_to_one_ns():
+    # calibration tiny enough that any measured span rounds to 0
+    led = CostLedger.record(calibration=1e-12)
+    _, cost = led.charge("t", "step:0", lambda: None)
+    assert cost == 1
+
+
+def test_ledger_schema_versioned(tmp_path):
+    led = CostLedger.record()
+    led.charge("t", "step:0", lambda: None)
+    path = led.save(tmp_path / "trace.json")
+    data = json.loads(path.read_text())
+    assert data["schema"] == TRACE_SCHEMA
+    data["schema"] = "live_trace/v99"
+    with pytest.raises(LiveTraceError, match="v99"):
+        CostLedger.replay(data)
+    with pytest.raises(LiveTraceError, match="not found"):
+        CostLedger.replay(tmp_path / "missing.json")
+    bad = tmp_path / "bad.json"
+    bad.write_text("{nope")
+    with pytest.raises(LiveTraceError, match="not valid JSON"):
+        CostLedger.replay(bad)
+
+
+def test_ledger_mismatch_names_offending_task():
+    led = CostLedger.record()
+    led.charge("present", "step:0", lambda: None)
+    rep = CostLedger.replay(led.to_dict())
+    # missing task key names the task the scenario asked for
+    with pytest.raises(LiveTraceMismatch, match="'absent'"):
+        rep.charge("absent", "step:0")
+    # exhaustion and label divergence both name the task
+    rep.charge("present", "step:0")
+    with pytest.raises(LiveTraceMismatch, match="'present'.*exhausted"):
+        rep.charge("present", "step:1")
+    rep2 = CostLedger.replay(led.to_dict())
+    with pytest.raises(LiveTraceMismatch, match="'present'.*diverged"):
+        rep2.charge("present", "step:9")
+
+
+def test_ledger_rejects_bad_modes_and_saves_record_only(tmp_path):
+    with pytest.raises(ValueError, match="record"):
+        CostLedger("measure")
+    with pytest.raises(ValueError, match="calibration"):
+        CostLedger.record(calibration=0.0)
+    led = CostLedger.record()
+    led.charge("t", "step:0", lambda: None)
+    rep = CostLedger.replay(led.to_dict())
+    with pytest.raises(LiveTraceError, match="record-mode"):
+        rep.save(tmp_path / "x.json")
+    with pytest.raises(LiveTraceError, match="corrupt"):
+        CostLedger.replay({"schema": TRACE_SCHEMA, "tasks": {
+            "t": [{"label": "step:0", "cost_ns": 0}]}}).charge(
+                "t", "step:0")
+
+
+# ---------------------------------------------------------------------------
+# LiveCall clock edges (satellite: clamps)
+# ---------------------------------------------------------------------------
+
+
+def test_live_call_cost_zero_rejected_with_message():
+    sched = Scheduler(n_cpus=1)
+
+    def body():
+        yield LiveCall(lambda: None, cost_ns=0, label="step:0")
+
+    sched.spawn(VTask("bad", body(), kind="live"))
+    with pytest.raises(ValueError, match=r"'bad'.*step:0.*>= 1 ns"):
+        sched.run()
+
+
+def test_live_call_zero_measured_span_advances_one_ns():
+    sched = Scheduler(n_cpus=1)
+
+    def body():
+        yield LiveCall(lambda: None)
+        yield LiveCall(lambda: None)
+
+    t = VTask("live", body(), kind="live")
+    t.clock = LiveClock(timer=lambda: 0)   # frozen timer: 0-ns spans
+    sched.spawn(t)
+    sched.run()
+    assert t.state == State.DONE
+    assert t.vtime == 2                    # >= 1 ns per live call
+
+
+def test_straggler_never_scales_live_cost_to_zero():
+    from repro.sim.scenario import scaled_body
+
+    def body():
+        yield LiveCall(lambda: None, cost_ns=5)
+
+    scaled = scaled_body(body(), 0.01)     # 5 * 0.01 -> 0 without clamp
+    action = next(scaled)
+    assert action.cost_ns == 1
+
+
+# ---------------------------------------------------------------------------
+# record/replay round trip across engines (satellite: bit-identity)
+# ---------------------------------------------------------------------------
+
+
+def _round_trip(n_hosts: int):
+    """Record once in-process, then replay under every applicable
+    engine and demand the full CORE_FIELDS bar (incl. the live
+    section) plus equality with the record run's timings."""
+    from engine_harness import assert_reports_equal
+
+    fns = {"a": work, "b": work}
+    led = CostLedger.record(calibration=2.0)
+
+    def make(ledger):
+        wl = LiveProgram(fns, 3, ledger=ledger, ring_bytes=512)
+        if n_hosts == 1:
+            return Simulation(Topology.single_host(n_cpus=2), wl)
+        return Simulation(Topology.full_mesh(n_hosts, wl.link,
+                                             n_cpus=2), wl,
+                          placement={"a": 0, "b": 1})
+
+    rec = make(led).run(engine="async")
+    assert rec.status == "ok"
+    trace = led.to_dict()
+    engines = engines_for(n_hosts)
+    reports = {eng: run_engine(lambda: make(CostLedger.replay(trace)),
+                               eng) for eng in engines}
+    base = engines[0]
+    for eng in engines[1:]:
+        assert_reports_equal(reports[base], reports[eng],
+                             label=f"live round-trip {n_hosts}h")
+    # replayed vtimes are the recorded vtimes, bit-exactly
+    assert reports[base].vtime_ns == rec.vtime_ns
+    assert reports[base].tasks == rec.tasks
+    assert reports[base].progress == rec.progress
+    return reports
+
+
+def test_round_trip_single_host():
+    _round_trip(1)                         # single/barrier/async/dist:1
+
+
+def test_round_trip_multi_host():
+    _round_trip(2)                         # barrier/async/dist:1/dist:2
+
+
+def test_live_program_unsupported_by_vectorized():
+    led = CostLedger.record()
+    wl = LiveProgram({"a": work}, 2, ledger=led)
+    sim = Simulation(Topology.single_host(n_cpus=2), wl)
+    with pytest.raises(UnsupportedByEngine):
+        sim.run(engine="vectorized")
+
+
+# ---------------------------------------------------------------------------
+# dist facade guards (satellite: picklability)
+# ---------------------------------------------------------------------------
+
+
+def test_dist_rejects_unpicklable_live_fn_naming_it():
+    wl = LiveProgram({"a": lambda step: None}, 2,   # lambdas don't pickle
+                     ledger=CostLedger.replay(
+                         {"schema": TRACE_SCHEMA, "tasks": {"a": []}}))
+    with pytest.raises(ValueError, match=r"'a'.*lambda.*not picklable"):
+        check_dist_live([wl])
+
+
+def test_dist_rejects_record_mode():
+    wl = LiveProgram({"a": work}, 2, ledger=CostLedger.record())
+    with pytest.raises(ValueError, match="record mode is not supported"):
+        check_dist_live([wl])
+
+
+@pytest.mark.skipif(not HAS_FORK, reason="dist engine needs os.fork")
+def test_dist_facade_error_not_worker_crash():
+    # through the facade: the error surfaces from Simulation.run, as a
+    # ValueError naming the fn — not a DistWorkerError traceback
+    led = CostLedger.replay({"schema": TRACE_SCHEMA, "tasks": {
+        "a": [{"label": f"step:{i}", "cost_ns": 10} for i in range(2)]}})
+    wl = LiveProgram({"a": lambda step: None}, 2, ledger=led)
+    sim = Simulation(Topology.single_host(n_cpus=2), wl)
+    with pytest.raises(ValueError, match="not picklable"):
+        sim.run(engine="dist", n_workers=1)
+
+
+# ---------------------------------------------------------------------------
+# marquee: live trainer recovery (golden trace replay)
+# ---------------------------------------------------------------------------
+
+
+def _replay_recovery():
+    return live_recovery_sim(CostLedger.replay(GOLDEN_TRACE))
+
+
+def test_marquee_recovery_timeline_ordered():
+    rep = _replay_recovery().run(engine="async")
+    assert rep.status == "ok"
+    sec = rep.live["live_train"]
+    assert sec["mode"] == "replay"
+    tl = recovery_timeline(rep)
+    events = [e["event"] for e in tl]
+    assert events == ["detect", "restore", "remesh", "resumed"]
+    v = {e["event"]: e["vtime"] for e in tl}
+    assert v["detect"] < v["restore"] < v["remesh"] <= v["resumed"]
+    task = sec["tasks"]["live.trainer"]
+    assert task["restarts"] == 1
+    meta = CostLedger.replay(GOLDEN_TRACE).meta["recovery"]
+    assert task["final_step"] == meta["n_steps"]
+
+
+def test_marquee_recovery_bit_identical_across_engines(engine_harness):
+    reports = engine_harness(_replay_recovery,
+                             label="live recovery replay")
+    for rep in reports.values():
+        assert recovery_timeline(rep), rep.live
+
+
+def test_marquee_scenario_trace_mismatch_fails_fast():
+    # scenario asks for more steps than the trace recorded: the replay
+    # must fail fast naming the live task, not drift silently
+    sim = live_recovery_sim(CostLedger.replay(GOLDEN_TRACE),
+                            n_steps=32)
+    with pytest.raises(LiveTraceMismatch, match="'live.trainer'"):
+        sim.run(engine="async")
+
+
+def test_marquee_unsupported_by_vectorized():
+    with pytest.raises(UnsupportedByEngine):
+        _replay_recovery().run(engine="vectorized")
+
+
+def test_recovery_sim_rejects_unknown_override():
+    with pytest.raises(ValueError, match="unknown recovery parameters"):
+        live_recovery_sim(CostLedger.replay(GOLDEN_TRACE), bogus=1)
+
+
+def test_record_mode_requires_stack():
+    from repro.sim import LiveTrainerRecovery
+    with pytest.raises(ValueError, match="TrainerStack"):
+        LiveTrainerRecovery(ledger=CostLedger.record())
+
+
+def test_marquee_real_trainer_records_end_to_end(tmp_path):
+    """The full record run: real sharded Trainer + FailHost +
+    checkpoint re-mesh under engine='async'.  Needs > 1 device, so it
+    runs in a subprocess with its own XLA_FLAGS (like the seed's
+    elastic re-shard test); the replayed trace must then reproduce the
+    recorded vtimes bit-exactly in this process."""
+    import os
+    import subprocess
+    import sys
+
+    out = tmp_path / "trace.json"
+    prog = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+from repro.sim.live import record_live_recovery, recovery_timeline
+report, ledger = record_live_recovery({str(out)!r}, n_steps=5,
+                                      checkpoint_every=2)
+assert report.status == "ok", report.detail
+tl = recovery_timeline(report)
+v = {{e["event"]: e["vtime"] for e in tl}}
+assert v["detect"] < v["restore"] < v["remesh"] <= v["resumed"], tl
+print("MARQUEE_OK", report.vtime_ns)
+"""
+    env = {**os.environ, "PYTHONPATH": "src"}
+    res = subprocess.run([sys.executable, "-c", prog],
+                         cwd=str(pathlib.Path(__file__).parent.parent),
+                         env=env, capture_output=True, text=True,
+                         timeout=560)
+    assert "MARQUEE_OK" in res.stdout, res.stderr[-2000:]
+    recorded_vtime = int(res.stdout.split("MARQUEE_OK")[1].split()[0])
+    rep = live_recovery_sim(CostLedger.replay(out)).run(engine="async")
+    assert rep.status == "ok"
+    assert rep.vtime_ns == recorded_vtime
+    assert recovery_timeline(rep)
