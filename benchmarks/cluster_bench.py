@@ -39,10 +39,15 @@ track the hot path PR-over-PR:
   dist; records the recovery window (detect -> resumed vtime span) and
   holds replay dispatch throughput above the scheduler floor, so the
   live replay path stays on the hot-path budget.
+* **live_serve** (recorded-cost replay of the live serving scenario) —
+  the real BatchServer's prefill/decode trace
+  (tests/golden/live_serve_trace.json) replayed under async and dist;
+  records the simulated p50/p99 time-in-system and wave count, and
+  holds the same dispatch-throughput floor as live_recovery.
 
 Outputs (single writer: everything is derived from the root schema):
   BENCH_cluster.json              — compact aggregates-only summary
-                                    (schema BENCH_cluster/v6, documented
+                                    (schema BENCH_cluster/v7, documented
                                     in README.md), committed at the repo
                                     root so the perf trajectory stays
                                     reviewable PR-over-PR
@@ -354,6 +359,78 @@ def smoke_live_recovery() -> None:
           f"disp/s (floor {floor:.0f})")
 
 
+def simulate_live_serve(engine: str = "async", *,
+                        n_workers: int = DIST_WORKERS) -> dict:
+    """One replay of the recorded serve trace under ``engine``: the
+    real BatchServer's per-wave costs as pinned integers, open-loop
+    arrivals from the trace meta — no JAX work.  The row records the
+    simulated latency percentiles alongside the replay path's
+    scheduling overhead."""
+    from repro.live import CostLedger
+    from repro.sim import live_serve_sim, serve_latency
+
+    trace = ROOT / "tests" / "golden" / "live_serve_trace.json"
+    sim = live_serve_sim(CostLedger.replay(trace))
+    if engine == "dist":
+        report = sim.run(engine="dist", n_workers=n_workers,
+                         on_deadlock="raise")
+    else:
+        report = sim.run(engine=engine, on_deadlock="raise")
+    assert report.status == "ok", report.detail
+    lat = serve_latency(report)
+    task = report.to_dict()["live"]["live_serve"]["tasks"]["serve.live"]
+    row = _aggregate(report)
+    row["engine"] = engine
+    row["requests"] = task["requests"]
+    row["waves"] = task["waves"]
+    row["latency_p50_ns"] = lat["p50"]
+    row["latency_p99_ns"] = lat["p99"]
+    row["queue_depth_max"] = task["queue_depth"]["max"]
+    row["final_vtimes"] = sorted(t["vtime"]
+                                 for t in report.tasks.values())
+    row["live_section"] = report.to_dict()["live"]
+    return row
+
+
+def main_live_serve() -> dict:
+    engines = [("async", "async", 1)]
+    if HAS_FORK:
+        engines += [(f"dist_{DIST_WORKERS}w", "dist", DIST_WORKERS)]
+    rows = {}
+    for name, engine, k in engines:
+        rows[name] = simulate_live_serve(engine, n_workers=k)
+    base = next(iter(rows))
+    assert all(r["final_vtimes"] == rows[base]["final_vtimes"]
+               and r["live_section"] == rows[base]["live_section"]
+               for r in rows.values()), \
+        "engines disagree on the live serve replay"
+    a = rows["async"]
+    print(f"live serve regime (recorded-cost replay, "
+          f"{a['requests']} requests in {a['waves']} waves):")
+    for name, r in rows.items():
+        print(f"{name:>10s} x{r['n_workers']}: p50 "
+              f"{r['latency_p50_ns']/1e6:.1f} ms, p99 "
+              f"{r['latency_p99_ns']/1e6:.1f} ms, max queue depth "
+              f"{r['queue_depth_max']}, wall {r['wall_s']:.3f}s, "
+              f"{r['dispatch_per_s']} disp/s")
+    return rows
+
+
+def smoke_live_serve() -> None:
+    """CI smoke: the recorded serve trace must replay cleanly with
+    ordered latency percentiles, and the replay path must hold the
+    same dispatch-throughput floor as the other live regimes."""
+    row = simulate_live_serve("async")
+    assert row["requests"] > 0 and row["waves"] > 0, row
+    assert 0 < row["latency_p50_ns"] <= row["latency_p99_ns"], row
+    floor = SEED_REFERENCE_4096_DISPATCH_PER_S / 2
+    assert row["dispatch_per_s"] > floor, (row["dispatch_per_s"], floor)
+    print(f"live serve smoke ok: p50 {row['latency_p50_ns']/1e6:.1f} ms"
+          f", p99 {row['latency_p99_ns']/1e6:.1f} ms over "
+          f"{row['requests']} requests, {row['dispatch_per_s']} disp/s "
+          f"(floor {floor:.0f})")
+
+
 def main_sweep(n_variants: int = 32, *, n_iters: int = 300,
                warm: bool = True) -> dict:
     """The vmap batched-sweep regime: ``n_variants`` straggler variants
@@ -524,6 +601,7 @@ def main():
     cells = main_cells()
     sweep = main_sweep()
     live = main_live_recovery()
+    serve = main_live_serve()
     sharded = simulate_sharded_dist() if HAS_FORK else None
     sharded_large = (simulate_sharded_dist(n_chips=2048, n_hosts=16)
                      if HAS_FORK else None)
@@ -549,15 +627,17 @@ def main():
                                     "live_section")}
                 for name, r in rs.items()}
     bench = {
-        # v6: + the live_recovery replay regime (recovery window +
-        # replay dispatch throughput); v5 added the vectorized engine
-        # row in multihost and the vmap batched-sweep regime
-        "schema": "BENCH_cluster/v6",
+        # v7: + the live_serve replay regime (simulated latency
+        # percentiles + replay dispatch throughput); v6 added the
+        # live_recovery replay regime; v5 the vectorized engine row in
+        # multihost and the vmap batched-sweep regime
+        "schema": "BENCH_cluster/v7",
         "multihost": strip(multihost),
         "multihost_large": strip(large),
         "cells": strip(cells),
         "sweep": sweep,
         "live_recovery": strip(live),
+        "live_serve": strip(serve),
         "training": rows,
     }
     if HAS_FORK:
@@ -600,5 +680,6 @@ if __name__ == "__main__":
         smoke_cells()
         smoke_vectorized()
         smoke_live_recovery()
+        smoke_live_serve()
     else:
         main()

@@ -277,6 +277,68 @@ def run_live_recovery(dist_workers: int = 2):
     return results
 
 
+def run_live_serve(dist_workers: int = 2):
+    """Live serving demo (replay mode): the real BatchServer recorded
+    once under open-loop Poisson arrivals (the checked-in trace at
+    tests/golden/live_serve_trace.json; re-record with ``python -m
+    repro.live record --scenario serve``).  Replaying the pinned
+    per-wave prefill/decode costs reproduces the recorded request
+    latencies bit-exactly on every engine — and the co-located trace
+    (live trainer + live server sharing one §3.3 cell) replays the
+    same way from one multi-driver ledger."""
+    import pathlib
+
+    from repro.live import CostLedger
+    from repro.sim import live_colocated_sim, live_serve_sim, serve_latency
+
+    golden = pathlib.Path(__file__).parent.parent / "tests" / "golden"
+    print("\nlive serving (recorded-cost replay):")
+    engines = ["barrier", "async"]
+    if hasattr(os, "fork"):
+        engines.append("dist")
+    results = {}
+    for engine in engines:
+        sim = live_serve_sim(CostLedger.replay(
+            golden / "live_serve_trace.json"))
+        if engine == "dist":
+            report = sim.run(engine="dist", n_workers=dist_workers)
+        else:
+            report = sim.run(engine=engine)
+        results[engine] = report
+        assert report.status == "ok", report.detail
+    base = results[engines[0]]
+    for engine in engines[1:]:
+        r = results[engine]
+        assert (r.tasks, r.vtime_ns, serve_latency(r)) == \
+            (base.tasks, base.vtime_ns, serve_latency(base)), \
+            f"{engine} diverged from {engines[0]}"
+    sec = base.live["live_serve"]["tasks"]["serve.live"]
+    lt = sec["latency_ns"]
+    print(f"  engines {'/'.join(engines)} bit-identical; "
+          f"{sec['requests']} requests in {sec['waves']} waves "
+          f"(max wave batch {sec['max_wave_batch']})")
+    print(f"  latency p50 {lt['p50']/1e6:.2f} ms, "
+          f"p99 {lt['p99']/1e6:.2f} ms, max {lt['max']/1e6:.2f} ms; "
+          f"max queue depth {sec['queue_depth']['max']}")
+    assert lt["p50"] <= lt["p95"] <= lt["p99"] <= lt["max"]
+
+    # co-located live train + live serve: one trace, two drivers, one
+    # shared cell — the replay carries both the recovery timeline and
+    # the serving percentiles
+    colo = live_colocated_sim(CostLedger.replay(
+        golden / "live_colocated_trace.json")).run(engine="async")
+    assert colo.status == "ok", colo.detail
+    clat = serve_latency(colo)
+    final = colo.live["live_train"]["tasks"]["live.trainer"]["final_step"]
+    cell = colo.cells["0"]["cells"]["colo"]
+    print(f"  co-located train + serve    : [{colo.status}] one cell, "
+          f"{cell['assigned']} live drivers, "
+          f"{colo.cells['0']['switches']} cell switches; trainer "
+          f"reached step {final}, serve p99 "
+          f"{clat['p99']/1e6:.2f} ms")
+    return results
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3_4b")
@@ -295,8 +357,12 @@ if __name__ == "__main__":
                       multihost=not args.skip_multihost)
         if not args.skip_multihost:
             run_live_recovery()
+            run_live_serve()
     else:
         run(args.arch, args.steps, args.variant)
         if not args.skip_multihost:
             run_multihost()
         run_scenarios(multihost=not args.skip_multihost)
+        if not args.skip_multihost:
+            run_live_recovery()
+            run_live_serve()

@@ -183,6 +183,14 @@ class DistCoordinator:
     # -- the run -------------------------------------------------------------
     def run(self) -> SimReport:
         t0 = time.perf_counter()
+        # the parent sim never builds (workers build their own
+        # replicas), so clear run-scoped workload state here: the
+        # parent's progress arrays are merge *targets* (_merge_progress
+        # max-merges into them), and stale values from a previous run
+        # of the same Workload instance would double-count.  Resetting
+        # before the fork also hands every worker a clean replica.
+        for wl in self.sim.workloads:
+            wl.reset()
         self._spawn()
         try:
             readies = [self._recv(w, "ready")

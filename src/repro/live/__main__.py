@@ -1,13 +1,30 @@
-"""CLI for the live recovery scenario's record/replay ledger.
+"""CLI for the live scenarios' record/replay ledgers.
 
-Record the marquee trace (real sharded trainer; needs >= 2 devices,
-e.g. ``XLA_FLAGS=--xla_force_host_platform_device_count=4``)::
+Record a trace (``--scenario`` picks the canned scenario):
 
-    python -m repro.live record --out tests/golden/live_recovery_trace.json
+* ``recovery`` — the marquee trainer recovery (real sharded trainer;
+  needs >= 2 devices, e.g.
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=4``)::
 
-Replay it deterministically on any engine (no JAX work)::
+      python -m repro.live record --scenario recovery \\
+          --out tests/golden/live_recovery_trace.json
 
-    python -m repro.live replay --trace tests/golden/live_recovery_trace.json
+* ``serve`` — the real BatchServer under open-loop arrivals (one
+  device suffices)::
+
+      python -m repro.live record --scenario serve \\
+          --out tests/golden/live_serve_trace.json
+
+* ``colocated`` — live trainer + live server sharing one §3.3 cell,
+  both recorded into one multi-driver trace (one device suffices)::
+
+      python -m repro.live record --scenario colocated \\
+          --out tests/golden/live_colocated_trace.json
+
+Replay any trace deterministically on any engine (no JAX work); the
+scenario is inferred from the trace meta::
+
+    python -m repro.live replay --trace tests/golden/live_serve_trace.json
 """
 from __future__ import annotations
 
@@ -16,16 +33,38 @@ import json
 import sys
 
 
+def _replay_sim(ledger):
+    """Pick the canned scenario a trace belongs to from its pinned
+    meta blocks (each recorder writes exactly one of these keys)."""
+    from repro.sim.live import (live_colocated_sim, live_recovery_sim,
+                                live_serve_sim)
+    if "colocated" in ledger.meta:
+        return "colocated", live_colocated_sim(ledger)
+    if "serve" in ledger.meta:
+        return "serve", live_serve_sim(ledger)
+    if "recovery" in ledger.meta:
+        return "recovery", live_recovery_sim(ledger)
+    raise SystemExit(
+        "trace meta names no canned scenario (expected one of "
+        "'recovery', 'serve', 'colocated')")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.live")
     sub = ap.add_subparsers(dest="cmd", required=True)
-    rec = sub.add_parser("record", help="record the live recovery trace")
+    rec = sub.add_parser("record", help="record a live trace")
     rec.add_argument("--out", required=True)
+    rec.add_argument("--scenario", default="recovery",
+                     choices=("recovery", "serve", "colocated"))
     rec.add_argument("--arch", default="qwen3_4b")
     rec.add_argument("--engine", default="async")
     rec.add_argument("--calibration", type=float, default=1.0)
-    rec.add_argument("--n-steps", type=int, default=8)
-    rec.add_argument("--checkpoint-every", type=int, default=3)
+    rec.add_argument("--n-steps", type=int, default=8,
+                     help="recovery: train steps")
+    rec.add_argument("--checkpoint-every", type=int, default=3,
+                     help="recovery: checkpoint cadence")
+    rec.add_argument("--n-requests", type=int, default=12,
+                     help="serve: open-loop request count")
     rep = sub.add_parser("replay", help="replay a recorded trace")
     rep.add_argument("--trace", required=True)
     rep.add_argument("--engine", default="async")
@@ -33,24 +72,43 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     if args.cmd == "record":
-        from repro.sim.live import record_live_recovery
-        report, ledger = record_live_recovery(
-            args.out, arch=args.arch, engine=args.engine,
-            calibration=args.calibration, n_steps=args.n_steps,
-            checkpoint_every=args.checkpoint_every)
-        print(f"recorded {args.out} "
+        if args.scenario == "recovery":
+            from repro.sim.live import record_live_recovery
+            report, ledger = record_live_recovery(
+                args.out, arch=args.arch, engine=args.engine,
+                calibration=args.calibration, n_steps=args.n_steps,
+                checkpoint_every=args.checkpoint_every)
+        elif args.scenario == "serve":
+            from repro.sim.live import record_live_serve
+            report, ledger = record_live_serve(
+                args.out, arch=args.arch, engine=args.engine,
+                calibration=args.calibration,
+                n_requests=args.n_requests)
+        else:
+            from repro.sim.live import record_live_colocated
+            report, ledger = record_live_colocated(
+                args.out, arch=args.arch, engine=args.engine,
+                calibration=args.calibration)
+        print(f"recorded {args.scenario} -> {args.out} "
               f"({sum(len(v) for v in ledger.tasks.values())} costs)")
     else:
         from repro.live import CostLedger
-        from repro.sim.live import live_recovery_sim, recovery_timeline
-        sim = live_recovery_sim(CostLedger.replay(args.trace))
+        from repro.sim.live import recovery_timeline, serve_latency
+        ledger = CostLedger.replay(args.trace)
+        scenario, sim = _replay_sim(ledger)
         report = sim.run(engine=args.engine, n_workers=args.n_workers)
-        print(json.dumps({"status": report.status,
-                          "engine": report.mode,
-                          "vtime_ns": report.vtime_ns,
-                          "recovery": recovery_timeline(report)},
-                         indent=1))
-        if report.status != "ok" or not recovery_timeline(report):
+        out = {"scenario": scenario, "status": report.status,
+               "engine": report.mode, "vtime_ns": report.vtime_ns}
+        ok = report.status == "ok"
+        if scenario in ("recovery", "colocated"):
+            out["recovery"] = recovery_timeline(report)
+        if scenario in ("serve", "colocated"):
+            out["latency_ns"] = serve_latency(report)
+            ok = ok and bool(out["latency_ns"])
+        if scenario == "recovery":
+            ok = ok and bool(out["recovery"])
+        print(json.dumps(out, indent=1))
+        if not ok:
             return 1
     return 0
 

@@ -15,6 +15,25 @@ resolves the tension with two modes:
   host-ns), clamps to >= 1 ns, and appends ``{label, cost_ns}`` to the
   per-task trace.  One record run per scenario; the trace is saved as
   versioned JSON (``live_trace/v1``).
+
+  **Multi-driver recording** (SplitSim's isolation concern, PAPERS.md):
+  one record run may capture several live drivers — e.g. a trainer and
+  a serve stack sharing a ledger — because the in-process engines
+  dispatch one live call at a time, so per-task wall spans are
+  sequential by construction and never bleed into each other.  The
+  ledger *enforces* that sequential-recording phase: a ``charge`` that
+  starts while another task's span is still being measured (a nested
+  charge, or a driver running off-thread) raises
+  :class:`LiveTraceError` immediately instead of silently
+  double-counting overlapped wall time in two tasks' costs.
+
+  Optional trace-meta keys a recorder may pin for auditability:
+  ``meta["fail_probe"]`` (how a derived fail-at vtime was computed:
+  probe span, calibration, margin — see
+  ``repro.sim.live.FAIL_PROBE_MARGIN_STEPS``) and per-scenario
+  parameter blocks (``meta["recovery"]``, ``meta["serve"]``,
+  ``meta["colocated"]`` — including the full open-loop arrival
+  schedule, so a replay never re-derives it from an RNG stream).
 * ``replay`` — ``charge`` does *not* execute the callable.  It pops the
   next recorded entry for the task, verifies the label matches (a
   scenario that diverges from its trace fails fast, naming the task and
@@ -73,6 +92,9 @@ class CostLedger:
             else {}
         self.meta: Dict[str, Any] = meta if meta is not None else {}
         self._cursor: Dict[str, int] = {}
+        # (task, label) currently measuring a wall span, or None —
+        # the sequential-recording guard (see module docstring)
+        self._measuring: Optional[Tuple[str, str]] = None
 
     # -- constructors --------------------------------------------------------
     @classmethod
@@ -115,10 +137,25 @@ class CostLedger:
         cost_ns)``; replay mode: skip ``fn`` and return ``(None, pinned
         cost_ns)`` from the trace, failing fast on any divergence."""
         if self.mode == "record":
-            t0 = time.perf_counter_ns()
-            result = fn(*args, **(kwargs or {})) if fn is not None \
-                else None
-            span = time.perf_counter_ns() - t0
+            if self._measuring is not None:
+                raise LiveTraceError(
+                    f"concurrent record: task {task!r} asked to measure "
+                    f"{label!r} while task {self._measuring[0]!r} is "
+                    f"still measuring {self._measuring[1]!r} — recorded "
+                    f"wall spans must not overlap (each would absorb "
+                    f"the other's wall time).  Live drivers record in "
+                    f"sequential phases: the in-process engines "
+                    f"guarantee this by dispatching one live call at a "
+                    f"time; do not nest charge() calls or record from "
+                    f"threads")
+            self._measuring = (task, label)
+            try:
+                t0 = time.perf_counter_ns()
+                result = fn(*args, **(kwargs or {})) if fn is not None \
+                    else None
+                span = time.perf_counter_ns() - t0
+            finally:
+                self._measuring = None
             # zero/negative spans (sub-ns callables, clock warp under a
             # virtualized timer) must still advance vtime: a 0-cost live
             # call would let a task spin without progressing, breaking
@@ -152,6 +189,15 @@ class CostLedger:
                 f"task {task!r}: recorded cost_ns={cost} at {label!r} "
                 f"is not positive — corrupt trace")
         return None, cost
+
+    def rewind(self) -> None:
+        """Reset the replay cursors to the start of the trace, so a
+        replay ledger can drive the same scenario again (a Workload
+        instance rebuilt for a second ``Simulation.run()`` calls this
+        from its build-time ``reset()``).  Record-mode ledgers have no
+        cursor; re-running a record workload is caught by the
+        workload's own reset (one record run per ledger)."""
+        self._cursor.clear()
 
     # -- persistence ---------------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:

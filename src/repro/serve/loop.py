@@ -26,15 +26,17 @@ class ServeStats:
     tokens_out: int
     per_token_ms: float
     throughput_tok_s: float
+    decode_steps: int = 0
 
 
 class BatchServer:
     def __init__(self, cfg: ModelConfig, params, max_new_tokens: int = 32,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None, pad_id: int = 0):
         self.cfg = cfg
         self.params = params
         self.max_new = max_new_tokens
         self.eos_id = eos_id
+        self.pad_id = pad_id
         self._prefill = jax.jit(
             lambda p, t, fe: registry.prefill(
                 cfg, p, t, frontend_embeds=fe,
@@ -44,7 +46,15 @@ class BatchServer:
 
     def generate(self, prompts: jnp.ndarray,
                  frontend_embeds=None) -> Dict:
-        """prompts (B, S) int32 -> dict with tokens (B, <=max_new) + stats."""
+        """prompts (B, S) int32 -> dict with tokens (B, <=max_new) + stats.
+
+        With an ``eos_id``, a lane that has emitted it is finished: its
+        later positions hold ``pad_id`` (a finished lane's argmax is KV
+        garbage, not output), ``tokens_out`` counts only tokens emitted
+        by lanes still alive at step start, and decode exits as soon as
+        every lane is done — ``per_token_ms`` divides by the decode
+        steps actually executed, not the output width.
+        """
         b = prompts.shape[0]
         t0 = time.perf_counter()
         logits, cache = self._prefill(self.params, prompts,
@@ -52,27 +62,34 @@ class BatchServer:
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         jax.block_until_ready(tok)
         t1 = time.perf_counter()
-        out = [np.asarray(tok)]
+        t_np = np.asarray(tok)
+        out = [t_np]
         alive = np.ones(b, bool)
+        if self.eos_id is not None:
+            alive &= t_np != self.eos_id
         n_out = b
+        decode_steps = 0
         for _ in range(self.max_new - 1):
+            if self.eos_id is not None and not alive.any():
+                break
             logits, cache = self._decode(self.params, tok, cache)
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            decode_steps += 1
             t_np = np.asarray(tok)
-            out.append(t_np)
             if self.eos_id is not None:
-                alive &= t_np != self.eos_id
+                t_np = np.where(alive, t_np,
+                                self.pad_id).astype(np.int32)
                 n_out += int(alive.sum())
-                if not alive.any():
-                    break
+                alive &= t_np != self.eos_id
             else:
                 n_out += b
+            out.append(t_np)
         jax.block_until_ready(tok)
         t2 = time.perf_counter()
         tokens = np.stack(out, axis=1)
-        n_steps = tokens.shape[1]
         stats = ServeStats(
             prefill_s=t1 - t0, decode_s=t2 - t1, tokens_out=n_out,
-            per_token_ms=(t2 - t1) / max(n_steps - 1, 1) * 1e3,
-            throughput_tok_s=n_out / max(t2 - t0, 1e-9))
+            per_token_ms=(t2 - t1) / max(decode_steps, 1) * 1e3,
+            throughput_tok_s=n_out / max(t2 - t0, 1e-9),
+            decode_steps=decode_steps)
         return {"tokens": tokens, "stats": stats}

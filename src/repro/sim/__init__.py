@@ -10,7 +10,10 @@ One import gives everything needed to compose and run a simulation:
 * :class:`Workload` — reusable vtask program factories (components +
   endpoints + fabrics + traffic + scopes).  Ports of the repo's
   workloads ship in :mod:`repro.sim.workloads`:
-  :class:`ChipRingTraining`, :class:`RackRing`, :class:`ModeledServe`.
+  :class:`ChipRingTraining`, :class:`RackRing`, :class:`ModeledServe`,
+  and :class:`LiveServe` (the real serve stack under open-loop
+  arrivals; see :func:`live_serve_sim` / :func:`record_live_serve` and
+  the co-located :func:`live_colocated_sim`).
 * :class:`Scenario` — declarative fault/interference injection:
   :class:`Straggler`, :class:`FailTask`, :class:`FailHost`,
   :class:`DegradeLink`, :class:`Interference`.
@@ -46,10 +49,15 @@ from repro.sim.scenario import (DegradeLink, FailHost, FailTask,
 from repro.sim.report import HostReport, SimReport
 from repro.sim.simulation import Simulation
 from repro.sim.vectorized import SweepResult, UnsupportedByEngine
-from repro.sim.workloads import ChipRingTraining, ModeledServe, RackRing
+from repro.sim.workloads import (ChipRingTraining, LiveServe,
+                                 ModeledServe, RackRing,
+                                 burst_arrivals, poisson_arrivals)
 from repro.sim.live import (LiveProgram, LiveTrainerRecovery,
-                            TrainerStack, live_recovery_sim,
-                            record_live_recovery, recovery_timeline)
+                            ServeStack, TrainerStack,
+                            live_colocated_sim, live_recovery_sim,
+                            live_serve_sim, record_live_colocated,
+                            record_live_recovery, record_live_serve,
+                            recovery_timeline, serve_latency)
 from repro.live import (CostLedger, LiveTraceError, LiveTraceMismatch,
                         TRACE_SCHEMA)
 from repro.core.engine_jax import TickRangeError
@@ -57,11 +65,15 @@ from repro.core.engine_jax import TickRangeError
 __all__ = [
     "CellSpec", "ChipRingTraining", "CostLedger", "DegradeLink",
     "EndpointSpec", "FabricSpec", "FailHost", "FailTask", "HostReport",
-    "Injection", "Interference", "LiveProgram", "LiveTraceError",
-    "LiveTraceMismatch", "LiveTrainerRecovery", "ModeledServe",
-    "Program", "RackRing", "Scenario", "ScopeSpec", "SimReport",
-    "Simulation", "Straggler", "SweepResult", "TRACE_SCHEMA",
-    "TickRangeError", "Topology", "TrainerStack", "UnsupportedByEngine",
-    "VecCompute", "VecMark", "VecRecv", "VecSend", "Workload",
-    "live_recovery_sim", "record_live_recovery", "recovery_timeline",
+    "Injection", "Interference", "LiveProgram", "LiveServe",
+    "LiveTraceError", "LiveTraceMismatch", "LiveTrainerRecovery",
+    "ModeledServe", "Program", "RackRing", "Scenario", "ScopeSpec",
+    "ServeStack", "SimReport", "Simulation", "Straggler",
+    "SweepResult", "TRACE_SCHEMA", "TickRangeError", "Topology",
+    "TrainerStack", "UnsupportedByEngine", "VecCompute", "VecMark",
+    "VecRecv", "VecSend", "Workload", "burst_arrivals",
+    "live_colocated_sim", "live_recovery_sim", "live_serve_sim",
+    "poisson_arrivals", "record_live_colocated",
+    "record_live_recovery", "record_live_serve", "recovery_timeline",
+    "serve_latency",
 ]

@@ -28,6 +28,15 @@ deterministic.  This module is that subsystem for the facade:
   canned marquee scenario builder (scenario parameters travel inside
   the trace's ``meta`` so a replay reconstructs exactly the recorded
   run) and its one-shot recorder.
+* :class:`ServeStack` + :func:`live_serve_sim` /
+  :func:`record_live_serve` — the serve half: the real
+  :class:`~repro.serve.loop.BatchServer` prefill/decode steps driven as
+  a :class:`~repro.sim.workloads.LiveServe` workload under open-loop
+  arrivals, reporting simulated time-in-system percentiles.
+* :func:`live_colocated_sim` / :func:`record_live_colocated` —
+  live-on-live interference: a real trainer and a real server sharing
+  one §3.3 memory-hierarchy cell (and one multi-driver ledger — the
+  recorder's sequential-span guard keeps their wall spans honest).
 * :func:`check_dist_live` — facade guard for ``engine="dist"``: record
   mode is rejected (forked workers cannot produce one coherent trace)
   and every live fn must pickle — an unpicklable callable is a
@@ -54,6 +63,7 @@ from repro.sim.scenario import FailHost, Scenario, TaskHandle
 from repro.sim.simulation import Simulation
 from repro.sim.topology import FabricSpec, Topology
 from repro.sim.workload import EndpointSpec, Program, Workload
+from repro.sim.workloads import LiveServe, poisson_arrivals
 
 
 def _noop(*_args) -> None:
@@ -149,6 +159,17 @@ class LiveProgram(Workload):
 
     def progress(self):
         return {"steps_done": self.steps_done}
+
+    def reset(self) -> None:
+        self.steps_done[:] = 0
+        if self.ledger.mode == "replay":
+            self.ledger.rewind()
+        elif any(self.ledger.tasks.get(t) for t in self.order):
+            raise ValueError(
+                f"record ledger already holds costs for "
+                f"{sorted(t for t in self.order if self.ledger.tasks.get(t))} "
+                f"— one record run per ledger; save the trace and "
+                f"replay it, or record with a fresh ledger")
 
     # live hooks
     def live_mode(self):
@@ -477,6 +498,21 @@ class LiveTrainerRecovery(Workload):
     def progress(self):
         return {"steps_done": self.steps_done, "beats": self.beats}
 
+    def reset(self) -> None:
+        self.steps_done[:] = 0
+        self.beats[:] = 0
+        self._timeline.clear()
+        self.restarts = 0
+        self.final_step = 0
+        self._fail_at = None     # re-armed by on_fail at build time
+        if self.ledger.mode == "replay":
+            self.ledger.rewind()
+        elif self.ledger.tasks.get(self.DRIVER):
+            raise ValueError(
+                f"record ledger already holds {self.DRIVER!r} costs — "
+                f"one record run per ledger; save the trace and replay "
+                f"it, or record with a fresh ledger")
+
     # -- live hooks ----------------------------------------------------------
     def live_mode(self):
         return self.ledger.mode
@@ -513,6 +549,16 @@ RECOVERY_DEFAULTS: Dict[str, Any] = dict(
 _WL_KEYS = ("n_steps", "checkpoint_every", "n_shards", "detection_ns",
             "ckpt_bytes", "req_bytes", "ack_bytes", "store_ns",
             "beat_ns")
+
+#: Safety margin (in train steps) the recovery recorder adds when it
+#: derives ``fail_at_vtime`` from a probe step.  The failure should
+#: land *after* the first checkpoint commits (``checkpoint_every``
+#: steps) but before the next one — half a step past the commit puts it
+#: mid-step on any machine speed, so the replayed restore always
+#: resumes from a real committed checkpoint.  Named (rather than a bare
+#: ``+ 0.5`` in the formula) and pinned into ``meta["fail_probe"]`` so
+#: every derived fail-at vtime in a saved trace is auditable.
+FAIL_PROBE_MARGIN_STEPS: float = 0.5
 
 
 def live_recovery_sim(ledger: CostLedger, *,
@@ -568,8 +614,15 @@ def record_live_recovery(out_path, *, arch: str = "qwen3_4b",
         t0 = _time.perf_counter_ns()
         stack.step(0)
         span = _time.perf_counter_ns() - t0
+        steps_to_failure = params["checkpoint_every"] \
+            + FAIL_PROBE_MARGIN_STEPS
         params["fail_at_vtime"] = max(1, int(
-            span * calibration * (params["checkpoint_every"] + 0.5)))
+            span * calibration * steps_to_failure))
+        ledger.meta["fail_probe"] = {
+            "probe_span_ns": int(span), "calibration": calibration,
+            "margin_steps": FAIL_PROBE_MARGIN_STEPS,
+            "steps_to_failure": steps_to_failure,
+            "fail_at_vtime": params["fail_at_vtime"]}
     sim = live_recovery_sim(ledger, stack=stack, **params)
     report = sim.run(engine=engine)
     ledger.save(out_path)
@@ -584,6 +637,314 @@ def recovery_timeline(report, *, workload: str = "live_train",
     sec = report.live.get(workload, {})
     return list(sec.get("tasks", {}).get(task, {})
                 .get("recovery", []))
+
+
+# ---------------------------------------------------------------------------
+# serve scenario: real BatchServer under open-loop arrivals
+# ---------------------------------------------------------------------------
+
+
+class ServeStack:
+    """Record-mode binding of the real :class:`~repro.serve.loop.
+    BatchServer` to :class:`~repro.sim.workloads.LiveServe`'s per-wave
+    phases.  JAX imports are lazy (same fork-safety reasoning as
+    :class:`TrainerStack`; replay passes ``stack=None``).
+
+    The server runs a *static* batch per wave (the BatchServer
+    contract): every wave prefill uses the same ``(max_batch,
+    prompt_len)`` prompt shape regardless of how many requests the wave
+    actually carries, so one compiled program serves every wave and
+    recorded costs reflect the static batch the real server would
+    execute.  Prompts are deterministic functions of the wave index —
+    no RNG stream in the record path."""
+
+    def __init__(self, *, arch: str = "qwen3_4b", max_batch: int = 4,
+                 prompt_len: int = 8, decode_steps: int = 4,
+                 seed: int = 0):
+        if max_batch < 1 or prompt_len < 1 or decode_steps < 1:
+            raise ValueError("max_batch, prompt_len and decode_steps "
+                             "must be >= 1")
+        self.arch = arch
+        self.max_batch = max_batch
+        self.prompt_len = prompt_len
+        self.decode_steps = decode_steps
+        self.seed = seed
+        self.server = None
+        self._tok = self._cache = None
+
+    def _prompts(self, wave: int):
+        import jax.numpy as jnp
+        vocab = self.server.cfg.vocab
+        ids = (np.arange(self.max_batch * self.prompt_len,
+                         dtype=np.int64)
+               .reshape(self.max_batch, self.prompt_len)
+               * 31 + wave * 131 + 7) % max(2, vocab)
+        return jnp.asarray(ids, dtype=jnp.int32)
+
+    def setup(self) -> None:
+        if self.server is not None:
+            return
+        import dataclasses
+
+        import jax
+        import jax.numpy as jnp
+
+        from repro import configs
+        from repro.models import registry
+        from repro.serve.loop import BatchServer
+        cfg = dataclasses.replace(configs.get_smoke(self.arch),
+                                  remat=False)
+        params = registry.init(cfg, jax.random.PRNGKey(self.seed))
+        self.server = BatchServer(cfg, params,
+                                  max_new_tokens=self.decode_steps + 1)
+        # warm both jits so recorded per-wave costs are steady-state
+        # execution, never compile time
+        logits, cache = self.server._prefill(params, self._prompts(0),
+                                             None)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        logits, _ = self.server._decode(params, tok, cache)
+        jax.block_until_ready(logits)
+
+    def prefill(self, wave: int, batch: int) -> None:
+        import jax
+        import jax.numpy as jnp
+        logits, self._cache = self.server._prefill(
+            self.server.params, self._prompts(wave), None)
+        self._tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        jax.block_until_ready(self._tok)
+
+    def decode(self, wave: int, d: int) -> None:
+        import jax
+        import jax.numpy as jnp
+        logits, self._cache = self.server._decode(
+            self.server.params, self._tok, self._cache)
+        self._tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        jax.block_until_ready(self._tok)
+
+    def close(self) -> None:
+        self._tok = self._cache = None
+
+
+#: Scenario parameters of the canned serve run.  ``arrivals`` is the
+#: resolved open-loop schedule: a record run pins the concrete integer
+#: list (plus everything else) into ``meta["serve"]``, so a replay
+#: reads the exact schedule back and never re-derives it from an RNG
+#: stream.  ``mean_gap_ns=None`` means the recorder probes one wave and
+#: aims the mean inter-arrival gap at half the wave's service span, so
+#: waves genuinely batch up on any machine speed.
+SERVE_DEFAULTS: Dict[str, Any] = dict(
+    n_requests=12, mean_gap_ns=None, seed=0, arrivals=None,
+    max_batch=4, decode_steps=4, req_bytes=512, resp_bytes=2048)
+
+
+def live_serve_sim(ledger: CostLedger, *,
+                   stack: Optional[ServeStack] = None,
+                   **overrides) -> Simulation:
+    """Build the canned serve Simulation for ``ledger``'s mode: the
+    live server on one host, the open-loop source on another.  Replay
+    reads the pinned parameters (including the concrete arrival
+    schedule) from the trace meta; record resolves defaults + overrides
+    and pins them."""
+    params = dict(SERVE_DEFAULTS)
+    if ledger.mode == "replay":
+        params.update(ledger.meta.get("serve", {}))
+    unknown = sorted(set(overrides) - set(params))
+    if unknown:
+        raise ValueError(f"unknown serve parameters {unknown}; "
+                         f"expected {sorted(params)}")
+    params.update(overrides)
+    if params["arrivals"] is None:
+        if params["mean_gap_ns"] is None:
+            raise ValueError(
+                "no arrival schedule: pass arrivals=... (explicit "
+                "vtimes) or mean_gap_ns=... (Poisson schedule), or "
+                "record via record_live_serve which probes a gap")
+        params["arrivals"] = [int(v) for v in poisson_arrivals(
+            params["n_requests"], params["mean_gap_ns"],
+            seed=params["seed"])]
+    params["arrivals"] = [int(v) for v in params["arrivals"]]
+    params["n_requests"] = len(params["arrivals"])
+    if ledger.mode == "record":
+        ledger.meta["serve"] = dict(params)
+    wl = LiveServe(ledger=ledger, stack=stack,
+                   arrivals=params["arrivals"],
+                   max_batch=params["max_batch"],
+                   decode_steps=params["decode_steps"],
+                   req_bytes=params["req_bytes"],
+                   resp_bytes=params["resp_bytes"])
+    topo = Topology.full_mesh(2, wl.link, n_cpus=4)
+    return Simulation(topo, wl, placement=wl.default_placement())
+
+
+def record_live_serve(out_path, *, arch: str = "qwen3_4b",
+                      prompt_len: int = 8, calibration: float = 1.0,
+                      engine: str = "async", **overrides):
+    """One-shot recorder for the canned serve scenario: run the real
+    BatchServer under simulated time against an open-loop Poisson
+    schedule, measure every wave phase, and save the trace to
+    ``out_path``.  Returns ``(report, ledger)``.
+
+    Unless ``arrivals``/``mean_gap_ns`` is overridden, the schedule is
+    derived from a probe wave (one prefill + ``decode_steps`` decodes):
+    the mean gap targets half the wave span, so the open-loop source
+    outruns the server and waves batch multiple requests.  The probe
+    is pinned into ``meta["serve_probe"]`` for auditability; the
+    resolved schedule itself lands in ``meta["serve"]["arrivals"]``."""
+    import time as _time
+    ledger = CostLedger.record(calibration=calibration)
+    params = dict(SERVE_DEFAULTS)
+    params.update(overrides)
+    stack = ServeStack(arch=arch, max_batch=params["max_batch"],
+                       prompt_len=prompt_len,
+                       decode_steps=params["decode_steps"])
+    stack.setup()
+    if params["arrivals"] is None and params["mean_gap_ns"] is None:
+        t0 = _time.perf_counter_ns()
+        stack.prefill(0, params["max_batch"])
+        for d in range(params["decode_steps"]):
+            stack.decode(0, d)
+        span = _time.perf_counter_ns() - t0
+        params["mean_gap_ns"] = max(1, int(span * calibration) // 2)
+        ledger.meta["serve_probe"] = {
+            "probe_span_ns": int(span), "calibration": calibration,
+            "mean_gap_ns": params["mean_gap_ns"]}
+    sim = live_serve_sim(ledger, stack=stack, **params)
+    report = sim.run(engine=engine)
+    ledger.save(out_path)
+    return report, ledger
+
+
+def serve_latency(report, *, workload: str = "live_serve",
+                  task: str = LiveServe.SERVER) -> Dict[str, int]:
+    """The simulated time-in-system percentiles (p50/p95/p99/max/mean,
+    ns) of a run's serve live section (empty if absent)."""
+    sec = report.live.get(workload, {})
+    return dict(sec.get("tasks", {}).get(task, {})
+                .get("latency_ns", {}))
+
+
+# ---------------------------------------------------------------------------
+# co-located live train + live serve on shared §3.3 cells
+# ---------------------------------------------------------------------------
+
+#: Scenario parameters of the canned co-located run: a live trainer
+#: (no failure injected) and a live server sharing host 0 and one
+#: declared memory-hierarchy cell, recorded into ONE multi-driver
+#: ledger.  Record pins the resolved dict (including the serve arrival
+#: schedule) into ``meta["colocated"]``.
+COLOCATED_DEFAULTS: Dict[str, Any] = dict(
+    train=dict(n_steps=4, checkpoint_every=2, n_shards=1,
+               detection_ns=2_000_000, ckpt_bytes=1_000_000,
+               req_bytes=256, ack_bytes=64, store_ns=500_000,
+               beat_ns=1_000_000),
+    serve=dict(n_requests=8, mean_gap_ns=None, seed=1, arrivals=None,
+               max_batch=2, decode_steps=2, req_bytes=512,
+               resp_bytes=2048),
+    cell=dict(ways=2, working_set_frac=0.7, bw_share=0.3,
+              bw_demand=0.7, mem_frac=0.6),
+    cell_cfg=dict(n_warm_slots=1, recondition_ns=20_000))
+
+CELL_NAME = "colo"
+
+
+def live_colocated_sim(ledger: CostLedger, *,
+                       train_stack: Optional[TrainerStack] = None,
+                       serve_stack: Optional[ServeStack] = None,
+                       **overrides) -> Simulation:
+    """Build the live-on-live interference Simulation: the recovery
+    driver (failure-free here) and the live server both bound to cell
+    ``"colo"`` on host 0, so their LiveCalls charge §3.3 co-activity
+    slowdowns against each other.  Both workloads share ``ledger`` —
+    one trace holds both drivers' costs (``live.trainer`` +
+    ``serve.live`` task keys are disjoint)."""
+    params = {k: dict(v) for k, v in COLOCATED_DEFAULTS.items()}
+    if ledger.mode == "replay":
+        for k, v in ledger.meta.get("colocated", {}).items():
+            params.setdefault(k, {}).update(v)
+    unknown = sorted(set(overrides) - set(params))
+    if unknown:
+        raise ValueError(f"unknown colocated sections {unknown}; "
+                         f"expected {sorted(params)}")
+    for k, v in overrides.items():
+        bad = sorted(set(v) - set(COLOCATED_DEFAULTS[k]))
+        if bad:
+            raise ValueError(f"unknown colocated {k} parameters {bad}")
+        params[k].update(v)
+    sp = params["serve"]
+    if sp["arrivals"] is None:
+        if sp["mean_gap_ns"] is None:
+            raise ValueError(
+                "no serve arrival schedule: pass serve={'arrivals': "
+                "...} or serve={'mean_gap_ns': ...}, or record via "
+                "record_live_colocated which probes a gap")
+        sp["arrivals"] = [int(v) for v in poisson_arrivals(
+            sp["n_requests"], sp["mean_gap_ns"], seed=sp["seed"])]
+    sp["arrivals"] = [int(v) for v in sp["arrivals"]]
+    sp["n_requests"] = len(sp["arrivals"])
+    if ledger.mode == "record":
+        ledger.meta["colocated"] = {k: dict(v)
+                                    for k, v in params.items()}
+    train = LiveTrainerRecovery(
+        ledger=ledger, stack=train_stack, cell=CELL_NAME,
+        **{k: params["train"][k] for k in _WL_KEYS})
+    serve = LiveServe(
+        ledger=ledger, stack=serve_stack, cell=CELL_NAME,
+        arrivals=sp["arrivals"], max_batch=sp["max_batch"],
+        decode_steps=sp["decode_steps"], req_bytes=sp["req_bytes"],
+        resp_bytes=sp["resp_bytes"])
+    n_shards = params["train"]["n_shards"]
+    n_hosts = n_shards + 3
+    topo = Topology.full_mesh(n_hosts, train.link, n_cpus=4)
+    topo.cell(CELL_NAME, **params["cell"])
+    topo.cell_config(**params["cell_cfg"])
+    placement = train.default_placement()      # driver 0, shards,
+    placement[serve.SERVER] = 0                # store; server shares
+    placement[serve.SOURCE] = n_shards + 2     # the driver's host/cell
+    return Simulation(topo, [train, serve], placement=placement)
+
+
+def record_live_colocated(out_path, *, arch: str = "qwen3_4b",
+                          seq_len: int = 32, global_batch: int = 4,
+                          prompt_len: int = 8,
+                          calibration: float = 1.0,
+                          engine: str = "async", **overrides):
+    """One-shot recorder for the co-located scenario: real trainer
+    steps (single-device mesh, in-process) interleaved with real
+    BatchServer waves, both measured into one multi-driver ledger under
+    the in-process engines' one-live-call-at-a-time dispatch.  Returns
+    ``(report, ledger)``."""
+    import time as _time
+    ledger = CostLedger.record(calibration=calibration)
+    params = {k: dict(v) for k, v in COLOCATED_DEFAULTS.items()}
+    for k, v in overrides.items():
+        if k not in params:
+            raise ValueError(f"unknown colocated section {k!r}")
+        params[k].update(v)
+    tp, sp = params["train"], params["serve"]
+    train_stack = TrainerStack(arch=arch, n_steps=tp["n_steps"],
+                               seq_len=seq_len,
+                               global_batch=global_batch,
+                               mesh_shape=(1, 1))
+    serve_stack = ServeStack(arch=arch, max_batch=sp["max_batch"],
+                             prompt_len=prompt_len,
+                             decode_steps=sp["decode_steps"])
+    train_stack.setup()
+    serve_stack.setup()
+    if sp["arrivals"] is None and sp["mean_gap_ns"] is None:
+        t0 = _time.perf_counter_ns()
+        serve_stack.prefill(0, sp["max_batch"])
+        for d in range(sp["decode_steps"]):
+            serve_stack.decode(0, d)
+        span = _time.perf_counter_ns() - t0
+        sp["mean_gap_ns"] = max(1, int(span * calibration) // 2)
+        ledger.meta["serve_probe"] = {
+            "probe_span_ns": int(span), "calibration": calibration,
+            "mean_gap_ns": sp["mean_gap_ns"]}
+    sim = live_colocated_sim(ledger, train_stack=train_stack,
+                             serve_stack=serve_stack, **params)
+    report = sim.run(engine=engine)
+    ledger.save(out_path)
+    return report, ledger
 
 
 # ---------------------------------------------------------------------------

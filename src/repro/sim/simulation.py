@@ -291,6 +291,12 @@ class Simulation:
     def build(self) -> "Simulation":
         if self._built:
             return self
+        # run-scoped workload state (progress arrays, timelines, replay
+        # cursors) is cleared before anything is wired, so a Workload
+        # instance reused across simulations starts every run fresh —
+        # identically in all engines and every forked dist replica
+        for wl in self.workloads:
+            wl.reset()
         topo = self.topology
         programs = self._programs()
         fabrics = self._fabrics()

@@ -137,6 +137,18 @@ class Workload:
     def progress(self) -> Dict[str, Any]:
         return {}
 
+    def reset(self) -> None:
+        """Clear run-scoped state (progress arrays, timelines, replay
+        cursors).  Workloads allocate their progress buffers in
+        ``__init__``, so without a reset a Workload instance reused
+        across two ``Simulation.run()`` calls carries the first run's
+        progress into the second's report (and a stale parent array
+        double-counts in the dist engine's max-merge).
+        ``Simulation.build()`` and the dist coordinator call this once
+        per run, before anything executes; the default is a no-op for
+        stateless workloads."""
+        return None
+
     def vec_ops(self) -> Optional[Dict[str, List[Any]]]:
         """Program name -> flat op list (:class:`VecCompute` /
         :class:`VecSend` / :class:`VecRecv` / :class:`VecMark`),

@@ -1,4 +1,4 @@
-"""Workload ports: chip-ring training, rack-ring, and modeled serving.
+"""Workload ports: chip-ring training, rack-ring, and serving.
 
 These are the repo's hand-wired simulations re-expressed against the
 :class:`~repro.sim.workload.Workload` protocol.  Bodies are kept
@@ -6,17 +6,25 @@ action-for-action identical to the legacy builders so the thin adapters
 in :mod:`repro.core.cluster` produce bit-identical results (verified by
 ``tests/test_sim_equivalence.py``); stragglers/failures moved out of the
 bodies and into :class:`~repro.sim.scenario.Scenario` injections.
+
+Serving comes in two forms: :class:`ModeledServe` (closed-loop clients
+with a modeled service time) and :class:`LiveServe` — the real
+:class:`~repro.serve.loop.BatchServer` prefill/decode steps under
+simulated time, fed by an *open-loop* arrival schedule
+(:func:`poisson_arrivals` / :func:`burst_arrivals`) standing in for
+high-traffic clients that do not wait for responses.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.cluster import ClusterSpec, StepCost
 from repro.core.ipc import LinkSpec
 from repro.core.vtask import Compute, LiveCall, Recv, Send
+from repro.sim.scenario import TaskHandle
 from repro.sim.topology import FabricSpec
 from repro.sim.workload import (EndpointSpec, Program, ScopeSpec,
                                 VecCompute, VecMark, VecRecv, VecSend,
@@ -143,6 +151,11 @@ class ChipRingTraining(Workload):
 
     def progress(self) -> Dict[str, np.ndarray]:
         return {"done_steps": self.done_steps}
+
+    def reset(self) -> None:
+        self.done_steps[:] = 0
+        if self.ledger is not None and self.ledger.mode == "replay":
+            self.ledger.rewind()
 
     def live_mode(self):
         return self.ledger.mode if self.ledger is not None else None
@@ -314,6 +327,9 @@ class RackRing(Workload):
     def progress(self) -> Dict[str, np.ndarray]:
         return {"iters_done": self.iters_done}
 
+    def reset(self) -> None:
+        self.iters_done[:] = 0
+
     def vec_ops(self):
         """Vectorized lowering — op-for-op the ``_worker_body`` stream
         (modeled iterations only)."""
@@ -419,3 +435,265 @@ class ModeledServe(Workload):
 
     def progress(self) -> Dict[str, np.ndarray]:
         return {"served": self.served}
+
+    def reset(self) -> None:
+        self.served[:] = 0
+
+
+# ---------------------------------------------------------------------------
+# open-loop arrival schedules + live serving
+# ---------------------------------------------------------------------------
+
+
+def poisson_arrivals(n: int, mean_gap_ns: int, *, seed: int = 0,
+                     start_ns: int = 0) -> np.ndarray:
+    """Open-loop Poisson arrival schedule: ``n`` absolute arrival
+    vtimes (int64 ns) with exponential inter-arrival gaps of mean
+    ``mean_gap_ns``, each clamped >= 1 ns, deterministic in ``seed``.
+
+    The schedule is *generated once* — at record time for live serving
+    — and pinned into the trace meta, so replays read the exact integer
+    schedule back instead of re-deriving it from an RNG stream (numpy
+    stream details must never be part of the determinism argument)."""
+    if n < 1:
+        raise ValueError(f"need at least one arrival, got n={n}")
+    if mean_gap_ns < 1:
+        raise ValueError(f"mean_gap_ns must be >= 1, got {mean_gap_ns}")
+    rng = np.random.default_rng(seed)
+    gaps = np.maximum(1, rng.exponential(float(mean_gap_ns),
+                                         size=n)).astype(np.int64)
+    return int(start_ns) + np.cumsum(gaps)
+
+
+def burst_arrivals(n: int, burst_size: int, *, gap_ns: int,
+                   spread_ns: int = 0, start_ns: int = 0) -> np.ndarray:
+    """Deterministic bursty schedule: requests arrive in bursts of
+    ``burst_size`` (``spread_ns`` apart inside a burst), one burst
+    every ``gap_ns``, truncated to ``n`` requests — the high-traffic
+    antagonist for queue-depth stats (a whole burst lands on the server
+    at once)."""
+    if n < 1 or burst_size < 1 or gap_ns < 1:
+        raise ValueError("n, burst_size and gap_ns must be >= 1")
+    out = []
+    b = 0
+    while len(out) < n:
+        t0 = int(start_ns) + (b + 1) * int(gap_ns)
+        for i in range(burst_size):
+            out.append(t0 + i * int(spread_ns))
+            if len(out) == n:
+                break
+        b += 1
+    return np.asarray(out, dtype=np.int64)
+
+
+class LiveServe(Workload):
+    """Open-loop live serving: the real serve stack under simulated
+    time (the serve half of the paper's full-stack claim).
+
+    Two programs: ``serve.src`` — the open-loop source, emitting one
+    request per entry of the ``arrivals`` schedule without waiting for
+    responses (millions-of-users traffic has no closed loop); and
+    ``serve.live`` — the live server, which forms *waves*: on receiving
+    the head request it batches every request whose scheduled arrival
+    is at or before its current vtime (up to ``max_batch``, the static
+    batch of :class:`~repro.serve.loop.BatchServer`), then runs one
+    prefill plus ``decode_steps`` decode steps as cost-derived
+    :class:`~repro.core.vtask.LiveCall`\\ s charged through the
+    :class:`~repro.live.CostLedger` — real jitted BatchServer steps in
+    record mode (via :class:`~repro.sim.live.ServeStack`), pinned costs
+    in replay.
+
+    Determinism: wave membership depends only on the build-time
+    ``arrivals`` array and the server's vtime, which replay re-derives
+    exactly from the pinned costs — so the wave sequence, the ledger
+    labels, per-request latencies, and queue depths are bit-identical
+    across single/barrier/async/dist (`tests/test_live_serve.py`).
+
+    The per-task live section reports simulated time-in-system
+    percentiles (p50/p95/p99, nearest-rank on integers — no float
+    interpolation) and queue-depth stats sampled at each wave start,
+    surfaced through ``SimReport.live``.
+    """
+
+    name = "live_serve"
+    SERVER = "serve.live"
+    SOURCE = "serve.src"
+
+    def __init__(self, *, ledger, arrivals: Sequence[int], stack=None,
+                 max_batch: int = 4, decode_steps: int = 4,
+                 req_bytes: int = 512, resp_bytes: int = 2048,
+                 cell: Optional[str] = None,
+                 link: LinkSpec = LinkSpec(bandwidth_bps=25e9 * 8,
+                                           latency_ns=10_000)):
+        if ledger.mode == "record" and stack is None:
+            raise ValueError("record mode needs a real ServeStack "
+                             "(the callables to measure)")
+        if max_batch < 1 or decode_steps < 1:
+            raise ValueError("max_batch and decode_steps must be >= 1")
+        arr = np.asarray(arrivals, dtype=np.int64)
+        if arr.ndim != 1 or len(arr) == 0:
+            raise ValueError("arrivals must be a non-empty 1-D schedule")
+        if np.any(arr < 1):
+            raise ValueError("arrival vtimes must be >= 1 ns")
+        if np.any(np.diff(arr) < 0):
+            raise ValueError("arrivals must be non-decreasing")
+        self.ledger = ledger
+        self.stack = stack
+        self.arrivals = arr
+        self.max_batch = max_batch
+        self.decode_steps = decode_steps
+        self.req_bytes = req_bytes
+        self.resp_bytes = resp_bytes
+        self.cell = cell
+        self.link = link
+        self._handle = TaskHandle()
+        self.sent = np.zeros(1, dtype=np.int64)
+        self.served = np.zeros(1, dtype=np.int64)
+        self.latencies = np.zeros(len(arr), dtype=np.int64)
+        self.wave_sizes: List[int] = []
+        self.wave_depths: List[int] = []
+
+    # -- bodies --------------------------------------------------------------
+    def _source_factory(self, eps):
+        ep = eps["serve.lsrc"]
+
+        def body():
+            prev = 0
+            for i, t in enumerate(self.arrivals):
+                t = int(t)
+                if t > prev:
+                    yield Compute(t - prev)
+                prev = t
+                yield Send(ep, "serve.lsrv", self.req_bytes, payload=i)
+                self.sent[0] = i + 1
+            # open loop: responses are drained only after the last
+            # request is out, so sending never waits on the server
+            while True:
+                msg = yield Recv(ep)
+                if msg.payload[0] == "close":
+                    return
+        return body()
+
+    def _server_factory(self, eps):
+        ep = eps["serve.lsrv"]
+
+        def body():
+            led, stack = self.ledger, self.stack
+            if stack is not None:
+                stack.setup()    # model init + jit warm-up: outside
+            task = self._handle.task            # simulated time
+            arr = self.arrivals
+            n = len(arr)
+            done = wave = 0
+            while done < n:
+                yield Recv(ep)               # head request of the wave
+                now = int(task.vtime)
+                # wave membership: every request whose *scheduled*
+                # arrival is at or before now, capped at the static
+                # batch — build-time data + deterministic vtime only
+                hi = done + 1
+                while hi < n and hi - done < self.max_batch \
+                        and int(arr[hi]) <= now:
+                    hi += 1
+                for _ in range(done + 1, hi):
+                    yield Recv(ep)           # rest of the wave
+                batch = hi - done
+                depth = hi
+                while depth < n and int(arr[depth]) <= now:
+                    depth += 1
+                self.wave_sizes.append(batch)
+                self.wave_depths.append(depth - done)
+                _, cost = led.charge(
+                    self.SERVER, f"prefill:{wave}",
+                    stack.prefill if stack else None, (wave, batch))
+                yield LiveCall(_live_step, cost_ns=cost,
+                               label=f"prefill:{wave}")
+                for d in range(self.decode_steps):
+                    _, cost = led.charge(
+                        self.SERVER, f"decode:{wave}:{d}",
+                        stack.decode if stack else None, (wave, d))
+                    yield LiveCall(_live_step, cost_ns=cost,
+                                   label=f"decode:{wave}:{d}")
+                t_done = int(task.vtime)
+                for j in range(done, hi):
+                    self.latencies[j] = t_done - int(arr[j])
+                yield Send(ep, "serve.lsrc", self.resp_bytes * batch,
+                           payload=("wave", wave, batch))
+                done = hi
+                self.served[0] = done
+                wave += 1
+            yield Send(ep, "serve.lsrc", 64, payload=("close", wave, 0))
+            if stack is not None:
+                stack.close()
+        return body()
+
+    # -- workload protocol ---------------------------------------------------
+    def fabrics(self) -> List[FabricSpec]:
+        return [FabricSpec("lsvc", self.link)]
+
+    def programs(self) -> List[Program]:
+        return [
+            Program(name=self.SOURCE, make_body=self._source_factory,
+                    endpoints=(EndpointSpec("serve.lsrc", "lsvc"),)),
+            Program(name=self.SERVER, make_body=self._server_factory,
+                    endpoints=(EndpointSpec("serve.lsrv", "lsvc"),),
+                    kind="live", cell=self.cell, handle=self._handle)]
+
+    def default_placement(self) -> Dict[str, int]:
+        return {self.SOURCE: 0, self.SERVER: 1}
+
+    def traffic(self) -> Dict[Tuple[str, str], float]:
+        n = len(self.arrivals)
+        return {(self.SOURCE, self.SERVER):
+                float(n * (self.req_bytes + self.resp_bytes))}
+
+    def progress(self) -> Dict[str, np.ndarray]:
+        return {"sent": self.sent, "served": self.served}
+
+    def reset(self) -> None:
+        self.sent[:] = 0
+        self.served[:] = 0
+        self.latencies[:] = 0
+        self.wave_sizes.clear()
+        self.wave_depths.clear()
+        if self.ledger.mode == "replay":
+            self.ledger.rewind()
+        elif self.ledger.tasks.get(self.SERVER):
+            raise ValueError(
+                f"record ledger already holds {self.SERVER!r} costs: "
+                f"one record run per ledger — save the trace and "
+                f"replay it, or record with a fresh ledger")
+
+    # -- live hooks ----------------------------------------------------------
+    def live_mode(self):
+        return self.ledger.mode
+
+    def live_fns(self):
+        return {self.SERVER: self.stack.prefill} if self.stack else {}
+
+    def live_report(self, tasks: Optional[set] = None):
+        sec = {"mode": self.ledger.mode,
+               "calibration": self.ledger.calibration, "tasks": {}}
+        if tasks is None or self.SERVER in tasks:
+            done = int(self.served[0])
+            lat = sorted(int(v) for v in self.latencies[:done])
+
+            def pct(q):      # nearest-rank percentile, pure integers
+                if not lat:
+                    return 0
+                return lat[min(len(lat) - 1,
+                               max(0, (q * len(lat) + 99) // 100 - 1))]
+
+            sec["tasks"][self.SERVER] = {
+                "requests": done,
+                "waves": len(self.wave_sizes),
+                "max_wave_batch": max(self.wave_sizes, default=0),
+                "latency_ns": {
+                    "p50": pct(50), "p95": pct(95), "p99": pct(99),
+                    "max": lat[-1] if lat else 0,
+                    "mean": (sum(lat) // len(lat)) if lat else 0},
+                "queue_depth": {
+                    "max": max(self.wave_depths, default=0),
+                    "sum": int(sum(self.wave_depths)),
+                    "samples": len(self.wave_depths)}}
+        return sec

@@ -1,11 +1,14 @@
 """Golden-trace regression for the example scenario gallery.
 
 ``tests/golden/gallery.json`` is the canonical compact SimReport for
-the five scenarios ``examples/cluster_sim.py`` showcases (straggler +
+the seven scenarios ``examples/cluster_sim.py`` showcases (straggler +
 mid-run host death, mid-run cross-rack link degradation, co-located
 serve+train interference, co-located live cells with §3.3
-memory-hierarchy charges, and the live trainer recovery replayed from
-its checked-in recorded trace), at CI smoke sizes.  The test re-runs them
+memory-hierarchy charges, the live trainer recovery replayed from its
+checked-in recorded trace, the live serve stack under open-loop
+arrivals, and the co-located live train + live serve cells scenario —
+the latter three all replayed from checked-in recorded traces), at CI
+smoke sizes.  The test re-runs them
 and diffs the *timing-bearing* fields — status, horizon, message and
 byte totals, per-task final vtimes/states, progress arrays, per-host
 cell accounting — so an engine refactor cannot silently shift
@@ -36,11 +39,16 @@ from repro.core.cluster import ClusterSpec, StepCost
 from repro.sim import (ChipRingTraining, CostLedger, DegradeLink,
                        FailHost, ModeledServe, RackRing, Scenario,
                        Simulation, Straggler, Topology,
-                       live_recovery_sim)
+                       live_colocated_sim, live_recovery_sim,
+                       live_serve_sim)
 
 GOLDEN = pathlib.Path(__file__).parent / "golden" / "gallery.json"
 LIVE_TRACE = (pathlib.Path(__file__).parent / "golden"
               / "live_recovery_trace.json")
+SERVE_TRACE = (pathlib.Path(__file__).parent / "golden"
+               / "live_serve_trace.json")
+COLOCATED_TRACE = (pathlib.Path(__file__).parent / "golden"
+                   / "live_colocated_trace.json")
 
 #: the canonical (deterministic, machine-independent) report subset
 CANONICAL_FIELDS = ("scenario", "status", "n_hosts", "vtime_ns",
@@ -101,11 +109,28 @@ def _gallery():
         # like any modeled scenario, recovery timeline included
         return live_recovery_sim(CostLedger.replay(LIVE_TRACE))
 
+    def live_serve():
+        # the serve half of the live stack: real BatchServer waves
+        # under open-loop Poisson arrivals, replayed from the
+        # checked-in trace (re-record with `python -m repro.live
+        # record --scenario serve`) — latency percentiles and
+        # queue-depth stats land in the golden live section
+        return live_serve_sim(CostLedger.replay(SERVE_TRACE))
+
+    def live_colocated():
+        # live-on-live: real trainer + real server sharing host 0 and
+        # one §3.3 cell, both replayed from ONE multi-driver trace
+        # (re-record with `python -m repro.live record --scenario
+        # colocated`) — cell co-activity charges are golden-pinned
+        return live_colocated_sim(CostLedger.replay(COLOCATED_TRACE))
+
     return {"straggler_host_death": straggler_host_death,
             "degraded_link": degraded_link,
             "colocated_serve_train": colocated_serve_train,
             "colocated_cells": colocated_cells,
-            "live_recovery": live_recovery}
+            "live_recovery": live_recovery,
+            "live_serve": live_serve,
+            "live_colocated": live_colocated}
 
 
 def canonical(report) -> dict:

@@ -160,3 +160,62 @@ def test_serve_loop(small_cfg):
     # greedy decode must be reproducible
     out2 = srv.generate(prompts)
     np.testing.assert_array_equal(out["tokens"], out2["tokens"])
+
+
+def test_serve_eos_masks_finished_lanes_and_early_exits(small_cfg):
+    """Regression: post-EOS positions used to leak the finished lane's
+    argmax (KV garbage) into the output, and per_token_ms divided by
+    the full output width even when EOS early-exit ran fewer decode
+    steps."""
+    from repro.serve.loop import BatchServer
+
+    params = registry.init(small_cfg, jax.random.PRNGKey(0))
+    ref = BatchServer(small_cfg, params, max_new_tokens=8)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                                 small_cfg.vocab)
+    toks = np.asarray(ref.generate(prompts)["tokens"])
+
+    # force a mid-sequence EOS: pick lane 0's second greedy token; the
+    # eos-aware server must then pad lane 0 after that position
+    eos = int(toks[0, 1])
+    pad = -1
+    srv = BatchServer(small_cfg, params, max_new_tokens=8, eos_id=eos,
+                      pad_id=pad)
+    out = srv.generate(prompts)
+    got = np.asarray(out["tokens"])
+    stats = out["stats"]
+    for lane in range(got.shape[0]):
+        hits = np.where(got[lane] == eos)[0]
+        if len(hits):
+            after = got[lane, hits[0] + 1:]
+            assert (after == pad).all(), (
+                f"lane {lane} leaks unmasked post-EOS tokens: "
+                f"{got[lane]}")
+    # tokens_out counts only live-lane emissions, never pad filler
+    assert stats.tokens_out <= got.size
+    assert stats.tokens_out < toks.size or (got != pad).all()
+    assert stats.decode_steps <= got.shape[1] - 1
+    # per_token_ms is per decode step actually executed
+    assert stats.per_token_ms == pytest.approx(
+        stats.decode_s / max(stats.decode_steps, 1) * 1e3)
+
+    # forced immediate EOS on every lane: decode must early-exit after
+    # the prefill token, not run max_new-1 garbage steps
+    eos_all = int(toks[0, 0])
+    if int(toks[1, 0]) == eos_all:
+        srv2 = BatchServer(small_cfg, params, max_new_tokens=8,
+                           eos_id=eos_all, pad_id=pad)
+        out2 = srv2.generate(prompts)
+        assert out2["stats"].decode_steps == 0
+        assert np.asarray(out2["tokens"]).shape[1] == 1
+
+    # single-lane early exit: batch of one, EOS = its first decoded
+    # token -> exactly one decode step, output width 2
+    one = prompts[:1]
+    first = np.asarray(ref.generate(one)["tokens"])[0]
+    srv3 = BatchServer(small_cfg, params, max_new_tokens=8,
+                       eos_id=int(first[1]), pad_id=pad)
+    out3 = srv3.generate(one)
+    got3 = np.asarray(out3["tokens"])
+    assert got3.shape[1] < 8, "EOS early-exit did not trigger"
+    assert out3["stats"].decode_steps == got3.shape[1] - 1
