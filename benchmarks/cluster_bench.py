@@ -499,6 +499,54 @@ def smoke_vectorized() -> None:
           f"bit-identical to solo runs")
 
 
+def main_campaign() -> dict:
+    """The fault-campaign regime: sweep the registered serve_smoke@v1
+    grid (bitflip/fail_task/fail_host/straggler x client x vtime) and
+    the rack_ring@v1 grid (which exercises the vectorized sweep fast
+    path for its admissible points), reporting points/s, the outcome
+    histogram, and minimized-reproducer counts."""
+    from repro.sim import Campaign, registry
+
+    rows = {}
+    for ref in ("serve_smoke@v1", "rack_ring@v1"):
+        ent = registry.entry(ref)
+        report = Campaign(ent.make, ent.grid(), seed=0,
+                          base_name=ent.ref).run()
+        rows[ent.name] = {
+            "n_points": report.grid["n_points"],
+            "shape": report.grid["shape"],
+            "fast_path": report.fast_path,
+            "histogram": report.histogram,
+            "n_reproducers": len(report.reproducers),
+            "wall_s": round(report.wall_s, 4),
+            "points_per_s": round(report.points_per_s, 1),
+        }
+        print(f"campaign regime {ent.ref}: {report.grid['n_points']} "
+              f"points in {report.wall_s:.3f}s "
+              f"({report.points_per_s:.1f} pts/s, "
+              f"fast_path={report.fast_path}), histogram "
+              f"{report.histogram}, "
+              f"{len(report.reproducers)} minimized reproducers")
+    return rows
+
+
+def smoke_campaign() -> None:
+    """CI smoke for the campaign harness on bench inputs: the serve
+    grid must land its pinned histogram with byte-stable minimized
+    reproducers (delegates to the campaign CLI's own smoke gate), and
+    the registry's pinned goldens must still replay."""
+    from repro.sim import registry
+    from repro.sim.campaign import _cmd_smoke
+
+    assert _cmd_smoke() == 0
+    failures = registry.check(["rack_ring@v1", "serve_smoke@v1",
+                               "bitflip_serve@v1", "clock_skew_rack@v1",
+                               "serve_flip_min@v1"])
+    assert not failures, failures
+    print("campaign smoke ok: pinned histogram + byte-stable "
+          "reproducers, modeled registry goldens replay")
+
+
 def simulate_sharded_dist(*, n_chips: int = 512, n_hosts: int = 4,
                           n_steps: int = 3) -> dict:
     """The dist engine's parallelism case: a training ring sharded
@@ -602,6 +650,7 @@ def main():
     sweep = main_sweep()
     live = main_live_recovery()
     serve = main_live_serve()
+    campaign = main_campaign()
     sharded = simulate_sharded_dist() if HAS_FORK else None
     sharded_large = (simulate_sharded_dist(n_chips=2048, n_hosts=16)
                      if HAS_FORK else None)
@@ -627,17 +676,20 @@ def main():
                                     "live_section")}
                 for name, r in rs.items()}
     bench = {
-        # v7: + the live_serve replay regime (simulated latency
-        # percentiles + replay dispatch throughput); v6 added the
-        # live_recovery replay regime; v5 the vectorized engine row in
-        # multihost and the vmap batched-sweep regime
-        "schema": "BENCH_cluster/v7",
+        # v8: + the fault-campaign regime (swept grids, outcome
+        # histograms, minimized-reproducer throughput); v7 added the
+        # live_serve replay regime (simulated latency percentiles +
+        # replay dispatch throughput); v6 the live_recovery replay
+        # regime; v5 the vectorized engine row in multihost and the
+        # vmap batched-sweep regime
+        "schema": "BENCH_cluster/v8",
         "multihost": strip(multihost),
         "multihost_large": strip(large),
         "cells": strip(cells),
         "sweep": sweep,
         "live_recovery": strip(live),
         "live_serve": strip(serve),
+        "campaign": campaign,
         "training": rows,
     }
     if HAS_FORK:
@@ -681,5 +733,6 @@ if __name__ == "__main__":
         smoke_vectorized()
         smoke_live_recovery()
         smoke_live_serve()
+        smoke_campaign()
     else:
         main()

@@ -111,6 +111,10 @@ class Hub:
         self.links: Dict[Tuple[str, str], LinkSpec] = {}
         self.default_link = default_link
         self.hooks: List[HookFn] = []
+        # ingress hooks run only on the hub that owns the destination
+        # endpoint (the local-delivery branch of route()), so a
+        # cross-host message is charged exactly once — at the receiver
+        self.ingress_hooks: List[HookFn] = []
         self.state: Dict[str, Any] = {}           # hook scratch state
         self.busy_until: Dict[Tuple[str, str], int] = {}
         self.stats = {"messages": 0, "bytes": 0, "queued_ns": 0}
@@ -136,6 +140,12 @@ class Hub:
     def add_hook(self, fn: HookFn) -> None:
         """eBPF-analogue: inline, pure extra-latency/steering program."""
         self.hooks.append(fn)
+
+    def add_ingress_hook(self, fn: HookFn) -> None:
+        """Receiver-side hook: runs only when *this* hub delivers the
+        message to a local endpoint (after any cross-host forwarding),
+        e.g. per-host receive-clock skew.  Add-only, like hooks."""
+        self.ingress_hooks.append(fn)
 
     def peer_with(self, other: "Hub", link: Optional[LinkSpec] = None):
         """Distributed hub instance (paper §3.5): one logical hub spanning
@@ -202,6 +212,12 @@ class Hub:
                     self._account_peer(peer.name, routed, sent_at, link)
                     return routed
             raise KeyError(f"hub {self.name}: unknown endpoint {msg.dst}")
+        if self.ingress_hooks:
+            # same add-only contract as sender hooks: clamped as a
+            # group so a (buggy) negative hook cannot undercut the
+            # link's guaranteed lookahead
+            extra += max(0, sum(int(fn(msg, self.state))
+                                for fn in self.ingress_hooks))
         link = self._link(msg.src, msg.dst)
         msg.visibility_time = self._serialize(msg, (msg.src, msg.dst),
                                               link, extra)

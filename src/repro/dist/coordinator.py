@@ -67,7 +67,19 @@ from repro.sim.report import SimReport, _jsonable
 
 
 class DistWorkerError(RuntimeError):
-    """A worker crashed, hung past the timeout, or closed its pipe."""
+    """A worker crashed, hung past the timeout, or closed its pipe.
+
+    ``worker`` is the failing worker's index when known;
+    ``worker_traceback`` carries the worker-side traceback text for
+    error-frame failures (a crash inside the replica), so callers —
+    the fault-campaign harness in particular — can capture *why* a
+    point crashed without parsing the message."""
+
+    def __init__(self, message: str, *, worker: int = -1,
+                 worker_traceback: str = ""):
+        super().__init__(message)
+        self.worker = worker
+        self.worker_traceback = worker_traceback
 
 
 def partition_hosts(n_hosts: int, n_workers: int) -> List[List[int]]:
@@ -161,13 +173,15 @@ class DistCoordinator:
         try:
             frame = conn.recv_bytes()
         except EOFError as e:
-            raise DistWorkerError(f"dist worker {w} died mid-run") from e
+            raise DistWorkerError(f"dist worker {w} died mid-run",
+                                  worker=w) from e
         tag = frame[:1]
         if tag == frames.TAG_PICKLE:
             sub, payload = frames.unpack_pickle(frame)
             if sub == "error":
                 raise DistWorkerError(
-                    f"dist worker {w} failed:\n{payload}")
+                    f"dist worker {w} failed:\n{payload}",
+                    worker=w, worker_traceback=str(payload))
             if isinstance(expect, tuple):
                 if sub in expect:
                     return sub, payload

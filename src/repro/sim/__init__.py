@@ -16,7 +16,15 @@ One import gives everything needed to compose and run a simulation:
   the co-located :func:`live_colocated_sim`).
 * :class:`Scenario` — declarative fault/interference injection:
   :class:`Straggler`, :class:`FailTask`, :class:`FailHost`,
-  :class:`DegradeLink`, :class:`Interference`.
+  :class:`DegradeLink`, :class:`Interference`, :class:`BitFlip`
+  (silent data corruption in a task's payload/result stream), and
+  :class:`ClockSkew` (per-host constant + drift receive-clock skew).
+* :class:`Campaign` — swept fault grids (:class:`FaultGrid`) over a
+  scenario base: every point run deterministically, classified
+  against the fault-free baseline, and failing points delta-minimized
+  to replayable reproducer specs (:mod:`repro.sim.campaign`); named,
+  versioned scenario entries with pinned goldens live in
+  :mod:`repro.sim.registry` (``registry.load("live_recovery@v1")``).
 * :class:`Simulation` — materializes the above into a single-host
   :class:`~repro.core.scheduler.Scheduler` or a multi-host
   :class:`~repro.core.orchestrator.Orchestrator` (picked automatically),
@@ -43,9 +51,9 @@ from repro.sim.topology import CellSpec, FabricSpec, Topology
 from repro.sim.workload import (EndpointSpec, Program, ScopeSpec,
                                 VecCompute, VecMark, VecRecv, VecSend,
                                 Workload)
-from repro.sim.scenario import (DegradeLink, FailHost, FailTask,
-                                Injection, Interference, Scenario,
-                                Straggler)
+from repro.sim.scenario import (BitFlip, ClockSkew, DegradeLink,
+                                FailHost, FailTask, Injection,
+                                Interference, Scenario, Straggler)
 from repro.sim.report import HostReport, SimReport
 from repro.sim.simulation import Simulation
 from repro.sim.vectorized import SweepResult, UnsupportedByEngine
@@ -61,19 +69,23 @@ from repro.sim.live import (LiveProgram, LiveTrainerRecovery,
 from repro.live import (CostLedger, LiveTraceError, LiveTraceMismatch,
                         TRACE_SCHEMA)
 from repro.core.engine_jax import TickRangeError
+from repro.sim.campaign import (Campaign, CampaignReport, FaultGrid,
+                                GridPoint, replay_spec)
+from repro.sim import registry
 
 __all__ = [
-    "CellSpec", "ChipRingTraining", "CostLedger", "DegradeLink",
-    "EndpointSpec", "FabricSpec", "FailHost", "FailTask", "HostReport",
-    "Injection", "Interference", "LiveProgram", "LiveServe",
-    "LiveTraceError", "LiveTraceMismatch", "LiveTrainerRecovery",
-    "ModeledServe", "Program", "RackRing", "Scenario", "ScopeSpec",
-    "ServeStack", "SimReport", "Simulation", "Straggler",
-    "SweepResult", "TRACE_SCHEMA", "TickRangeError", "Topology",
-    "TrainerStack", "UnsupportedByEngine", "VecCompute", "VecMark",
-    "VecRecv", "VecSend", "Workload", "burst_arrivals",
+    "BitFlip", "Campaign", "CampaignReport", "CellSpec",
+    "ChipRingTraining", "ClockSkew", "CostLedger", "DegradeLink",
+    "EndpointSpec", "FabricSpec", "FailHost", "FailTask", "FaultGrid",
+    "GridPoint", "HostReport", "Injection", "Interference",
+    "LiveProgram", "LiveServe", "LiveTraceError", "LiveTraceMismatch",
+    "LiveTrainerRecovery", "ModeledServe", "Program", "RackRing",
+    "Scenario", "ScopeSpec", "ServeStack", "SimReport", "Simulation",
+    "Straggler", "SweepResult", "TRACE_SCHEMA", "TickRangeError",
+    "Topology", "TrainerStack", "UnsupportedByEngine", "VecCompute",
+    "VecMark", "VecRecv", "VecSend", "Workload", "burst_arrivals",
     "live_colocated_sim", "live_recovery_sim", "live_serve_sim",
     "poisson_arrivals", "record_live_colocated",
     "record_live_recovery", "record_live_serve", "recovery_timeline",
-    "serve_latency",
+    "registry", "replay_spec", "serve_latency",
 ]

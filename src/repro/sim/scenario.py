@@ -18,13 +18,27 @@ bodies are never edited.  Mechanisms:
   ``Simulation(cpu_resource=True)`` its compute queues for the same
   simulated CPUs as the victim's, coupling their timing in virtual
   time.
+* :class:`BitFlip` wraps the target program's generator like the
+  failure wrappers, but instead of killing the body it corrupts *data*:
+  at the chosen data-bearing action (``Send`` / ``LiveCall``) one bit
+  of the payload (or of the live-call result) is flipped — silent data
+  corruption that downstream consumers and ``LiveCall`` replay observe,
+  while timing machinery is untouched.
+* :class:`ClockSkew` installs an *ingress* hub hook on the hub owning
+  the destination endpoint: every message delivered to an endpoint on
+  the skewed host arrives ``offset_ns + drift`` later (the receiver's
+  skewed clock timestamps arrivals late).  Offsets and drift are
+  validated non-negative at build time, so — like
+  :class:`DegradeLink` — the hook only ever *adds* latency and
+  conservative cross-host lookahead stays sound.
 """
 from __future__ import annotations
 
 import dataclasses
+import struct
 from typing import Iterator, Optional, Tuple
 
-from repro.core.vtask import Compute, LiveCall
+from repro.core.vtask import Compute, LiveCall, Send
 
 
 class Injection:
@@ -92,6 +106,40 @@ class Interference(Injection):
 
 
 @dataclasses.dataclass(frozen=True)
+class BitFlip(Injection):
+    """Silent data corruption in the target program's data path.
+
+    Exactly one trigger: the ``at_step``-th data-bearing action
+    (0-based over the body's ``Send``/``LiveCall`` stream), or the
+    first data-bearing action once the task's vtime reaches
+    ``at_vtime`` (mirroring :class:`FailTask`'s two triggers).  At the
+    trigger, ``bit`` is flipped in the ``Send`` payload before it
+    enters the hub (downstream consumers receive the corrupted value)
+    or in the ``LiveCall`` result before the body observes it (replay
+    of recorded live calls sees the corruption).  Payloads with no
+    flippable scalar (``None``) pass through unchanged — the injection
+    is then masked, which is itself a valid campaign outcome."""
+    task: str
+    at_step: Optional[int] = None
+    at_vtime: Optional[int] = None
+    bit: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ClockSkew(Injection):
+    """Per-host receive-clock skew: every message delivered to an
+    endpoint placed on ``host`` becomes visible
+    ``offset_ns + drift_ppm * send_vtime / 1e6`` ns later (integer
+    floor).  Both terms must be non-negative — validated at build time
+    — so the ingress hook only adds latency and the per-link
+    conservative lookahead bound survives.  Multiple skews on one host
+    sum."""
+    host: int
+    offset_ns: int = 0
+    drift_ppm: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
 class Scenario:
     name: str = "baseline"
     injections: Tuple[Injection, ...] = ()
@@ -150,3 +198,66 @@ def fail_gated_body(body: Iterator, handle: TaskHandle,
                 return
             computes += 1
         result = yield action
+
+
+def flip_bit(value, bit: int):
+    """Flip one bit of a scalar payload; containers flip their first
+    flippable element; unflippable values pass through unchanged (a
+    masked fault, not an error — determinism is what matters)."""
+    if isinstance(value, bool):
+        return (not value) if bit == 0 else value
+    if isinstance(value, int):
+        return value ^ (1 << bit)
+    if isinstance(value, float):
+        (bits,) = struct.unpack("<Q", struct.pack("<d", value))
+        return struct.unpack("<d", struct.pack("<Q",
+                                               bits ^ (1 << (bit % 64))))[0]
+    if isinstance(value, str) and value:
+        return chr(ord(value[0]) ^ (1 << (bit % 16))) + value[1:]
+    if isinstance(value, (tuple, list)):
+        for i, v in enumerate(value):
+            flipped = flip_bit(v, bit)
+            if flipped is not v and flipped != v:
+                out = list(value)
+                out[i] = flipped
+                return type(value)(out) if isinstance(value, tuple) \
+                    else out
+        return value
+    return value
+
+
+def bitflip_body(body: Iterator, handle: TaskHandle,
+                 at_step: Optional[int], at_vtime: Optional[int],
+                 bit: int) -> Iterator:
+    """Forward the action stream; at the trigger (the ``at_step``-th
+    data-bearing action, or the first one at/after ``at_vtime``) flip
+    one payload bit: Send payloads are corrupted *before* the hub sees
+    them, LiveCall results are corrupted before the body observes them.
+    Exactly one flip per injection."""
+    steps = 0
+    result = None
+    flipped = False
+    while True:
+        try:
+            action = body.send(result)
+        except StopIteration:
+            return
+        fire = False
+        if not flipped and isinstance(action, (Send, LiveCall)):
+            if at_step is not None:
+                fire = steps == at_step
+            else:
+                fire = (handle.task is not None
+                        and handle.task.vtime >= at_vtime)
+            steps += 1
+        if fire and isinstance(action, Send):
+            flipped = True
+            action = dataclasses.replace(
+                action, payload=flip_bit(action.payload, bit))
+            result = yield action
+        elif fire:
+            flipped = True
+            result = yield action
+            result = flip_bit(result, bit)
+        else:
+            result = yield action

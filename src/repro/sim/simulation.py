@@ -43,9 +43,11 @@ from repro.core.scheduler import DeadlockError, Scheduler
 from repro.core.scope import Scope
 from repro.core.vtask import Compute, State, VTask
 from repro.sim.report import HostReport, SimReport, _jsonable
-from repro.sim.scenario import (DegradeLink, FailHost, FailTask,
-                                Interference, Scenario, Straggler,
-                                TaskHandle, fail_gated_body, scaled_body)
+from repro.sim.scenario import (BitFlip, ClockSkew, DegradeLink,
+                                FailHost, FailTask, Interference,
+                                Scenario, Straggler, TaskHandle,
+                                bitflip_body, fail_gated_body,
+                                scaled_body)
 from repro.sim.topology import CellSpec, FabricSpec, Topology
 from repro.sim.workload import Program, Workload
 
@@ -283,9 +285,62 @@ class Simulation:
         unknown = [(t, "Straggler") for t in scale if t not in names] + \
                   [(t, "FailTask") for t in fails if t not in names]
         if unknown:
-            raise ValueError(f"injections target unknown programs: "
-                             f"{unknown}")
+            raise ValueError(f"injections target unknown programs "
+                             f"{unknown}; available: {sorted(names)}")
         return scale, fails
+
+    def _resolve_bitflips(self, names: List[str]
+                          ) -> Dict[str, List[BitFlip]]:
+        """Validate BitFlip injections (known target, exactly one
+        trigger, sane bit) and group them per task, declaration order
+        preserved."""
+        out: Dict[str, List[BitFlip]] = {}
+        for inj in self.scenario.injections:
+            if not isinstance(inj, BitFlip):
+                continue
+            if inj.task not in names:
+                raise ValueError(
+                    f"BitFlip targets unknown program {inj.task!r}; "
+                    f"available: {sorted(names)}")
+            if (inj.at_step is None) == (inj.at_vtime is None):
+                raise ValueError(
+                    f"BitFlip on {inj.task!r} needs exactly one of "
+                    f"at_step= or at_vtime=")
+            if inj.bit < 0:
+                raise ValueError(f"BitFlip bit must be >= 0, "
+                                 f"got {inj.bit}")
+            out.setdefault(inj.task, []).append(inj)
+        return out
+
+    def _install_clock_skews(self, ep_host: Dict[str, int]) -> None:
+        """Validate ClockSkew injections and install one ingress hook
+        per injection on every hub: messages delivered to an endpoint
+        on the skewed host arrive offset + drift later.  Non-negative
+        offset/drift is a *build-time* requirement — a negative skew
+        would let a message undercut the link lookahead and unsound
+        the conservative cross-host windows."""
+        n_hosts = self.topology.n_hosts
+        for inj in self.scenario.injections:
+            if not isinstance(inj, ClockSkew):
+                continue
+            if not 0 <= inj.host < n_hosts:
+                raise ValueError(
+                    f"ClockSkew host {inj.host} outside "
+                    f"0..{n_hosts - 1}")
+            if inj.offset_ns < 0 or inj.drift_ppm < 0:
+                raise ValueError(
+                    f"ClockSkew may only delay (conservative "
+                    f"lookahead): offset_ns={inj.offset_ns}, "
+                    f"drift_ppm={inj.drift_ppm}")
+
+            def hook(msg, _state, inj=inj):
+                if ep_host.get(msg.dst) != inj.host:
+                    return 0
+                return inj.offset_ns + \
+                    (inj.drift_ppm * msg.send_vtime) // 1_000_000
+
+            for hub in self.hubs.values():
+                hub.add_ingress_hook(hook)
 
     # -- build ---------------------------------------------------------------
     def build(self) -> "Simulation":
@@ -347,6 +402,7 @@ class Simulation:
 
         # scenario: per-task fault plan (see _resolve_fault_plan)
         scale, fails = self._resolve_fault_plan(names)
+        bitflips = self._resolve_bitflips(names)
 
         # workload interception (Program.on_fail): a program may observe
         # its resolved failure at build time — "kill" keeps the normal
@@ -377,17 +433,25 @@ class Simulation:
                 ep_host[es.name] = host
                 fabric_eps[es.fabric].append(es.name)
             body = prog.make_body(eps)
+            handles: List[TaskHandle] = []
+            # innermost: data corruption (the flip happens before a
+            # straggler scale or a fail gate sees the action stream)
+            for bf in bitflips.get(prog.name, ()):
+                bf_handle = TaskHandle()
+                handles.append(bf_handle)
+                body = bitflip_body(body, bf_handle, bf.at_step,
+                                    bf.at_vtime, bf.bit)
             if prog.name in scale:
                 body = scaled_body(body, scale[prog.name])
-            handle = None
             if prog.name in fails:
                 f = fails[prog.name]
                 handle = TaskHandle()
+                handles.append(handle)
                 body = fail_gated_body(body, handle, f.at_compute,
                                        f.at_vtime)
             task = VTask(prog.name, body, kind=prog.kind)
-            if handle is not None:
-                handle.task = task
+            for h in handles:
+                h.task = task
             if prog.handle is not None:
                 prog.handle.task = task
             sched = self._sched_for(host)
@@ -437,6 +501,7 @@ class Simulation:
         for inj in self.scenario.injections:
             if isinstance(inj, DegradeLink):
                 self._install_degrade(inj, fabrics, fabric_eps, ep_host)
+        self._install_clock_skews(ep_host)
         for i, (inj, host) in enumerate(inter_targets):
             load = VTask(f"load{i}",
                          _load_body(inj.bursts, inj.burst_ns),
@@ -483,6 +548,15 @@ class Simulation:
                 return msg.src in members and msg.dst in members
         else:
             a, b = inj.hosts
+            n_hosts = self.topology.n_hosts
+            bad = [h for h in (a, b) if not 0 <= h < n_hosts]
+            if bad:
+                # a pair outside the topology used to silently no-op
+                # (the match predicate never fired); through the facade
+                # that masks misconfiguration, so it is a build error
+                raise ValueError(
+                    f"DegradeLink hosts {inj.hosts} outside "
+                    f"0..{n_hosts - 1}")
             pair_link = self.topology.host_links.get(
                 (min(a, b), max(a, b)), self.topology.default_host_link)
             extra = inj.extra_ns + int(

@@ -54,8 +54,8 @@ from repro.core import engine_jax as ej
 from repro.core.scheduler import Scheduler
 from repro.core.vtime import SEC
 from repro.sim.report import HostReport, SimReport, _jsonable
-from repro.sim.scenario import (DegradeLink, FailTask, Interference,
-                                Scenario)
+from repro.sim.scenario import (BitFlip, ClockSkew, DegradeLink,
+                                FailTask, Interference, Scenario)
 from repro.sim.workload import VecCompute, VecMark, VecRecv, VecSend
 
 __all__ = ["UnsupportedByEngine", "compile_simulation",
@@ -162,6 +162,18 @@ def _lower(sim) -> Dict[str, Any]:
         raise UnsupportedByEngine(
             "cpu_resource=True: CPU-slot contention is an engine "
             "schedule, not an array op")
+    for inj in sim.scenario.injections:
+        # explicit rejection, not silent omission: a campaign's sweep
+        # fast path relies on this raise to fall back to the reference
+        # engines for data-corruption / ingress-skew grids
+        if isinstance(inj, BitFlip):
+            raise UnsupportedByEngine(
+                "BitFlip: payload values have no vectorized lowering "
+                "(tapes carry sizes and timing, not data)")
+        if isinstance(inj, ClockSkew):
+            raise UnsupportedByEngine(
+                "ClockSkew: ingress hooks are per-delivery hub state, "
+                "not a tape-time transform")
     for _, p in programs:
         if p.kind != "modeled":
             raise UnsupportedByEngine(

@@ -1,0 +1,270 @@
+"""Fault-campaign harness: swept grids, outcome classification,
+delta-minimized reproducers, and fault containment.
+
+The determinism bar mirrors the engine harness's: a seeded campaign
+must produce the identical outcome per grid point and *byte-identical*
+minimized reproducer specs across independent runs and across campaign
+engines (async vs the multi-process dist engine) — minimization trials
+always run on the in-process reference engine and classification reads
+only engine-independent report fields, so the campaign engine must be
+unobservable in the artifacts.
+
+Containment: a grid point whose injection hard-kills an OS worker
+process mid-campaign (silent corruption turning into ``os._exit``) must
+classify as ``crash`` with the failure recorded, while the remaining
+points still run — one poisoned point must not take down the sweep.
+"""
+import json
+import os
+
+import pytest
+
+from engine_harness import HAS_FORK
+from repro.core.ipc import LinkSpec
+from repro.core.vtask import Compute, LiveCall
+from repro.sim import (BitFlip, Campaign, FailTask, FaultGrid,
+                       ModeledServe, Scenario, Simulation, Topology,
+                       Workload, registry, replay_spec)
+from repro.sim.campaign import (OUTCOMES, REPRO_SCHEMA, classify,
+                                functional_fingerprint, spec_to_bytes)
+from repro.sim.topology import FabricSpec
+from repro.sim.workload import EndpointSpec, Program
+
+
+def _serve(scenario=None):
+    return Simulation(Topology.single_host(n_cpus=4),
+                      ModeledServe(n_clients=2, n_requests=4),
+                      scenario or Scenario("serve base"))
+
+
+# -- grid --------------------------------------------------------------------
+
+
+def test_grid_validates_axes():
+    with pytest.raises(ValueError, match="unknown fault type"):
+        FaultGrid(types=("warp",), targets=("a",), vtimes=(0,))
+    with pytest.raises(ValueError, match="at least one"):
+        FaultGrid(types=("straggler",), targets=(), vtimes=(0,))
+    with pytest.raises(ValueError, match="count"):
+        FaultGrid(types=("straggler",), targets=("a",), vtimes=(0,),
+                  counts=(2,))
+
+
+def test_grid_point_order_is_axis_product():
+    grid = FaultGrid(types=("straggler", "fail_task"),
+                     targets=("serve.client0", "serve.client1"),
+                     vtimes=(0, 10))
+    pts = grid.points(lambda t: 0)
+    assert len(pts) == grid.n_points == 8
+    assert [p.index for p in pts] == list(range(8))
+    # fixed axis order: type (outermost), target, vtime (innermost)
+    assert (pts[0].type, pts[0].target, pts[0].vtime) == \
+        ("straggler", "serve.client0", 0)
+    assert (pts[1].vtime, pts[2].target) == (10, "serve.client1")
+
+
+# -- classification + campaign determinism -----------------------------------
+
+
+def test_campaign_histogram_and_point_outcomes():
+    ent = registry.entry("serve_smoke@v1")
+    report = Campaign(ent.make, ent.grid(), seed=0,
+                      base_name=ent.ref).run()
+    assert report.histogram == {"ok": 4, "deadlock": 6,
+                                "invariant-violation": 0, "crash": 4,
+                                "divergence": 2}
+    by_type = {}
+    for p in report.points:
+        by_type.setdefault(p["type"], set()).add(p["outcome"])
+    assert by_type["bitflip"] == {"crash"}
+    assert by_type["straggler"] == {"ok"}
+    assert by_type["fail_task"] == {"deadlock"}
+    assert by_type["fail_host"] == {"divergence", "deadlock"}
+    # crashes carry the engine error and a traceback
+    crash = next(p for p in report.points if p["outcome"] == "crash")
+    assert "unknown endpoint" in crash["detail"]
+    assert crash["traceback"]
+    assert sum(report.histogram.values()) == report.grid["n_points"]
+
+
+def test_reproducers_byte_identical_across_runs_and_replayable():
+    ent = registry.entry("serve_smoke@v1")
+    r1 = Campaign(ent.make, ent.grid(), seed=0, base_name=ent.ref).run()
+    r2 = Campaign(ent.make, ent.grid(), seed=0, base_name=ent.ref).run()
+    assert r1.reproducers and \
+        [spec_to_bytes(s) for s in r1.reproducers] == \
+        [spec_to_bytes(s) for s in r2.reproducers]
+    for spec in r1.reproducers:
+        assert spec["schema"] == REPRO_SCHEMA
+        # the spec replays standalone — fresh sim, no campaign state —
+        # to the exact outcome class it records
+        outcome, _ = replay_spec(spec, ent.make)
+        assert outcome == spec["outcome"]
+
+
+def test_minimizer_reaches_minimal_spec():
+    """The planted serve crash needs one injection: the greedy drop +
+    binary shrink must land on the single-bit, vtime-0 form (bit 2
+    shrinks to bit 1 — bit 0 turns the crash into a deadlock, so the
+    minimizer must stop above it), and duplicate failing points must
+    converge to the same canonical reproducer."""
+    ent = registry.entry("serve_smoke@v1")
+    report = Campaign(ent.make, ent.grid(), seed=0,
+                      base_name=ent.ref).run()
+    crashes = [s for s in report.reproducers
+               if s["outcome"] == "crash"]
+    assert len(crashes) == 4
+    assert len({spec_to_bytes(s)
+                for s in (dict(s, point=None, trials=None)
+                          for s in crashes)}) == 1
+    spec = crashes[0]
+    assert spec["injections"] == [
+        {"at_vtime": 0, "bit": 1, "task": "serve.client0",
+         "type": "BitFlip"}]
+
+
+@pytest.mark.skipif(not HAS_FORK, reason="dist engine needs os.fork")
+def test_specs_identical_across_async_and_dist_campaigns():
+    ent = registry.entry("rack_ring@v1")
+    grid = FaultGrid(types=("fail_task", "straggler", "clock_skew"),
+                     targets=("w0", "w1"), vtimes=(0,))
+    r_async = Campaign(ent.make, grid, seed=1, engine="async",
+                       base_name=ent.ref).run()
+    r_dist = Campaign(ent.make, grid, seed=1, engine="dist",
+                      n_workers=2, base_name=ent.ref).run()
+    assert [p["outcome"] for p in r_async.points] == \
+        [p["outcome"] for p in r_dist.points]
+    assert r_async.reproducers, "grid should plant ring deadlocks"
+    assert [spec_to_bytes(s) for s in r_async.reproducers] == \
+        [spec_to_bytes(s) for s in r_dist.reproducers]
+
+
+def test_baseline_must_be_fault_free():
+    def broken(scenario=None):
+        # ignores the campaign's scenario override: the fault is baked
+        # into the base itself, so even the baseline run wedges
+        return _serve(Scenario(
+            "wedged base", (FailTask("serve.client0", at_vtime=0),)))
+    grid = FaultGrid(types=("straggler",), targets=("serve.client0",),
+                     vtimes=(0,))
+    with pytest.raises(ValueError, match="baseline"):
+        Campaign(broken, grid).run()
+
+
+def test_custom_invariants_rank_above_divergence():
+    ent = registry.entry("serve_smoke@v1")
+
+    def all_served(report):
+        served = report.progress["serve"]["served"]
+        return [] if all(v == 4 for v in served) else \
+            [f"incomplete serve counts {served}"]
+
+    grid = FaultGrid(types=("fail_host",), targets=("serve.client0",),
+                     vtimes=(0,))
+    report = Campaign(ent.make, grid, invariants=all_served,
+                      base_name=ent.ref).run(minimize=False)
+    # without the hook this point is a divergence (see the smoke grid);
+    # the user invariant reclassifies it up the severity ladder
+    assert report.points[0]["outcome"] == "invariant-violation"
+    assert "incomplete serve" in report.points[0]["detail"]
+
+
+def test_report_json_round_trip():
+    ent = registry.entry("serve_smoke@v1")
+    report = Campaign(ent.make, ent.grid(), seed=0,
+                      base_name=ent.ref).run(minimize=False)
+    d = json.loads(report.to_json())
+    assert d["schema"] == "campaign_report/v1"
+    assert set(d["histogram"]) == set(OUTCOMES)
+    assert d["grid"]["shape"] == [4, 2, 2, 1]
+    assert len(d["points"]) == d["grid"]["n_points"] == 16
+    assert d["wall_s"] >= 0 and d["points_per_s"] > 0
+
+
+# -- fault containment: a point that kills its OS worker ---------------------
+
+
+class _Fragile(Workload):
+    """Two live workers whose step result, when bit-flipped, hard-kills
+    the owning OS worker process (in-process runs raise instead, so
+    minimization trials on the reference engine stay survivable)."""
+
+    name = "fragile"
+
+    def __init__(self):
+        self.main_pid = os.getpid()
+
+    def programs(self):
+        def mk(i):
+            def make_body(eps):
+                def body():
+                    v = yield LiveCall(lambda: 0, cost_ns=1_000)
+                    if v:
+                        if os.getpid() != self.main_pid:
+                            os._exit(17)
+                        raise RuntimeError("corrupted live result")
+                    yield Compute(10_000)
+                return body()
+            return make_body
+        return [Program(name=f"k{i}", make_body=mk(i), kind="live",
+                        endpoints=(EndpointSpec(f"k{i}.ep", "fab"),))
+                for i in range(2)]
+
+    def fabrics(self):
+        return [FabricSpec("fab", LinkSpec())]
+
+
+@pytest.mark.skipif(not HAS_FORK, reason="dist engine needs os.fork")
+def test_dist_worker_death_is_contained_and_campaign_continues():
+    def make_sim(scenario=None):
+        return Simulation(Topology.racks(1, 2), _Fragile(),
+                          scenario or Scenario("fragile base"),
+                          placement={"k0": 0, "k1": 1})
+
+    grid = FaultGrid(types=("bitflip", "straggler"),
+                     targets=("k0", "k1"), vtimes=(0,))
+    report = Campaign(make_sim, grid, seed=0, engine="dist",
+                      n_workers=2, worker_timeout=30.0).run()
+    outcomes = {(p["type"], p["target"]): p["outcome"]
+                for p in report.points}
+    assert outcomes[("bitflip", "k0")] == "crash"
+    assert outcomes[("bitflip", "k1")] == "crash"
+    # the sweep survived both worker deaths and ran the rest
+    assert outcomes[("straggler", "k0")] == "ok"
+    assert outcomes[("straggler", "k1")] == "ok"
+    killed = next(p for p in report.points
+                  if p["outcome"] == "crash")
+    assert "DistWorkerError" in killed["detail"]
+    assert killed["traceback"]
+    # minimization replayed the point in-process (RuntimeError branch)
+    # and still pinned the crash class
+    assert {s["outcome"] for s in report.reproducers} == {"crash"}
+
+
+@pytest.mark.skipif(not HAS_FORK, reason="dist engine needs os.fork")
+def test_worker_error_frame_carries_remote_traceback():
+    """The other DistWorkerError path: the worker survives long enough
+    to ship an error frame (hub routing KeyError from the corrupted
+    payload), whose remote traceback must land in the point record."""
+    ent = registry.entry("serve_smoke@v1")
+    grid = FaultGrid(types=("bitflip",), targets=("serve.client0",),
+                     vtimes=(0,), knobs={"bit": 2})
+    report = Campaign(ent.make, grid, seed=0, engine="dist",
+                      base_name=ent.ref,
+                      worker_timeout=30.0).run(minimize=False)
+    [point] = report.points
+    assert point["outcome"] == "crash"
+    assert "DistWorkerError" in point["detail"]
+    assert "unknown endpoint serve.cli4" in point["traceback"]
+
+
+def test_classify_exposes_fingerprint_fields():
+    """Divergence detection reads only engine-independent functional
+    fields — the fingerprint must not smuggle in vtimes (timing shifts
+    are scenario-expected, not divergence)."""
+    base = _serve().run()
+    fp = functional_fingerprint(base)
+    assert set(fp) == {"status", "tasks", "progress", "messages",
+                       "bytes"}
+    assert all("vtime" not in t for t in fp["tasks"].values())
+    assert classify(_serve().run(), fp, lambda r: []) == ("ok", "")

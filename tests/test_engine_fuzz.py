@@ -28,8 +28,9 @@ except ImportError:                                 # pragma: no cover
 
 from engine_harness import assert_engines_agree, engines_for  # noqa: E402
 from repro.core.ipc import LinkSpec  # noqa: E402
-from repro.sim import (DegradeLink, FailTask, RackRing,  # noqa: E402
-                       Scenario, Simulation, Straggler, Topology)
+from repro.sim import (BitFlip, ClockSkew, DegradeLink,  # noqa: E402
+                       FailTask, ModeledServe, RackRing, Scenario,
+                       Simulation, Straggler, Topology)
 
 LATENCIES = (500, 2_000, 10_000, 50_000)
 
@@ -80,7 +81,10 @@ if st is not None:
 
 
     @st.composite
-    def scenarios(draw, n_workers: int):
+    def scenarios(draw, n_workers: int, vectorizable: bool = False):
+        """``vectorizable=True`` restricts draws to the vectorized
+        engine's admissible injection surface (no BitFlip/ClockSkew —
+        those raise UnsupportedByEngine there by design)."""
         injections = []
         for w in range(n_workers):
             kind = draw(st.sampled_from(("none", "none", "straggler",
@@ -97,6 +101,33 @@ if st is not None:
                 fabric="hub",
                 extra_ns=draw(st.sampled_from((1_000, 25_000))),
                 from_vtime=draw(st.sampled_from((0, 30_000)))))
+        if not vectorizable:
+            # SDC + skewed-clock draws: the flip gating (step counts,
+            # vtime thresholds) and ingress-hook arithmetic must bind
+            # identically under every reference/dist engine even when
+            # mixed with the modeled fault kinds above
+            if draw(st.booleans()):
+                w = draw(st.integers(min_value=0,
+                                     max_value=n_workers - 1))
+                if draw(st.booleans()):
+                    injections.append(BitFlip(
+                        f"w{w}",
+                        at_step=draw(st.integers(min_value=0,
+                                                 max_value=3)),
+                        bit=draw(st.sampled_from((0, 1, 7)))))
+                else:
+                    injections.append(BitFlip(
+                        f"w{w}",
+                        at_vtime=draw(st.sampled_from((0, 10_000,
+                                                       50_000))),
+                        bit=draw(st.sampled_from((0, 3)))))
+            if draw(st.booleans()):
+                injections.append(ClockSkew(
+                    host=draw(st.integers(min_value=0,
+                                          max_value=n_workers - 1)),
+                    offset_ns=draw(st.sampled_from((0, 1_000,
+                                                    40_000))),
+                    drift_ppm=draw(st.sampled_from((0, 50, 500)))))
         return Scenario("fuzz", tuple(injections))
 
 
@@ -185,7 +216,8 @@ if st is not None:
                                                     label="topology")
         n_iters, compute_ns, cross_every, skew = data.draw(workloads,
                                                            label="workload")
-        scenario = data.draw(scenarios(n_racks * per_rack),
+        scenario = data.draw(scenarios(n_racks * per_rack,
+                                        vectorizable=True),
                              label="scenario")
         assert_vectorized_exact(
             _vec_make(n_racks, per_rack, intra, cross, n_iters, compute_ns,
@@ -207,7 +239,8 @@ if st is not None:
                                                     label="topology")
         n_iters, compute_ns, cross_every, skew = data.draw(workloads,
                                                            label="workload")
-        scenario = data.draw(scenarios(n_racks * per_rack),
+        scenario = data.draw(scenarios(n_racks * per_rack,
+                                        vectorizable=True),
                              label="scenario")
         make = _vec_make(n_racks, per_rack, intra, cross, n_iters,
                          compute_ns, cross_every, skew, scenario)
@@ -254,3 +287,47 @@ def test_deterministic_sweep_48_draws():
         assert rep.vtime_ns == ref.vtime_ns, sc
         assert rep.tasks == ref.tasks, sc
         assert rep.progress == ref.progress, sc
+
+
+def test_deterministic_bitflip_clockskew_mixed_grids():
+    """Always-on (no hypothesis) cross-engine draws for the SDC and
+    clock-skew injections, alone and mixed with the modeled kinds: a
+    seeded grid of scenarios over the serve and rack bases, each run
+    through the full engine matrix.  The bit-0 serve flip corrupts a
+    client id, redirecting the server's response — every engine must
+    misroute (and then wedge) identically."""
+    import numpy as np
+
+    def serve(sc):
+        return lambda: Simulation(
+            Topology.single_host(n_cpus=4),
+            ModeledServe(n_clients=2, n_requests=3), sc)
+
+    def rack(sc):
+        def make():
+            wl = RackRing(n_racks=2, hosts_per_rack=2, n_iters=6,
+                          compute_ns=5_000, cross_every=2,
+                          skew_bound_ns=100_000)
+            return Simulation(Topology.racks(2, 2), wl, sc,
+                              placement=wl.default_placement())
+        return make
+
+    rng = np.random.default_rng(11)
+    draws = [serve(Scenario("flip0", (BitFlip("serve.client0",
+                                              at_step=1, bit=0),)))]
+    for i in range(4):
+        inj = [ClockSkew(host=int(rng.integers(0, 4)),
+                         offset_ns=int(rng.choice((0, 1_000, 40_000))),
+                         drift_ppm=int(rng.choice((0, 50, 500))))]
+        if rng.random() < 0.5:
+            inj.append(Straggler(f"w{rng.integers(0, 4)}", 2.0))
+        if rng.random() < 0.5:
+            inj.append(BitFlip(f"w{rng.integers(0, 4)}",
+                               at_step=int(rng.integers(0, 3)),
+                               bit=int(rng.choice((0, 7)))))
+        if rng.random() < 0.3:
+            inj.append(FailTask(f"w{rng.integers(0, 4)}",
+                                at_compute=2))
+        draws.append(rack(Scenario(f"mixed{i}", tuple(inj))))
+    for make in draws:
+        assert_engines_agree(make)

@@ -35,102 +35,24 @@ import sys
 
 import pytest
 
-from repro.core.cluster import ClusterSpec, StepCost
-from repro.sim import (ChipRingTraining, CostLedger, DegradeLink,
-                       FailHost, ModeledServe, RackRing, Scenario,
-                       Simulation, Straggler, Topology,
-                       live_colocated_sim, live_recovery_sim,
-                       live_serve_sim)
+from repro.sim import registry
 
 GOLDEN = pathlib.Path(__file__).parent / "golden" / "gallery.json"
-LIVE_TRACE = (pathlib.Path(__file__).parent / "golden"
-              / "live_recovery_trace.json")
-SERVE_TRACE = (pathlib.Path(__file__).parent / "golden"
-               / "live_serve_trace.json")
-COLOCATED_TRACE = (pathlib.Path(__file__).parent / "golden"
-                   / "live_colocated_trace.json")
 
 #: the canonical (deterministic, machine-independent) report subset
-CANONICAL_FIELDS = ("scenario", "status", "n_hosts", "vtime_ns",
-                    "messages", "bytes", "tasks", "progress", "cells")
+CANONICAL_FIELDS = registry.CANONICAL_FIELDS
 
-N_ITERS = 40
-N_STEPS = 8
+N_ITERS = registry.N_ITERS
+N_STEPS = registry.N_STEPS
 
 
 def _gallery():
-    def straggler_host_death():
-        wl = RackRing(n_iters=N_ITERS, skew_bound_ns=2_000_000)
-        return Simulation(
-            Topology.racks(2, 2), wl,
-            Scenario("straggler + host 3 dies",
-                     (Straggler("w1", 2.0),
-                      FailHost(host=3, at_vtime=N_ITERS * 4_000))),
-            placement=wl.default_placement())
-
-    def degraded_link():
-        wl = RackRing(n_iters=N_ITERS, skew_bound_ns=2_000_000)
-        return Simulation(
-            Topology.racks(2, 2), wl,
-            Scenario("link 0<->2 8x latency",
-                     (DegradeLink(hosts=(0, 2), latency_factor=8.0,
-                                  from_vtime=N_ITERS * 1_000),)),
-            placement=wl.default_placement())
-
-    def colocated_serve_train():
-        spec = ClusterSpec(n_pods=1, chips_per_pod=4)
-        cost = StepCost(compute_ns=500_000, ici_bytes=1_000_000)
-        return Simulation(
-            Topology.single_host(n_cpus=1),
-            [ChipRingTraining(spec, cost, N_STEPS,
-                              skew_bound_ns=5_000_000),
-             ModeledServe(n_clients=4, n_requests=N_STEPS,
-                          service_ns=500_000)],
-            Scenario("co-located serve + train"),
-            cpu_resource=True)
-
-    def colocated_cells():
-        cells = {"w0": "hot", "w1": "cold", "w2": "hot", "w3": "cold"}
-        wl = RackRing(n_racks=1, hosts_per_rack=4, n_iters=N_ITERS,
-                      compute_ns=50_000, live=True, cells=cells,
-                      skew_bound_ns=2_000_000)
-        topo = Topology.single_host(n_cpus=1)
-        topo.cell("hot", ways=2, working_set_frac=0.7, bw_share=0.3,
-                  bw_demand=0.7, mem_frac=0.6)
-        topo.cell("cold", ways=8, working_set_frac=0.3, bw_share=0.5,
-                  bw_demand=0.4, mem_frac=0.2)
-        topo.cell_config(n_warm_slots=2, recondition_ns=20_000)
-        return Simulation(topo, wl, Scenario("co-located cells"))
-
-    def live_recovery():
-        # the marquee live scenario, replayed from the checked-in
-        # recorded trace (one record run of the real sharded trainer;
-        # re-record with `python -m repro.live record`) — golden-pinned
-        # like any modeled scenario, recovery timeline included
-        return live_recovery_sim(CostLedger.replay(LIVE_TRACE))
-
-    def live_serve():
-        # the serve half of the live stack: real BatchServer waves
-        # under open-loop Poisson arrivals, replayed from the
-        # checked-in trace (re-record with `python -m repro.live
-        # record --scenario serve`) — latency percentiles and
-        # queue-depth stats land in the golden live section
-        return live_serve_sim(CostLedger.replay(SERVE_TRACE))
-
-    def live_colocated():
-        # live-on-live: real trainer + real server sharing host 0 and
-        # one §3.3 cell, both replayed from ONE multi-driver trace
-        # (re-record with `python -m repro.live record --scenario
-        # colocated`) — cell co-activity charges are golden-pinned
-        return live_colocated_sim(CostLedger.replay(COLOCATED_TRACE))
-
-    return {"straggler_host_death": straggler_host_death,
-            "degraded_link": degraded_link,
-            "colocated_serve_train": colocated_serve_train,
-            "colocated_cells": colocated_cells,
-            "live_recovery": live_recovery,
-            "live_serve": live_serve,
-            "live_colocated": live_colocated}
+    # the gallery is the registry's source of truth now: every entry
+    # tagged "gallery" (v1 factories moved verbatim, trace replays
+    # included), keyed by bare name so gallery.json stays byte-stable
+    return {registry.entry(ref).name: registry.entry(ref).make
+            for ref in registry.names()
+            if "gallery" in registry.entry(ref).tags}
 
 
 def canonical(report) -> dict:

@@ -1,0 +1,81 @@
+"""Versioned scenario registry: ref resolution, override rules, and
+the pinned-golden check.
+
+The golden check itself runs the cheap modeled refs here (CI runs the
+full set via ``python -m repro.sim.registry check``; the gallery-tagged
+entries are additionally byte-pinned by test_golden_trace.py, which now
+*sources* its gallery from the registry).
+"""
+import pytest
+
+from repro.sim import Scenario, Straggler, registry
+
+
+def test_every_ref_loads_a_fresh_unbuilt_simulation():
+    for ref in registry.names():
+        sim = registry.load(ref)
+        assert sim.topology.n_hosts >= 1
+        assert registry.load(ref) is not sim
+
+
+def test_bare_name_resolves_latest_version(monkeypatch):
+    monkeypatch.setitem(registry._REGISTRY, "tmp_scn", {})
+    registry.register("tmp_scn", 1, "v1", lambda s=None: None)
+    registry.register("tmp_scn", 3, "v3", lambda s=None: None)
+    registry.register("tmp_scn", 2, "v2", lambda s=None: None)
+    assert registry.entry("tmp_scn").version == 3
+    assert registry.entry("tmp_scn@v2").version == 2
+    assert registry.entry("tmp_scn@v3").ref == "tmp_scn@v3"
+
+
+def test_duplicate_registration_rejected(monkeypatch):
+    monkeypatch.setitem(registry._REGISTRY, "tmp_dup", {})
+    registry.register("tmp_dup", 1, "first", lambda s=None: None)
+    with pytest.raises(ValueError, match="new version"):
+        registry.register("tmp_dup", 1, "again", lambda s=None: None)
+
+
+def test_unknown_refs_error_with_available_names():
+    with pytest.raises(KeyError, match="registered:"):
+        registry.entry("no_such_scenario")
+    with pytest.raises(KeyError, match="no version v9"):
+        registry.entry("serve_smoke@v9")
+    with pytest.raises(KeyError, match="name@vN"):
+        registry.entry("serve_smoke@latest")
+
+
+def test_campaign_bases_accept_scenario_override():
+    sc = Scenario("probe", (Straggler("serve.client0", 2.0),))
+    sim = registry.load("serve_smoke@v1", scenario=sc)
+    assert sim.scenario.name == "probe"
+    assert registry.entry("serve_smoke@v1").grid().n_points == 16
+
+
+def test_pinned_live_entries_reject_scenario_override():
+    with pytest.raises(ValueError, match="pins its scenario"):
+        registry.load("live_recovery@v1", scenario=Scenario("x"))
+
+
+def test_campaign_derived_entry_reproduces_the_crash():
+    # the checked-in minimized reproducer spec must still crash the
+    # serve base the same way the campaign recorded
+    rec = registry.golden_record("serve_flip_min@v1")
+    assert rec["outcome"] == "crash"
+    assert "unknown endpoint" in rec["detail"]
+
+
+def test_golden_check_green_on_modeled_refs():
+    cheap = ["rack_ring@v1", "serve_smoke@v1", "bitflip_serve@v1",
+             "clock_skew_rack@v1", "serve_flip_min@v1"]
+    assert registry.check(cheap) == []
+
+
+def test_golden_check_flags_drift(tmp_path, monkeypatch):
+    import json
+    golden = json.loads(registry.GOLDEN.read_text())
+    golden["rack_ring@v1"]["canonical"]["vtime_ns"] += 1
+    fake = tmp_path / "registry.json"
+    fake.write_text(json.dumps(golden))
+    monkeypatch.setattr(registry, "GOLDEN", fake)
+    failures = registry.check(["rack_ring@v1"])
+    assert len(failures) == 1 and "rack_ring@v1" in failures[0]

@@ -16,13 +16,13 @@
 import pytest
 
 from engine_harness import assert_engines_agree
-from repro.sim import (DegradeLink, FailHost, FailTask, Interference,
-                       RackRing, Scenario, Simulation, Straggler,
-                       Topology, Workload)
+from repro.sim import (BitFlip, ClockSkew, DegradeLink, FailHost,
+                       FailTask, Interference, RackRing, Scenario,
+                       Simulation, Straggler, Topology, Workload)
 from repro.sim.topology import FabricSpec
 from repro.sim.workload import EndpointSpec, Program
 from repro.core.ipc import LinkSpec
-from repro.core.vtask import Compute
+from repro.core.vtask import Compute, LiveCall
 
 CROSS_LAT = 50_000      # Topology.racks default cross-rack latency
 
@@ -171,3 +171,71 @@ def test_failhost_on_already_wedged_host_agrees_across_engines():
                           FailHost(host=3, at_vtime=60_000),
                           Straggler("w1", 2.0)),
         label="double host death")
+
+
+# -- build-time rejection of nonexistent / invalid targets --------------------
+
+
+@pytest.mark.parametrize("inj,msg", [
+    (Straggler("nope", 2.0), r"unknown programs.*available.*w0"),
+    (FailTask("nope", at_vtime=0), r"unknown programs.*available.*w0"),
+    (FailHost(host=9, at_vtime=0), r"FailHost host 9 outside 0\.\.3"),
+    (DegradeLink(hosts=(0, 9)), r"DegradeLink hosts \(0, 9\) outside"),
+    (DegradeLink(fabric="nope"), r"unknown fabric 'nope'"),
+    (BitFlip("nope", at_step=0), r"unknown program 'nope'.*available"),
+    (BitFlip("w0", at_step=0, at_vtime=5), r"exactly one of"),
+    (BitFlip("w0"), r"exactly one of"),
+    (BitFlip("w0", at_step=0, bit=-1), r"bit must be >= 0"),
+    (ClockSkew(host=9), r"ClockSkew host 9 outside 0\.\.3"),
+    (ClockSkew(host=0, offset_ns=-5), r"may only delay"),
+    (ClockSkew(host=0, drift_ppm=-1), r"may only delay"),
+], ids=lambda v: getattr(type(v), "__name__", str(v))[:24])
+def test_injections_reject_bad_targets_at_build_time(inj, msg):
+    """Every injection type must refuse a target that does not exist
+    (or a trigger that cannot fire) when the simulation is *built* —
+    a typo'd fault plan silently no-opping would make a whole campaign
+    sweep vacuous."""
+    wl = RackRing(n_iters=4, skew_bound_ns=100_000)
+    sim = Simulation(Topology.racks(2, 2), wl,
+                     Scenario("bad", (inj,)),
+                     placement=wl.default_placement())
+    with pytest.raises(ValueError, match=msg):
+        sim.run()
+
+
+# -- BitFlip observability on a LiveCall result -------------------------------
+
+
+class _LiveProbe(Workload):
+    """One live program that *uses* its LiveCall result for downstream
+    timing: a flipped result must visibly change the simulation."""
+
+    name = "probe"
+
+    def programs(self):
+        def make_body(eps):
+            def body():
+                r = yield LiveCall(lambda: 7, cost_ns=100)
+                yield Compute((r % 16) * 1_000)
+            return body()
+        return [Program(name="probe0", make_body=make_body,
+                        kind="live",
+                        endpoints=(EndpointSpec("probe0.ep", "p"),))]
+
+    def fabrics(self):
+        return [FabricSpec("p", LinkSpec())]
+
+
+def test_bitflip_on_livecall_result_is_observable_downstream():
+    def probe(*inj):
+        return lambda: Simulation(Topology.single_host(n_cpus=1),
+                                  _LiveProbe(),
+                                  Scenario("probe", tuple(inj)))
+
+    clean = probe()().run()
+    # bit 1: the live step's 7 becomes 5 -> 2us less downstream compute
+    flipped = assert_engines_agree(
+        probe(BitFlip("probe0", at_step=0, bit=1)),
+        label="livecall flip")["single"]
+    assert clean.tasks["probe0"]["vtime"] == 100 + 7_000
+    assert flipped.tasks["probe0"]["vtime"] == 100 + 5_000

@@ -25,9 +25,10 @@ from repro.core.ipc import Endpoint, Hub, LinkSpec
 from repro.core.scheduler import Scheduler
 from repro.core.scope import Scope
 from repro.core.vtask import Compute, Recv, Send, State, VTask
-from repro.sim import (ChipRingTraining, DegradeLink, FailHost,
-                       Interference, ModeledServe, RackRing, Scenario,
-                       Simulation, Straggler, Topology)
+from repro.sim import (BitFlip, ChipRingTraining, ClockSkew,
+                       DegradeLink, FailHost, Interference,
+                       ModeledServe, RackRing, Scenario, Simulation,
+                       Straggler, Topology)
 
 SPEC = ClusterSpec(n_pods=2, chips_per_pod=4)
 COST = StepCost(compute_ns=50_000, ici_bytes=100_000, dcn_bytes=10_000)
@@ -352,6 +353,20 @@ FACADE_SCENARIOS = {
         cpu_resource=True),
     "cells_colocated": _cells_colocated_sim,
     "cells_sharded": _cells_sharded_sim,
+    # SDC: a bit-0 flip of client0's request payload makes the server
+    # address its response to client1 — every engine must misroute and
+    # then wedge identically (the flip is engine-exact, not modeled)
+    "bitflip_serve_redirect": lambda: Simulation(
+        Topology.single_host(n_cpus=4),
+        ModeledServe(n_clients=2, n_requests=4),
+        Scenario("flipped client id",
+                 (BitFlip("serve.client0", at_step=1, bit=0),))),
+    # receive-clock skew: host 1's hub-ingress deliveries arrive late
+    # by a constant plus drift that grows with the wire-arrival vtime
+    "clock_skew": lambda: _rack_sim(
+        Scenario("host 1 skewed",
+                 (ClockSkew(host=1, offset_ns=7_000,
+                            drift_ppm=200),))),
 }
 
 
