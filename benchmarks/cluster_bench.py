@@ -547,6 +547,113 @@ def smoke_campaign() -> None:
           "reproducers, modeled registry goldens replay")
 
 
+def _control_sim(*, n_pool: int, founding: int, n_arrivals: int,
+                 seed: int = 5):
+    """A CI-sized autoscaled fleet: ``founding`` hosts at vtime 0, the
+    rest of the pool joining the cluster mid-run on a staggered
+    capacity schedule, one diurnal traffic period."""
+    from repro.sim import (AutoscaledServe, Scenario, Simulation,
+                           ThresholdAutoscaler, Topology,
+                           diurnal_arrivals)
+
+    join0, stagger = 20_000_000, 500_000
+    topo = Topology(n_hosts=n_pool + 1, n_cpus=2)
+    topo.capacity_pool(range(founding + 1, n_pool + 1), join0,
+                       stagger_ns=stagger)
+    ready = [0] * founding + [join0 + i * stagger
+                              for i in range(n_pool - founding)]
+    wl = AutoscaledServe(
+        arrivals=diurnal_arrivals(n_arrivals, base_gap_ns=1_000_000,
+                                  peak_gap_ns=60_000,
+                                  period_ns=100_000_000, seed=seed),
+        n_pool=n_pool, ready_ns=ready, service_ns=400_000,
+        min_active=founding, decide_every=8, probe_every=4,
+        autoscaler=ThresholdAutoscaler(patience=2),
+        placement="worst_fit")
+    return Simulation(topo, wl, Scenario("diurnal autoscale bench"),
+                      placement=wl.default_placement())
+
+
+def simulate_control_plane(engine: str = "async", *,
+                           n_workers: int = DIST_WORKERS,
+                           marquee: bool = True) -> dict:
+    """One run of the membership + control-plane regime.  ``marquee``
+    uses the registered 65-host diurnal_autoscale@v1 scenario (60
+    hosts joining mid-run, 4->64->4); the smoke variant is a downsized
+    9-host fleet with the same machinery."""
+    from repro.sim import registry
+
+    if marquee:
+        sim = registry.load("diurnal_autoscale@v1")
+    else:
+        sim = _control_sim(n_pool=8, founding=4, n_arrivals=700)
+    if engine == "dist":
+        report = sim.run(engine="dist", n_workers=n_workers,
+                         on_deadlock="raise")
+    else:
+        report = sim.run(engine=engine, on_deadlock="raise")
+    assert report.status == "ok", report.detail
+    sec = report.control["autoserve"]
+    moves = [(d["from"], d["to"]) for d in sec["decisions"]
+             if d["from"] != d["to"]]
+    row = _aggregate(report)
+    row["engine"] = engine
+    row["final_vtimes"] = sorted(t["vtime"]
+                                 for t in report.tasks.values())
+    row["control_section"] = report.to_dict()["control"]
+    row["n_joins"] = sum(1 for e in report.control["membership"]
+                         if e["event"] == "join")
+    row["scale_ups"] = sum(1 for a, b in moves if b > a)
+    row["scale_downs"] = sum(1 for a, b in moves if b < a)
+    row["peak_active"] = sec["peak_active"]
+    row["served"] = sec["served"]
+    row["latency_p50_ns"] = sec["latency_ns"]["p50"]
+    row["latency_p99_ns"] = sec["latency_ns"]["p99"]
+    return row
+
+
+def main_control_plane() -> dict:
+    engines = [("async", "async", 1)]
+    if HAS_FORK:
+        engines += [(f"dist_{DIST_WORKERS}w", "dist", DIST_WORKERS)]
+    rows = {}
+    for name, engine, k in engines:
+        rows[name] = simulate_control_plane(engine, n_workers=k)
+    base = next(iter(rows))
+    assert all(r["final_vtimes"] == rows[base]["final_vtimes"]
+               and r["control_section"] == rows[base]["control_section"]
+               for r in rows.values()), \
+        "engines disagree on the control-plane simulation"
+    a = rows["async"]
+    print(f"control-plane regime ({a['n_hosts']} hosts, {a['n_joins']} "
+          f"joining mid-run):")
+    for name, r in rows.items():
+        print(f"{name:>10s} x{r['n_workers']}: peak {r['peak_active']} "
+              f"active ({r['scale_ups']} ups / {r['scale_downs']} "
+              f"downs), {r['served']} served, "
+              f"p99 {r['latency_p99_ns']/1e6:.2f} ms, "
+              f"wall {r['wall_s']:.3f}s, {r['dispatch_per_s']} disp/s")
+    return rows
+
+
+def smoke_control_plane() -> None:
+    """CI smoke: the autoscaled fleet must scale up AND back down from
+    observed traffic alone, keep the simulated request p99 finite and
+    bounded (50x the service time — generous, trips only if the
+    control plane stops tracking load), and hold dispatch throughput
+    above the shared scheduler floor."""
+    row = simulate_control_plane("async", marquee=False)
+    assert row["scale_ups"] > 0, row
+    assert row["scale_downs"] > 0, row
+    assert 0 < row["latency_p99_ns"] < 50 * 400_000, row
+    floor = SEED_REFERENCE_4096_DISPATCH_PER_S / 2
+    assert row["dispatch_per_s"] > floor, (row["dispatch_per_s"], floor)
+    print(f"control-plane smoke ok: {row['n_joins']} joins, "
+          f"{row['scale_ups']} ups / {row['scale_downs']} downs, "
+          f"p99 {row['latency_p99_ns']/1e6:.2f} ms, "
+          f"{row['dispatch_per_s']} disp/s (floor {floor:.0f})")
+
+
 def simulate_sharded_dist(*, n_chips: int = 512, n_hosts: int = 4,
                           n_steps: int = 3) -> dict:
     """The dist engine's parallelism case: a training ring sharded
@@ -651,6 +758,7 @@ def main():
     live = main_live_recovery()
     serve = main_live_serve()
     campaign = main_campaign()
+    control = main_control_plane()
     sharded = simulate_sharded_dist() if HAS_FORK else None
     sharded_large = (simulate_sharded_dist(n_chips=2048, n_hosts=16)
                      if HAS_FORK else None)
@@ -673,16 +781,19 @@ def main():
     def strip(rs):
         return {name: {k: v for k, v in r.items()
                        if k not in ("final_vtimes", "cell_report",
-                                    "live_section")}
+                                    "live_section", "control_section")}
                 for name, r in rs.items()}
     bench = {
-        # v8: + the fault-campaign regime (swept grids, outcome
-        # histograms, minimized-reproducer throughput); v7 added the
-        # live_serve replay regime (simulated latency percentiles +
-        # replay dispatch throughput); v6 the live_recovery replay
-        # regime; v5 the vectorized engine row in multihost and the
-        # vmap batched-sweep regime
-        "schema": "BENCH_cluster/v8",
+        # v9: + the control_plane regime (mutable membership: the
+        # 65-host diurnal_autoscale marquee — joins as simulation
+        # events, autoscaler decisions, simulated latency
+        # percentiles); v8 added the fault-campaign regime (swept
+        # grids, outcome histograms, minimized-reproducer throughput);
+        # v7 the live_serve replay regime (simulated latency
+        # percentiles + replay dispatch throughput); v6 the
+        # live_recovery replay regime; v5 the vectorized engine row in
+        # multihost and the vmap batched-sweep regime
+        "schema": "BENCH_cluster/v9",
         "multihost": strip(multihost),
         "multihost_large": strip(large),
         "cells": strip(cells),
@@ -690,6 +801,7 @@ def main():
         "live_recovery": strip(live),
         "live_serve": strip(serve),
         "campaign": campaign,
+        "control_plane": strip(control),
         "training": rows,
     }
     if HAS_FORK:
@@ -734,5 +846,6 @@ if __name__ == "__main__":
         smoke_live_recovery()
         smoke_live_serve()
         smoke_campaign()
+        smoke_control_plane()
     else:
         main()

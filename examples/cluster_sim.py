@@ -339,6 +339,61 @@ def run_live_serve(dist_workers: int = 2):
     return results
 
 
+def run_autoscale(dist_workers: int = 2, smoke: bool = False):
+    """Membership + control-plane demo: a founding fleet rides a
+    diurnal traffic wave — late pool hosts *join the cluster as
+    simulation events* (``Topology.capacity_pool``), a threshold
+    autoscaler boots and drains them from observed traffic, and every
+    scaling decision plus the request-latency percentiles come out
+    bit-identical on the in-process and multi-process engines."""
+    from repro.sim import (AutoscaledServe, ThresholdAutoscaler,
+                           diurnal_arrivals)
+
+    n_pool, founding = (8, 4) if smoke else (16, 4)
+    join0, stagger = 20_000_000, 500_000
+    print(f"\ntraffic-driven control plane: {founding} founding hosts, "
+          f"{n_pool - founding} joining mid-run, threshold autoscaler")
+
+    def make():
+        topo = Topology(n_hosts=n_pool + 1, n_cpus=2)
+        topo.capacity_pool(range(founding + 1, n_pool + 1), join0,
+                           stagger_ns=stagger)
+        ready = [0] * founding + [join0 + i * stagger
+                                  for i in range(n_pool - founding)]
+        wl = AutoscaledServe(
+            arrivals=diurnal_arrivals(700 if smoke else 1400,
+                                      base_gap_ns=1_000_000,
+                                      peak_gap_ns=60_000,
+                                      period_ns=100_000_000, seed=5),
+            n_pool=n_pool, ready_ns=ready, service_ns=400_000,
+            min_active=founding, decide_every=8, probe_every=4,
+            autoscaler=ThresholdAutoscaler(patience=2),
+            placement="worst_fit")
+        return Simulation(topo, wl, Scenario("diurnal autoscale"),
+                          placement=wl.default_placement())
+
+    a = make().run(engine="async")
+    assert a.status == "ok", a.detail
+    if hasattr(os, "fork"):
+        d = make().run(engine="dist", n_workers=dist_workers)
+        assert (d.tasks, d.vtime_ns, d.control) == \
+            (a.tasks, a.vtime_ns, a.control), \
+            "dist diverged from async on the control plane"
+        print(f"  async == dist x{dist_workers} bit-identical "
+              f"(including every autoscaler decision)")
+    sec = a.control["autoserve"]
+    moves = [(d_["vtime"], d_["from"], d_["to"])
+             for d_ in sec["decisions"] if d_["from"] != d_["to"]]
+    joins = [e for e in a.control["membership"] if e["event"] == "join"]
+    print(f"  {len(joins)} hosts joined mid-run; fleet path: "
+          + " -> ".join([str(founding)] + [str(t) for _, _, t in moves]))
+    print(f"  {sec['served']} requests, boots={sec['boots']} "
+          f"drains={sec['drains']} probes={sec['probes']['sent']}; "
+          f"latency p50 {sec['latency_ns']['p50']/1e6:.2f} ms, "
+          f"p99 {sec['latency_ns']['p99']/1e6:.2f} ms")
+    return a
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3_4b")
@@ -358,6 +413,7 @@ if __name__ == "__main__":
         if not args.skip_multihost:
             run_live_recovery()
             run_live_serve()
+            run_autoscale(smoke=True)
     else:
         run(args.arch, args.steps, args.variant)
         if not args.skip_multihost:
@@ -366,3 +422,4 @@ if __name__ == "__main__":
         if not args.skip_multihost:
             run_live_recovery()
             run_live_serve()
+            run_autoscale()

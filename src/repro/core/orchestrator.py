@@ -273,18 +273,19 @@ class Orchestrator:
                  dcn_link: LinkSpec = LinkSpec(bandwidth_bps=25e9 * 8,
                                                latency_ns=10_000),
                  mode: str = "async",
-                 cells: Optional[Dict[int, CellManager]] = None):
+                 cells: Optional[Dict[int, CellManager]] = None,
+                 joins: Optional[Dict[int, int]] = None):
         assert mode in ("async", "barrier"), mode
         self.mode = mode
         if not isinstance(n_cpus, dict):
             n_cpus = {h: n_cpus for h in range(n_hosts)}
-        # per-host cell state (§3.3): each host's scheduler gets its own
-        # CellManager — passed in by the facade, defaulted otherwise
-        self.hosts: Dict[int, Scheduler] = {
-            h: Scheduler(host=h, n_cpus=n_cpus.get(h, 8),
-                         distributed=True,
-                         cells=None if cells is None else cells.get(h))
-            for h in range(n_hosts)}
+        self.hosts: Dict[int, Scheduler] = {}
+        #: membership timeline: host -> vtime it joins the cluster
+        #: (0 = founding member) and host -> vtime it leaves, plus the
+        #: ordered event log surfaced in ``SimReport.control``
+        self.join_vtime: Dict[int, int] = {}
+        self.leave_vtime: Dict[int, int] = {}
+        self.membership_events: List[dict] = []
         self.hubs: Dict[int, Hub] = {}
         self.dcn_link = dcn_link
         # optional heterogeneous topology: (host_a, host_b) -> LinkSpec,
@@ -296,8 +297,18 @@ class Orchestrator:
         self.global_scopes: List[Scope] = []
         self.stats = {"epochs": 0, "proxy_syncs": 0, "cross_host_msgs": 0,
                       "max_proxy_staleness_ns": 0, "max_window_ns": 0,
-                      "quiescent_skips": 0}
+                      "quiescent_skips": 0, "membership_epochs": 0}
         self._solver: Optional[LBTSSolver] = None   # built on first run
+        # membership-epoch state (lazy; see _membership_state)
+        self._active_hosts: Optional[List[int]] = None
+        self._pending_joins: Optional[List[Tuple[int, int]]] = None
+        joins = joins or {}
+        # per-host cell state (§3.3): each host's scheduler gets its own
+        # CellManager — passed in by the facade, defaulted otherwise
+        for h in range(n_hosts):
+            self.add_host(h, n_cpus=n_cpus.get(h, 8),
+                          at_vtime=joins.get(h, 0),
+                          cells=None if cells is None else cells.get(h))
 
     @classmethod
     def from_host_specs(cls, specs: List[HostSpec], *,
@@ -323,6 +334,88 @@ class Orchestrator:
     # -- wiring -----------------------------------------------------------------
     def host(self, h: int) -> Scheduler:
         return self.hosts[h]
+
+    # -- membership (vtime-stamped join/leave events) ----------------------------
+    def add_host(self, h: int, *, n_cpus: int = 8, at_vtime: int = 0,
+                 cells: Optional[CellManager] = None) -> Scheduler:
+        """Add host ``h`` to the cluster as a vtime-stamped membership
+        event.  ``at_vtime=0`` is a founding member; ``at_vtime=T > 0``
+        means the host *joins* at simulated time ``T``: its scheduler and
+        hub are wired at build time (fresh state, no resurrection of any
+        prior host's tasks or cells), but the conservative engines keep
+        it out of the LBTS closure — and clamp every active host's
+        window at ``T`` — until the membership epoch flips (see
+        ``_run_async``).  The facade spawns the joiner's tasks with
+        initial vtime ``T``, so the joiner's earliest possible send is
+        ``>= T`` and join-time lookahead attach is add-only conservative:
+        no pre-join host ever executes an event at ``>= T`` before the
+        joiner's edges are in the graph."""
+        if h in self.hosts:
+            raise ValueError(f"host {h} is already a cluster member")
+        if at_vtime < 0:
+            raise ValueError(f"host {h}: join vtime must be >= 0, "
+                             f"got {at_vtime}")
+        self.join_vtime[h] = at_vtime
+        if at_vtime > 0:
+            self.membership_events.append(
+                {"event": "join", "host": h, "vtime": at_vtime})
+        self._active_hosts = None       # membership timeline changed
+        self._pending_joins = None
+        self._solver = None
+        sched = Scheduler(host=h, n_cpus=n_cpus, distributed=True,
+                          cells=cells)
+        self.hosts[h] = sched
+        return sched
+
+    def retire_host(self, h: int, at_vtime: int) -> None:
+        """Record host ``h`` leaving the cluster at ``at_vtime`` (the
+        membership half of ``FailHost``: the facade kills the host's
+        tasks through the ordinary fault wrappers; this logs the churn
+        event).  Leaves need no solver rebuild — a retired host goes
+        quiescent, and quiescent hosts already stop gating peers — so
+        the conservative window schedule (and every pinned golden
+        ``sync_rounds``) is unchanged."""
+        if h not in self.hosts:
+            raise ValueError(f"cannot retire unknown host {h}")
+        prior = self.leave_vtime.get(h)
+        if prior is None or at_vtime < prior:
+            self.leave_vtime[h] = at_vtime
+        self.membership_events.append(
+            {"event": "leave", "host": h, "vtime": at_vtime})
+
+    def membership_timeline(self) -> List[dict]:
+        """Vtime-ordered membership events (joins + leaves)."""
+        return sorted(self.membership_events,
+                      key=lambda e: (e["vtime"], e["event"], e["host"]))
+
+    def _membership_state(self) -> Tuple[List[int], List[Tuple[int, int]]]:
+        """(active hosts, pending joins as sorted (vtime, host)) — the
+        epoch state for the conservative engines.  Persisted on self so
+        chunked re-entry (the dist sole-worker path) resumes the same
+        epoch."""
+        if self._active_hosts is None:
+            self._active_hosts = sorted(
+                h for h, t in self.join_vtime.items() if t <= 0)
+            self._pending_joins = sorted(
+                (t, h) for h, t in self.join_vtime.items() if t > 0)
+            if not self._active_hosts and self.hosts:
+                raise ValueError(
+                    "cluster has no founding member: at least one host "
+                    "must join at vtime 0")
+        return self._active_hosts, self._pending_joins
+
+    def _activate_epoch(self) -> None:
+        """Flip the membership epoch: admit every pending joiner at the
+        earliest pending join vtime into the active set and invalidate
+        the solver so the min-plus closure re-solves over the grown
+        graph."""
+        t0 = self._pending_joins[0][0]
+        while self._pending_joins and self._pending_joins[0][0] == t0:
+            _, h = self._pending_joins.pop(0)
+            self._active_hosts.append(h)
+        self._active_hosts.sort()
+        self._solver = None
+        self.stats["membership_epochs"] += 1
 
     def connect_hosts(self, a: int, b: int, link: LinkSpec) -> None:
         """Declare the interconnect between hosts ``a`` and ``b`` (both
@@ -458,12 +551,16 @@ class Orchestrator:
             return None
         return max(1, shub.lookahead_ns(dhub.name))
 
-    def lookahead_map(self) -> Dict[Tuple[int, int], int]:
+    def lookahead_map(self, hosts: Optional[Iterable[int]] = None
+                      ) -> Dict[Tuple[int, int], int]:
         """All directed cross-host channels and their lookahead, the
-        input to :func:`lbts_bounds` / :func:`earliest_input_time`."""
+        input to :func:`lbts_bounds` / :func:`earliest_input_time`.
+        ``hosts`` restricts the map to a membership epoch's active set
+        (the solver re-solves over exactly these edges)."""
         la = {}
-        for src in self.hosts:
-            for dst in self.hosts:
+        members = self.hosts if hosts is None else list(hosts)
+        for src in members:
+            for dst in members:
                 if src == dst:
                     continue
                 v = self._lookahead(src, dst)
@@ -500,31 +597,74 @@ class Orchestrator:
             self.stats["proxy_syncs"] += 1
         return changed
 
+    def _membership_gmin(self, active: List[int]) -> Optional[int]:
+        """Conservative next-event time over the active set only."""
+        times = [t for t in (self.hosts[h].next_time() for h in active)
+                 if t is not None]
+        return min(times) if times else None
+
+    def _wedge_info(self) -> dict:
+        """Structured deadlock detail: which hosts hold unfinished work
+        (and any joins still pending), so a membership-related wedge
+        names the responsible host instead of only carrying prose."""
+        active, pending = self._membership_state()
+        return {
+            "kind": "wedged",
+            "wedged_hosts": [h for h in sorted(self.hosts)
+                             if self.hosts[h].has_unfinished()],
+            "pending_joins": [{"host": h, "vtime": t}
+                              for t, h in pending],
+        }
+
     def _run_async(self, max_rounds: int,
                    raise_on_exhaust: bool = True) -> bool:
         """Run the per-link-lookahead engine; returns True when the
         simulation finished, False when ``max_rounds`` elapsed first
         (only with ``raise_on_exhaust=False`` — the dist sole-worker
-        path runs in bounded chunks to heartbeat its coordinator)."""
-        order = sorted(self.hosts)
-        # channels are pinned at peering time (Hub.peer_with), so the
-        # lookahead map is static for the whole run — build the solver's
-        # min-plus closure once (the dist coordinator captures the map
-        # once at handshake for the same reason).  Cached across chunked
+        path runs in bounded chunks to heartbeat its coordinator).
+
+        Membership epochs: hosts with a pending join (``add_host`` with
+        ``at_vtime=T > 0``) are kept out of the LBTS closure, and every
+        active host's window is clamped at the earliest pending ``T``,
+        until the active set provably cannot act below ``T`` — then the
+        epoch flips, the joiner enters the graph, and the min-plus
+        closure re-solves (cached between epochs).  Conservatism: the
+        clamp means no pre-join host executes an event at ``>= T``
+        before the joiner's edges exist, and the joiner's own tasks
+        start at vtime ``T``, so its earliest send is ``>= T`` — wake
+        forwarding is causal-timestamp-only, so the epoch-clamped
+        schedule yields results bit-identical to every other engine."""
+        # channels are pinned at peering time (Hub.peer_with), so within
+        # a membership epoch the lookahead map is static — build the
+        # solver's min-plus closure once per epoch (the dist coordinator
+        # mirrors this logic round by round).  Cached across chunked
         # re-entry.
+        active, pending = self._membership_state()
         solver = self._solver
         if solver is None:
-            solver = self._solver = LBTSSolver(self.lookahead_map(),
-                                               order)
+            solver = self._solver = LBTSSolver(
+                self.lookahead_map(active), active)
         for _ in range(max_rounds):
             if not self.unfinished():
                 return True
+            # membership epoch flips: admit pending joiners once no
+            # active host can act strictly below the join vtime
+            while pending:
+                gmin = self._membership_gmin(active)
+                if gmin is not None and gmin < pending[0][0]:
+                    break
+                self._activate_epoch()
+                solver = self._solver = LBTSSolver(
+                    self.lookahead_map(active), active)
             self.stats["epochs"] += 1
             progressed = False
+            clamp = pending[0][0] if pending else None
             lb = solver.bounds(self._next_times())
-            for h in order:
+            for h in active:
                 sched = self.hosts[h]
                 bound = solver.eit(h, lb)
+                if clamp is not None:
+                    bound = clamp if bound is None else min(bound, clamp)
                 if self._lazy_sync(h, bound):
                     progressed = True
                 elif sched.quiescent_below(bound):
@@ -558,9 +698,18 @@ class Orchestrator:
                     # the top of this iteration (and _eit ignores lb[h])
                     lb[h] = local if bound is None else min(local, bound)
             if not progressed:
+                if pending:
+                    # active set is wedged below the next join vtime:
+                    # the epoch flip itself is the progress (the joiner
+                    # may hold the messages everyone is blocked on)
+                    self._activate_epoch()
+                    solver = self._solver = LBTSSolver(
+                        self.lookahead_map(active), active)
+                    continue
                 if self.unfinished():
                     self._note_staleness()
-                    raise DeadlockError("distributed simulation wedged")
+                    raise DeadlockError("distributed simulation wedged",
+                                        info=self._wedge_info())
                 return True
         if self.unfinished():
             if not raise_on_exhaust:
@@ -568,7 +717,7 @@ class Orchestrator:
             self._note_staleness()
             raise DeadlockError(
                 f"async engine exceeded {max_rounds} rounds "
-                f"without finishing")
+                f"without finishing", info=self._wedge_info())
         return True
 
     # -- barrier engine (legacy, kept for head-to-head comparison) ---------------
@@ -620,7 +769,8 @@ class Orchestrator:
                 if not moved:
                     if not any(h.next_time() is not None
                                for h in self.hosts.values()):
-                        raise DeadlockError("distributed simulation wedged")
+                        raise DeadlockError("distributed simulation wedged",
+                                            info=self._wedge_info())
                     # pending events exist beyond the wake horizon; gmin
                     # itself advances next epoch.  Two stalled epochs in
                     # a row means even that cannot make progress.
@@ -628,7 +778,8 @@ class Orchestrator:
                     if stalled >= 2:
                         raise DeadlockError(
                             "distributed simulation stalled with pending "
-                            "events beyond the wake horizon")
+                            "events beyond the wake horizon",
+                            info=self._wedge_info())
             else:
                 stalled = 0
 

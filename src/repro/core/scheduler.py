@@ -70,7 +70,17 @@ class SchedStats:
 
 
 class DeadlockError(RuntimeError):
-    pass
+    """Conservative engines raise this when no task can make progress.
+
+    ``info`` is an optional structured detail (surfaced as
+    ``SimReport.detail_info``): engines populate it with the wedged
+    hosts and, for membership scenarios, any still-pending joins, so a
+    failure names the responsible host instead of only carrying prose.
+    """
+
+    def __init__(self, message: str, info: Optional[dict] = None):
+        super().__init__(message)
+        self.info: dict = dict(info or {})
 
 
 class Scheduler:

@@ -115,6 +115,7 @@ class DistCoordinator:
         self.rounds = 0
         self.envelopes_routed = 0
         self.worker_skips = 0        # adaptive skips of idle workers
+        self.membership_epochs = 0   # epoch flips (joins activated)
         self._conns: List[Any] = []
         self._procs: List[Any] = []
 
@@ -210,19 +211,19 @@ class DistCoordinator:
             readies = [self._recv(w, "ready")
                        for w in range(self.n_workers)]
             if self.n_workers == 1:
-                status, detail = self._run_sole_worker()
+                status, detail, info = self._run_sole_worker()
             else:
-                status, detail = self._run_rounds(readies)
+                status, detail, info = self._run_rounds(readies)
             for w in range(self.n_workers):
                 self._send(w, frames.pack_pickle("finalize", None))
             reports = [self._recv(w, "report")
                        for w in range(self.n_workers)]
             wall = time.perf_counter() - t0
-            return self._merge(status, detail, wall, reports)
+            return self._merge(status, detail, wall, reports, info)
         finally:
             self._shutdown()
 
-    def _run_sole_worker(self) -> Tuple[str, str]:
+    def _run_sole_worker(self) -> Tuple[str, str, dict]:
         """One worker owns every host: no cross-partition channels, so
         it free-runs the async engine.  The worker heartbeats a "tick"
         every bounded chunk of rounds, so ``timeout`` stays a per-reply
@@ -234,10 +235,10 @@ class DistCoordinator:
             if msg[0] == "ran_all":
                 ran = msg[1]
                 self.rounds = ran["rounds"]
-                return ran["status"], ran["detail"]
+                return ran["status"], ran["detail"], ran.get("info", {})
 
     def _run_rounds(self, readies: List[Dict[str, Any]]
-                    ) -> Tuple[str, str]:
+                    ) -> Tuple[str, str, dict]:
         # wire tables are identical across workers (bit-identical
         # replicas): take worker 0's
         lookahead = readies[0]["lookahead"]
@@ -253,7 +254,41 @@ class DistCoordinator:
         for r in readies:
             next_times.update(r["next_times"])
             unfinished.append(r["unfinished"])
-        solver = LBTSSolver(lookahead, next_times)
+        # membership epochs, mirroring Orchestrator._run_async: joiners
+        # (join vtime > 0, identical in every replica) stay out of the
+        # LBTS closure — and every active bound is clamped at the
+        # earliest pending join vtime — until the active set provably
+        # cannot act below it; then the closure re-solves over the grown
+        # graph.  Joiners keep their build-time partition owner, so no
+        # repartitioning message traffic is needed at a flip.
+        join_vtime: Dict[int, int] = readies[0].get("join_vtime") or {
+            h: 0 for h in next_times}
+        active = sorted(h for h, t in join_vtime.items() if t <= 0)
+        pending_joins = sorted(
+            (t, h) for h, t in join_vtime.items() if t > 0)
+        self.membership_epochs = 0
+
+        def _epoch_solver() -> LBTSSolver:
+            member = set(active)
+            return LBTSSolver(
+                {e: la for e, la in lookahead.items()
+                 if e[0] in member and e[1] in member}, active)
+
+        def _flip_or_wedge() -> bool:
+            """A round made no progress: if a join is still pending,
+            the epoch flip *is* the progress (mirrors the in-process
+            engine's no-progress flip); otherwise the simulation is
+            truly wedged."""
+            if not pending_joins:
+                return False
+            t0 = pending_joins[0][0]
+            while pending_joins and pending_joins[0][0] == t0:
+                active.append(pending_joins.pop(0)[1])
+            active.sort()
+            self.membership_epochs += 1
+            return True
+
+        solver = _epoch_solver()
         W = range(self.n_workers)
         pending: List[List[bytes]] = [[] for _ in W]
         caps: Dict[int, int] = {}   # host -> min in-flight send vtime
@@ -268,13 +303,39 @@ class DistCoordinator:
                 # task that died without receiving) — it must be
                 # delivered and replayed anyway or message/byte totals
                 # and link stats diverge from the in-process engines
-                return "ok", ""
+                return "ok", "", {}
             eff_next = dict(next_times)
             for h, cap in caps.items():
                 cur = eff_next[h]
                 eff_next[h] = cap if cur is None else min(cur, cap)
+            while pending_joins:
+                # flip condition uses the envelope-capped next times: an
+                # in-flight message below the join vtime may still
+                # enable active-set progress there
+                gmin = min((t for t in (eff_next[h] for h in active)
+                            if t is not None), default=None)
+                if gmin is not None and gmin < pending_joins[0][0]:
+                    break
+                t0 = pending_joins[0][0]
+                while pending_joins and pending_joins[0][0] == t0:
+                    active.append(pending_joins.pop(0)[1])
+                active.sort()
+                solver = _epoch_solver()
+                self.membership_epochs += 1
+            clamp = pending_joins[0][0] if pending_joins else None
             lb = solver.bounds(eff_next)
-            bounds = {h: solver.eit(h, lb) for h in next_times}
+            bounds = {}
+            for h in next_times:
+                if h in join_vtime and join_vtime[h] > 0 \
+                        and h not in solver._idx:
+                    # pending joiner: nothing of it exists below its
+                    # join vtime, so this bound is a provable no-op
+                    bounds[h] = join_vtime[h]
+                    continue
+                b = solver.eit(h, lb)
+                if clamp is not None:
+                    b = clamp if b is None else min(b, clamp)
+                bounds[h] = b
             stepped: List[int] = []
             delivered = False
             for w in W:
@@ -293,7 +354,11 @@ class DistCoordinator:
                 last_bounds[w] = wb
                 stepped.append(w)
             if not stepped:
-                return "deadlock", "distributed simulation wedged"
+                if _flip_or_wedge():
+                    solver = _epoch_solver()
+                    continue
+                return ("deadlock", "distributed simulation wedged",
+                        self._wedge_info(unfinished, pending_joins))
             self.rounds += 1
             updates = {}
             caps = {}
@@ -301,10 +366,10 @@ class DistCoordinator:
             for w in stepped:
                 r = self._recv(w, "reply")
                 unfinished[w] = r.unfinished
-                active = bool(r.applied or r.dispatches or r.wakes
+                worked = bool(r.applied or r.dispatches or r.wakes
                               or r.lazy_changed or r.envelopes)
-                idle[w] = not active
-                progressed = progressed or active
+                idle[w] = not worked
+                progressed = progressed or worked
                 next_times.update(r.next_times)
                 updates.update(r.task_states)
                 for dst_hub, send_vt, record in r.envelopes:
@@ -315,9 +380,28 @@ class DistCoordinator:
                                   else min(prev, send_vt))
                     self.envelopes_routed += 1
             if not progressed:
-                return "deadlock", "distributed simulation wedged"
-        return "deadlock", (f"dist engine exceeded {self.max_rounds} "
-                            f"rounds without finishing")
+                if _flip_or_wedge():
+                    solver = _epoch_solver()
+                    continue
+                return ("deadlock", "distributed simulation wedged",
+                        self._wedge_info(unfinished, pending_joins))
+        return ("deadlock", (f"dist engine exceeded {self.max_rounds} "
+                             f"rounds without finishing"),
+                self._wedge_info(unfinished, pending_joins))
+
+    def _wedge_info(self, unfinished: List[bool],
+                    pending_joins: List[Tuple[int, int]]) -> dict:
+        """Structured deadlock detail (``SimReport.detail_info``):
+        hosts of the workers still holding unfinished work, plus any
+        joins that never activated."""
+        return {
+            "kind": "wedged",
+            "wedged_hosts": sorted(
+                h for w, unf in enumerate(unfinished) if unf
+                for h in self.partitions[w]),
+            "pending_joins": [{"host": h, "vtime": t}
+                              for t, h in pending_joins],
+        }
 
     # -- report merging ------------------------------------------------------
     def _merge_progress(self, worker_progress: List[Dict[str, dict]]
@@ -343,7 +427,8 @@ class DistCoordinator:
                 for wl in self.sim.workloads}
 
     def _merge(self, status: str, detail: str, wall: float,
-               reports: List[Dict[str, Any]]) -> SimReport:
+               reports: List[Dict[str, Any]],
+               detail_info: Optional[dict] = None) -> SimReport:
         sim = self.sim
         hosts = sorted((hr for r in reports for hr in r["hosts"]),
                        key=lambda hr: hr.host)
@@ -360,6 +445,20 @@ class DistCoordinator:
         for r in reports:                  # per-host, owner-disjoint
             cells.update(r["cells"])
         cells = {h: cells[h] for h in sorted(cells, key=int)}
+        # control-plane timeline: workload sections come from the one
+        # worker owning the controller task (first non-empty wins, like
+        # live); the membership timeline is build-time data identical
+        # across replicas, so worker 0's copy is authoritative
+        control: Dict[str, Any] = {}
+        for r in reports:
+            for wl_name, sec in r.get("control", {}).items():
+                control.setdefault(wl_name, sec)
+        membership = next((r["membership"] for r in reports
+                           if r.get("membership")), [])
+        if membership:
+            control["membership"] = membership
+        elif control:
+            control["membership"] = []
         return SimReport(
             status=status, mode="dist", n_hosts=sim.topology.n_hosts,
             vtime_ns=max(r["horizon"] for r in reports),
@@ -378,7 +477,8 @@ class DistCoordinator:
             scenario=sim.scenario.name, detail=detail,
             n_workers=self.n_workers, cells=cells,
             live=merge_live_sections([r.get("live", {})
-                                      for r in reports]))
+                                      for r in reports]),
+            control=control, detail_info=dict(detail_info or {}))
 
 
 def run_dist(sim, n_workers: int = 2, *, max_rounds: int = 1_000_000,

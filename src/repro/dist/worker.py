@@ -153,7 +153,11 @@ class DistWorker:
                 "exports": self.exports,
                 "imports": self.imports,
                 "next_times": self.next_times(),
-                "unfinished": self.unfinished()}
+                "unfinished": self.unfinished(),
+                # membership timeline (identical in every replica): the
+                # coordinator mirrors the async engine's epoch-scoped
+                # LBTS clamps from this
+                "join_vtime": dict(self.orch.join_vtime)}
 
     def inject(self, frame: bytes, off: int, n_env: int) -> None:
         """Replay cross-partition envelope records on the owned
@@ -268,7 +272,7 @@ class DistWorker:
         in-process async engine instead of paying one pipe round-trip
         per conservative window.  Runs in bounded chunks, calling
         ``tick()`` between chunks to heartbeat the coordinator."""
-        status, detail = "ok", ""
+        status, detail, info = "ok", "", {}
         remaining = max_rounds
         try:
             while True:
@@ -283,8 +287,8 @@ class DistWorker:
                     break
                 tick()
         except DeadlockError as e:
-            status, detail = "deadlock", str(e)
-        return {"status": status, "detail": detail,
+            status, detail, info = "deadlock", str(e), e.info
+        return {"status": status, "detail": detail, "info": info,
                 "rounds": self.orch.stats["epochs"]}
 
     def final_report(self) -> Dict[str, Any]:
@@ -318,9 +322,21 @@ class DistWorker:
             sec = wl.live_report(owned_tasks)
             if sec is not None:
                 live[wl.name] = sec
+        # control-plane sections: controller state lives on exactly one
+        # host (the facade co-locates source/LB/controller), so only the
+        # owner of the controller task reports a non-None section and
+        # the coordinator's first-non-empty merge is authoritative
+        control = {}
+        for wl in self.sim.workloads:
+            fn = getattr(wl, "control_report", None)
+            sec = fn(owned_tasks) if fn is not None else None
+            if sec is not None:
+                control[wl.name] = sec
         return {
             "cells": cells,
             "live": live,
+            "control": control,
+            "membership": self.orch.membership_timeline(),
             "hosts": [HostReport.from_sched(h, orch.hosts[h].stats)
                       for h in self.owned],
             "messages": sum(h.stats["messages"] for h in owned_hubs),

@@ -17,8 +17,15 @@ One import gives everything needed to compose and run a simulation:
 * :class:`Scenario` — declarative fault/interference injection:
   :class:`Straggler`, :class:`FailTask`, :class:`FailHost`,
   :class:`DegradeLink`, :class:`Interference`, :class:`BitFlip`
-  (silent data corruption in a task's payload/result stream), and
-  :class:`ClockSkew` (per-host constant + drift receive-clock skew).
+  (silent data corruption in a task's payload/result stream),
+  :class:`ClockSkew` (per-host constant + drift receive-clock skew),
+  and :class:`JoinHost` (membership churn — a host joins the cluster
+  at a virtual time, like ``Topology.join``).
+* :class:`AutoscaledServe` — the traffic-driven control plane
+  (:mod:`repro.sim.control`): open-loop arrivals, health probes, a
+  :class:`ThresholdAutoscaler` booting/draining a pool of late-joining
+  hosts, pluggable placement (:data:`PLACEMENT_POLICIES`); reported in
+  ``SimReport.control``.
 * :class:`Campaign` — swept fault grids (:class:`FaultGrid`) over a
   scenario base: every point run deterministically, classified
   against the fault-free baseline, and failing points delta-minimized
@@ -53,13 +60,18 @@ from repro.sim.workload import (EndpointSpec, Program, ScopeSpec,
                                 Workload)
 from repro.sim.scenario import (BitFlip, ClockSkew, DegradeLink,
                                 FailHost, FailTask, Injection,
-                                Interference, Scenario, Straggler)
+                                Interference, JoinHost, Scenario,
+                                Straggler)
 from repro.sim.report import HostReport, SimReport
 from repro.sim.simulation import Simulation
 from repro.sim.vectorized import SweepResult, UnsupportedByEngine
 from repro.sim.workloads import (ChipRingTraining, LiveServe,
                                  ModeledServe, RackRing,
-                                 burst_arrivals, poisson_arrivals)
+                                 burst_arrivals, diurnal_arrivals,
+                                 poisson_arrivals)
+from repro.sim.control import (PLACEMENT_POLICIES, AutoscaledServe,
+                               ThresholdAutoscaler, best_fit,
+                               first_fit, worst_fit)
 from repro.sim.live import (LiveProgram, LiveTrainerRecovery,
                             ServeStack, TrainerStack,
                             live_colocated_sim, live_recovery_sim,
@@ -74,18 +86,21 @@ from repro.sim.campaign import (Campaign, CampaignReport, FaultGrid,
 from repro.sim import registry
 
 __all__ = [
-    "BitFlip", "Campaign", "CampaignReport", "CellSpec",
-    "ChipRingTraining", "ClockSkew", "CostLedger", "DegradeLink",
-    "EndpointSpec", "FabricSpec", "FailHost", "FailTask", "FaultGrid",
-    "GridPoint", "HostReport", "Injection", "Interference",
-    "LiveProgram", "LiveServe", "LiveTraceError", "LiveTraceMismatch",
-    "LiveTrainerRecovery", "ModeledServe", "Program", "RackRing",
+    "AutoscaledServe", "BitFlip", "Campaign", "CampaignReport",
+    "CellSpec", "ChipRingTraining", "ClockSkew", "CostLedger",
+    "DegradeLink", "EndpointSpec", "FabricSpec", "FailHost",
+    "FailTask", "FaultGrid", "GridPoint", "HostReport", "Injection",
+    "Interference", "JoinHost", "LiveProgram", "LiveServe",
+    "LiveTraceError", "LiveTraceMismatch", "LiveTrainerRecovery",
+    "ModeledServe", "PLACEMENT_POLICIES", "Program", "RackRing",
     "Scenario", "ScopeSpec", "ServeStack", "SimReport", "Simulation",
-    "Straggler", "SweepResult", "TRACE_SCHEMA", "TickRangeError",
-    "Topology", "TrainerStack", "UnsupportedByEngine", "VecCompute",
-    "VecMark", "VecRecv", "VecSend", "Workload", "burst_arrivals",
-    "live_colocated_sim", "live_recovery_sim", "live_serve_sim",
-    "poisson_arrivals", "record_live_colocated",
-    "record_live_recovery", "record_live_serve", "recovery_timeline",
-    "registry", "replay_spec", "serve_latency",
+    "Straggler", "SweepResult", "TRACE_SCHEMA", "ThresholdAutoscaler",
+    "TickRangeError", "Topology", "TrainerStack",
+    "UnsupportedByEngine", "VecCompute", "VecMark", "VecRecv",
+    "VecSend", "Workload", "best_fit", "burst_arrivals",
+    "diurnal_arrivals", "first_fit", "live_colocated_sim",
+    "live_recovery_sim", "live_serve_sim", "poisson_arrivals",
+    "record_live_colocated", "record_live_recovery",
+    "record_live_serve", "recovery_timeline", "registry",
+    "replay_spec", "serve_latency", "worst_fit",
 ]

@@ -56,7 +56,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 from repro.sim.report import SimReport, _jsonable
 from repro.sim.scenario import (BitFlip, ClockSkew, DegradeLink,
                                 FailHost, FailTask, Injection,
-                                Interference, Scenario, Straggler)
+                                Interference, JoinHost, Scenario,
+                                Straggler)
 from repro.sim.simulation import Simulation
 
 OUTCOMES = ("ok", "deadlock", "invariant-violation", "crash",
@@ -88,7 +89,7 @@ def _ref_run(sim: Simulation) -> SimReport:
 _INJECTION_TYPES: Dict[str, type] = {
     "Straggler": Straggler, "FailTask": FailTask, "FailHost": FailHost,
     "DegradeLink": DegradeLink, "Interference": Interference,
-    "BitFlip": BitFlip, "ClockSkew": ClockSkew,
+    "BitFlip": BitFlip, "ClockSkew": ClockSkew, "JoinHost": JoinHost,
 }
 
 
@@ -160,6 +161,14 @@ def _b_degrade_link(target, vtime, knobs, host_of):
 def _b_bitflip(target, vtime, knobs, host_of):
     return BitFlip(str(target), at_vtime=int(vtime),
                    bit=int(knobs.get("bit", 0)))
+
+
+@_builder("join_host")
+def _b_join_host(target, vtime, knobs, host_of):
+    # membership churn: the vtime axis is the join time.  vtime 0 means
+    # a founding member (not a late join), so clamp to >= 1 — the grid's
+    # shared vtime axis routinely starts at 0.
+    return JoinHost(host=host_of(target), at_vtime=max(1, int(vtime)))
 
 
 @_builder("clock_skew")
@@ -440,7 +449,10 @@ class Campaign:
         return outcome, detail, ""
 
     def _sweepable(self, scenario: Scenario) -> bool:
-        return not any(isinstance(inj, (BitFlip, ClockSkew))
+        # JoinHost rides the same fallback path as the data/ingress
+        # injections: membership epochs are conservative-engine
+        # machinery, so the sweep compiler refuses them at build
+        return not any(isinstance(inj, (BitFlip, ClockSkew, JoinHost))
                        for inj in scenario.injections)
 
     def _try_sweep(self, points: List[GridPoint]

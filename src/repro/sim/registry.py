@@ -36,11 +36,13 @@ from typing import Callable, Dict, List, Optional, Tuple
 from repro.core.cluster import ClusterSpec, StepCost
 from repro.sim.campaign import (FaultGrid, default_invariants,
                                 spec_scenario)
+from repro.sim.control import AutoscaledServe, ThresholdAutoscaler
 from repro.sim.scenario import BitFlip, ClockSkew, DegradeLink, \
     FailHost, Scenario, Straggler
 from repro.sim.simulation import Simulation
 from repro.sim.topology import Topology
-from repro.sim.workloads import ChipRingTraining, ModeledServe, RackRing
+from repro.sim.workloads import (ChipRingTraining, ModeledServe,
+                                 RackRing, diurnal_arrivals)
 
 _ROOT = pathlib.Path(__file__).resolve().parents[3]
 GOLDEN_DIR = pathlib.Path(__file__).resolve().parent / "goldens"
@@ -209,6 +211,34 @@ def _live_colocated(scenario=None):
         CostLedger.replay(_TRACE_DIR / "live_colocated_trace.json"))
 
 
+def _diurnal_autoscale(scenario=None):
+    # the membership marquee: a 4-host founding fleet rides one full
+    # diurnal traffic period up to the 64-host pool and back down,
+    # with the 60 late hosts joining the cluster as simulation events
+    # (capacity_pool) just before the first scale-up decision needs
+    # them.  Every decision is made by the control-plane workload from
+    # observed simulated traffic — nothing here scripts the 4->64->4
+    # ramp, the autoscaler discovers it.
+    n_pool, founding = 64, 4
+    join0, stagger = 100_000_000, 400_000
+    topo = Topology(n_hosts=n_pool + 1, n_cpus=2)
+    topo.capacity_pool(range(founding + 1, n_pool + 1), join0,
+                       stagger_ns=stagger)
+    ready = [0] * founding + [join0 + i * stagger
+                              for i in range(n_pool - founding)]
+    wl = AutoscaledServe(
+        arrivals=diurnal_arrivals(3600, base_gap_ns=1_000_000,
+                                  peak_gap_ns=12_500,
+                                  period_ns=400_000_000, seed=7),
+        n_pool=n_pool, ready_ns=ready, service_ns=800_000,
+        min_active=founding, decide_every=8, probe_every=8,
+        autoscaler=ThresholdAutoscaler(patience=3),
+        placement="worst_fit")
+    return Simulation(topo, wl,
+                      scenario or Scenario("diurnal autoscale 4->64->4"),
+                      placement=wl.default_placement())
+
+
 # ---------------------------------------------------------------------------
 # campaign bases + fault-injection showcases
 # ---------------------------------------------------------------------------
@@ -308,6 +338,10 @@ register("clock_skew_rack", 1,
 register("serve_flip_min", 1,
          "campaign-derived minimized reproducer of the serve bitflip "
          "crash", _serve_flip_min, tags=("fault", "campaign-derived"))
+register("diurnal_autoscale", 1,
+         "65-host diurnal fleet: 60 hosts join mid-run, threshold "
+         "autoscaler rides traffic 4->64->4", _diurnal_autoscale,
+         tags=("gallery", "control"))
 
 
 # ---------------------------------------------------------------------------
@@ -324,6 +358,13 @@ def canonical(report) -> dict:
         # live sections (recovery timelines) are golden-pinned too;
         # omitted when empty so pre-live rows stay byte-identical
         out["live"] = d["live"]
+    if any(k != "membership" for k in report.control):
+        # control-plane sections (autoscaler decisions, latency
+        # percentiles, the membership timeline) are deterministic and
+        # golden-pinned — but a bare membership timeline (FailHost
+        # leave churn with no control workload) stays out so the
+        # pre-membership fault rows remain byte-identical
+        out["control"] = d["control"]
     return out
 
 
@@ -388,7 +429,10 @@ def main(argv: Optional[List[str]] = None) -> int:
         prog="python -m repro.sim.registry",
         description="versioned scenario registry")
     sub = ap.add_subparsers(dest="cmd", required=True)
-    sub.add_parser("list")
+    lp = sub.add_parser("list")
+    lp.add_argument("--json", action="store_true",
+                    help="machine-readable listing (one object per "
+                         "ref: name/version/tags/campaign-base flag)")
     p = sub.add_parser("check", help="replay every entry against its "
                                      "pinned golden")
     p.add_argument("refs", nargs="*", help="subset of refs (default "
@@ -396,6 +440,15 @@ def main(argv: Optional[List[str]] = None) -> int:
     p.add_argument("--regen", action="store_true")
     args = ap.parse_args(argv)
     if args.cmd == "list":
+        if args.json:
+            rows = [{"ref": ref, "name": entry(ref).name,
+                     "version": entry(ref).version,
+                     "description": entry(ref).description,
+                     "tags": list(entry(ref).tags),
+                     "campaign_base": entry(ref).grid is not None}
+                    for ref in names()]
+            print(json.dumps(rows, indent=1))
+            return 0
         for ref in names():
             e = entry(ref)
             kind = "campaign-base" if e.grid else ",".join(e.tags)

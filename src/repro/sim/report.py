@@ -93,6 +93,19 @@ class SimReport:
     #: timeline with vtimes.  Empty for fully modeled simulations, and
     #: integer-vtimed so the cross-engine harness compares it bit-exactly.
     live: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    #: control-plane timeline (repro.sim.control): a ``"membership"``
+    #: list of vtime-ordered join/leave events plus one section per
+    #: control workload (scale decisions, health events, placement, and
+    #: p50/p95/p99 simulated request latency).  Empty when the
+    #: simulation has neither membership churn nor a control workload;
+    #: integer-vtimed so engines compare bit-exactly.
+    control: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    #: structured companion to ``detail``: for deadlocks, the wedged
+    #: hosts and any membership joins that never activated
+    #: ({"kind": "wedged", "wedged_hosts": [...], "pending_joins":
+    #: [...]}).  Empty on ok runs.  ``detail`` stays the human-readable
+    #: string so existing goldens are byte-identical.
+    detail_info: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def to_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)

@@ -69,7 +69,29 @@ class FailTask(Injection):
 @dataclasses.dataclass(frozen=True)
 class FailHost(Injection):
     """Kill every program placed on ``host`` once their vtime reaches
-    ``at_vtime`` (a machine dying mid-run)."""
+    ``at_vtime`` (a machine dying mid-run).
+
+    Membership semantics: this is ordinary churn — the facade records a
+    ``leave`` event on the cluster's membership timeline
+    (``SimReport.control["membership"]``) and kills the host's tasks
+    through the standard fault wrappers.  A leave needs no lookahead
+    rebuild (a dead host goes quiescent, and quiescent hosts already
+    stop gating peers), so results and sync-round schedules are
+    byte-identical to the pre-membership special case."""
+    host: int
+    at_vtime: int
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinHost(Injection):
+    """Scenario-driven membership churn: ``host`` joins the cluster at
+    ``at_vtime`` (>= 1), exactly like a ``Topology.join`` declaration —
+    programs placed on it spawn with initial vtime ``at_vtime`` and the
+    conservative engines admit it at the membership-epoch flip.  The
+    host id must be within the topology's ``n_hosts`` and must not
+    already be a founding member with tasks that start at vtime 0 or
+    carry a conflicting join declaration.  Not admissible on the
+    vectorized engine (raises ``UnsupportedByEngine`` at build)."""
     host: int
     at_vtime: int
 

@@ -34,7 +34,7 @@ from __future__ import annotations
 
 import math
 import time
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.cells import CellManager
 from repro.core.ipc import Endpoint, Hub, Message
@@ -45,9 +45,9 @@ from repro.core.vtask import Compute, State, VTask
 from repro.sim.report import HostReport, SimReport, _jsonable
 from repro.sim.scenario import (BitFlip, ClockSkew, DegradeLink,
                                 FailHost, FailTask, Interference,
-                                Scenario, Straggler, TaskHandle,
-                                bitflip_body, fail_gated_body,
-                                scaled_body)
+                                JoinHost, Scenario, Straggler,
+                                TaskHandle, bitflip_body,
+                                fail_gated_body, scaled_body)
 from repro.sim.topology import CellSpec, FabricSpec, Topology
 from repro.sim.workload import Program, Workload
 
@@ -97,6 +97,12 @@ class Simulation:
         self.scopes: List[Scope] = []
         self.placement: Dict[str, int] = {}
         self.cell_managers: Dict[int, CellManager] = {}
+        #: merged membership declarations (Topology.join + JoinHost
+        #: injections): host -> join vtime; resolved by build()
+        self.joins: Dict[int, int] = {}
+        #: single-engine membership log (leave events from FailHost);
+        #: multi-host engines read the orchestrator's timeline instead
+        self._membership_events: List[dict] = []
         self._built = False
 
     # -- introspection helpers ----------------------------------------------
@@ -246,6 +252,34 @@ class Simulation:
                 self.cell_managers[h] = cm
         return cell_of, load_cells
 
+    # -- membership ----------------------------------------------------------
+    def _resolve_joins(self) -> Dict[int, int]:
+        """Merge ``Topology.join`` declarations with :class:`JoinHost`
+        injections into one host -> join-vtime map.  JoinHost gets the
+        same validation as Topology.join (in range, not host 0, vtime
+        >= 1); a host declared in both places — or twice — is a
+        conflict, not a silent override."""
+        joins: Dict[int, int] = dict(self.topology.joins)
+        n_hosts = self.topology.n_hosts
+        for inj in self.scenario.injections:
+            if not isinstance(inj, JoinHost):
+                continue
+            if not 0 <= inj.host < n_hosts:
+                raise ValueError(f"JoinHost host {inj.host} outside "
+                                 f"0..{n_hosts - 1}")
+            if inj.host == 0:
+                raise ValueError("host 0 is the founding member and "
+                                 "cannot join late")
+            if inj.at_vtime < 1:
+                raise ValueError(f"JoinHost vtime must be >= 1, got "
+                                 f"{inj.at_vtime}")
+            if inj.host in joins:
+                raise ValueError(
+                    f"host {inj.host} already has a join event at "
+                    f"vtime {joins[inj.host]}")
+            joins[inj.host] = inj.at_vtime
+        return joins
+
     # -- scenario fault plan -------------------------------------------------
     def _resolve_fault_plan(self, names: List[str]
                             ) -> Tuple[Dict[str, float],
@@ -369,6 +403,11 @@ class Simulation:
         cell_of, load_cells = self._resolve_cells(programs,
                                                   inter_targets)
 
+        # membership: merged Topology.join + JoinHost map (host 0 and
+        # 1-host topologies can never join late, so `single` implies
+        # an empty map — the validation above guarantees it)
+        self.joins = self._resolve_joins()
+
         # engine + hubs
         single = self.mode == "single"
         fabric_eps: Dict[str, List[str]] = {f.name: [] for f in fabrics}
@@ -384,7 +423,8 @@ class Simulation:
             self.orchestrator = Orchestrator(
                 n_hosts=topo.n_hosts, n_cpus=topo.n_cpus,
                 dcn_link=topo.default_host_link, mode=self.mode,
-                cells=self.cell_managers or None)
+                cells=self.cell_managers or None,
+                joins=self.joins or None)
             for (a, b), link in topo.host_links.items():
                 self.orchestrator.connect_hosts(a, b, link)
             host_hubs: Dict[int, Hub] = {}
@@ -403,6 +443,21 @@ class Simulation:
         # scenario: per-task fault plan (see _resolve_fault_plan)
         scale, fails = self._resolve_fault_plan(names)
         bitflips = self._resolve_bitflips(names)
+
+        # membership churn half of FailHost: the kills themselves go
+        # through the fault wrappers resolved above; here the leave is
+        # logged on the membership timeline.  Deliberately no lookahead
+        # rebuild — a dead host goes quiescent, and quiescent hosts
+        # already stop gating peers — so window schedules (and pinned
+        # golden sync_rounds) are unchanged.
+        for inj in self.scenario.injections:
+            if isinstance(inj, FailHost):
+                if self.orchestrator is not None:
+                    self.orchestrator.retire_host(inj.host, inj.at_vtime)
+                else:
+                    self._membership_events.append(
+                        {"event": "leave", "host": inj.host,
+                         "vtime": inj.at_vtime})
 
         # workload interception (Program.on_fail): a program may observe
         # its resolved failure at build time — "kill" keeps the normal
@@ -455,6 +510,13 @@ class Simulation:
             if prog.handle is not None:
                 prog.handle.task = task
             sched = self._sched_for(host)
+            join_at = self.joins.get(host)
+            if join_at is not None:
+                # a joiner's programs start at its join vtime: the
+                # host's earliest possible action is >= join_at, which
+                # is what makes the membership epoch's add-only
+                # lookahead attach conservative (Orchestrator.add_host)
+                task.vtime = join_at
             sched.spawn(task)
             if prog.name in cell_of:
                 # assign (not just a VTask backref): registers the task
@@ -507,6 +569,9 @@ class Simulation:
                          _load_body(inj.bursts, inj.burst_ns),
                          kind="modeled")
             sched = self._sched_for(host)
+            join_at = self.joins.get(host)
+            if join_at is not None:
+                load.vtime = join_at     # loads wait for the join too
             sched.spawn(load)
             if load_cells[i]:
                 sched.cells.assign(load, load_cells[i])
@@ -646,6 +711,7 @@ class Simulation:
         if not self._built:
             self.build()
         status, detail = "ok", ""
+        detail_info: Dict[str, Any] = {}
         t0 = time.perf_counter()
         try:
             if self.scheduler is not None:
@@ -661,10 +727,13 @@ class Simulation:
             if on_deadlock == "raise":
                 raise
             status, detail = "deadlock", str(e)
+            detail_info = dict(getattr(e, "info", {}) or {})
         wall = time.perf_counter() - t0
-        return self._report(status, detail, wall)
+        return self._report(status, detail, wall, detail_info)
 
-    def _report(self, status: str, detail: str, wall: float) -> SimReport:
+    def _report(self, status: str, detail: str, wall: float,
+                detail_info: Optional[Dict[str, Any]] = None
+                ) -> SimReport:
         msgs = sum(h.stats["messages"] for h in self.hubs.values())
         byts = sum(h.stats["bytes"] for h in self.hubs.values())
         links = {f"{hub.name}->{peer}": dict(st)
@@ -689,6 +758,26 @@ class Simulation:
             snap = s.cells.snapshot()
             if snap is not None:
                 cells[str(s.host)] = snap
+        # control-plane timeline, mirroring the dist merge exactly
+        # (DistCoordinator._merge): one section per control workload,
+        # then the membership events — present whenever there was
+        # churn, [] when a control workload ran without any
+        control: Dict[str, Any] = {}
+        for wl in self.workloads:
+            fn = getattr(wl, "control_report", None)
+            sec = fn() if fn is not None else None
+            if sec is not None:
+                control[wl.name] = sec
+        if self.orchestrator is not None:
+            membership = self.orchestrator.membership_timeline()
+        else:
+            membership = sorted(
+                self._membership_events,
+                key=lambda e: (e["vtime"], e["event"], e["host"]))
+        if membership:
+            control["membership"] = membership
+        elif control:
+            control["membership"] = []
         return SimReport(
             status=status, mode=self.mode, n_hosts=self.topology.n_hosts,
             vtime_ns=vtime, wall_s=wall, messages=msgs, bytes=byts,
@@ -701,7 +790,8 @@ class Simulation:
                       for wl in self.workloads},
             scenario=self.scenario.name, detail=detail, cells=cells,
             live={wl.name: sec for wl in self.workloads
-                  for sec in [wl.live_report()] if sec is not None})
+                  for sec in [wl.live_report()] if sec is not None},
+            control=control, detail_info=dict(detail_info or {}))
 
     def sweep(self, axis: Sequence[Scenario], *,
               tick_ns: Optional[int] = None,

@@ -83,6 +83,45 @@ class Topology:
         # CellManager calibration knobs
         self.cells: Dict[str, CellSpec] = {}
         self.cell_knobs: Dict[str, Any] = {}
+        # membership timeline: host -> join vtime (> 0).  Hosts without
+        # an entry are founding members; a declared joiner exists in the
+        # cluster from build time (scheduler, hub, links) but enters the
+        # conservative clock protocol — and its tasks start — at its
+        # join vtime.  See Topology.join / Orchestrator.add_host.
+        self.joins: Dict[int, int] = {}
+
+    def join(self, host: int, at_vtime: int) -> "Topology":
+        """Declare that ``host`` joins the cluster at simulated time
+        ``at_vtime`` (> 0) instead of being a founding member.  Programs
+        placed on it spawn with initial vtime ``at_vtime``; the engines
+        keep it out of the LBTS closure until the membership epoch
+        flips.  Host 0 must stay a founding member (the cluster needs
+        at least one host at vtime 0)."""
+        if not (0 <= host < self.n_hosts):
+            raise ValueError(f"join({host}) outside 0..{self.n_hosts-1}")
+        if host == 0:
+            raise ValueError("host 0 is the founding member and cannot "
+                             "join late")
+        if at_vtime < 1:
+            raise ValueError(f"join vtime must be >= 1 (got {at_vtime}); "
+                             f"a vtime-0 join is a founding member")
+        if host in self.joins:
+            raise ValueError(f"host {host} already has a join event at "
+                             f"vtime {self.joins[host]}")
+        self.joins[host] = at_vtime
+        return self
+
+    def capacity_pool(self, hosts, start_vtime: int,
+                      stagger_ns: int = 0) -> "Topology":
+        """Declare a provisioning schedule for a pool of late-joining
+        hosts: the first joins at ``start_vtime``, each subsequent one
+        ``stagger_ns`` later (0 = all at once).  This is the
+        simulation-native shape of an autoscaling group: capacity
+        *arrives* on this timeline; a control-plane workload decides
+        when to put traffic on it (see ``repro.sim.control``)."""
+        for i, h in enumerate(hosts):
+            self.join(h, start_vtime + i * stagger_ns)
+        return self
 
     def cell(self, name: str, **knobs) -> "Topology":
         """Declare a memory-hierarchy cell (``knobs`` are the

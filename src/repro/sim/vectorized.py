@@ -55,7 +55,8 @@ from repro.core.scheduler import Scheduler
 from repro.core.vtime import SEC
 from repro.sim.report import HostReport, SimReport, _jsonable
 from repro.sim.scenario import (BitFlip, ClockSkew, DegradeLink,
-                                FailTask, Interference, Scenario)
+                                FailTask, Interference, JoinHost,
+                                Scenario)
 from repro.sim.workload import VecCompute, VecMark, VecRecv, VecSend
 
 __all__ = ["UnsupportedByEngine", "compile_simulation",
@@ -162,6 +163,12 @@ def _lower(sim) -> Dict[str, Any]:
         raise UnsupportedByEngine(
             "cpu_resource=True: CPU-slot contention is an engine "
             "schedule, not an array op")
+    if getattr(topo, "joins", None) or any(
+            isinstance(inj, JoinHost) for inj in sim.scenario.injections):
+        raise UnsupportedByEngine(
+            "membership joins: late hosts need the conservative "
+            "engines' membership-epoch re-solve; the vectorized "
+            "compiler lowers a fixed host set")
     for inj in sim.scenario.injections:
         # explicit rejection, not silent omission: a campaign's sweep
         # fast path relies on this raise to fall back to the reference

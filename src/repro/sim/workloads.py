@@ -486,6 +486,40 @@ def burst_arrivals(n: int, burst_size: int, *, gap_ns: int,
     return np.asarray(out, dtype=np.int64)
 
 
+def diurnal_arrivals(n: int, *, base_gap_ns: int, peak_gap_ns: int,
+                     period_ns: int, seed: int = 0,
+                     start_ns: int = 0) -> np.ndarray:
+    """Open-loop diurnal schedule: ``n`` absolute arrival vtimes whose
+    mean inter-arrival gap swings sinusoidally between ``base_gap_ns``
+    (trough traffic, long gaps — the cycle starts here) and
+    ``peak_gap_ns`` (peak traffic, short gaps, reached half a
+    ``period_ns`` in), with exponential jitter around the phase mean,
+    deterministic in ``seed``.  The traffic shape autoscalers exist
+    for: load ramps up ~``base_gap_ns / peak_gap_ns``x into the peak
+    and back down again.  Like :func:`poisson_arrivals`, the schedule
+    is generated once at build time and pinned — int64 ns, clamped to
+    >= 1 ns gaps."""
+    if n < 1:
+        raise ValueError(f"need at least one arrival, got n={n}")
+    if not 1 <= peak_gap_ns <= base_gap_ns:
+        raise ValueError(f"need 1 <= peak_gap_ns <= base_gap_ns, got "
+                         f"peak={peak_gap_ns} base={base_gap_ns}")
+    if period_ns < 2:
+        raise ValueError(f"period_ns must be >= 2, got {period_ns}")
+    rng = np.random.default_rng(seed)
+    jitter = rng.exponential(1.0, size=n)
+    out = np.empty(n, dtype=np.int64)
+    t = int(start_ns)
+    half_swing = (base_gap_ns - peak_gap_ns) / 2.0
+    for i in range(n):
+        phase = (t % period_ns) / period_ns
+        mean = peak_gap_ns + half_swing * (
+            1.0 + np.cos(2.0 * np.pi * phase))
+        t += max(1, int(jitter[i] * mean))
+        out[i] = t
+    return out
+
+
 class LiveServe(Workload):
     """Open-loop live serving: the real serve stack under simulated
     time (the serve half of the paper's full-stack claim).

@@ -1,0 +1,170 @@
+"""Traffic-driven control plane (``repro.sim.control``).
+
+Unit tests for the pure pieces — placement policies, the threshold
+autoscaler's integer decision rule, the diurnal arrival schedule —
+plus the engine-matrix test: a small autoscaled fleet with
+late-joining pool hosts must produce bit-identical reports *and*
+bit-identical ``SimReport.control`` sections (decisions, boots,
+drains, probe counts, latency percentiles) on every engine.
+"""
+import pytest
+
+from engine_harness import assert_engines_agree
+from repro.sim import (AutoscaledServe, PLACEMENT_POLICIES, Scenario,
+                       Simulation, ThresholdAutoscaler, Topology,
+                       best_fit, diurnal_arrivals, first_fit,
+                       worst_fit)
+
+_LINK = Topology(1).default_host_link
+
+
+# ---------------------------------------------------------------------------
+# placement policies
+# ---------------------------------------------------------------------------
+
+
+def test_first_fit_prefers_lowest_idle_id():
+    busy = [0, 500, 0, 0]
+    assert first_fit([1, 2, 3], busy, now=100, service_ns=50,
+                     cap_ns=400) == 2
+    # all busy: least backlog wins, id breaks ties
+    busy = [0, 900, 700, 700]
+    assert first_fit([1, 2, 3], busy, now=100, service_ns=50,
+                     cap_ns=400) == 2
+
+
+def test_best_fit_packs_deepest_that_fits():
+    busy = [0, 300, 150, 0]
+    # backlogs at now=100: k1=200, k2=50, k3=0; service 100, cap 300
+    # fits: k1 (200+100<=300), k2, k3 -> deepest backlog = k1
+    assert best_fit([1, 2, 3], busy, now=100, service_ns=100,
+                    cap_ns=300) == 1
+    # nothing fits -> least backlog
+    assert best_fit([1, 2], [0, 900, 800], now=100, service_ns=100,
+                    cap_ns=100) == 2
+
+
+def test_worst_fit_spreads_to_least_backlog():
+    busy = [0, 300, 150, 150]
+    assert worst_fit([1, 2, 3], busy, now=100, service_ns=100,
+                     cap_ns=300) == 2  # id tie-break at equal backlog
+
+
+def test_policy_registry_is_the_public_surface():
+    assert PLACEMENT_POLICIES == {"first_fit": first_fit,
+                                  "best_fit": best_fit,
+                                  "worst_fit": worst_fit}
+
+
+# ---------------------------------------------------------------------------
+# threshold autoscaler
+# ---------------------------------------------------------------------------
+
+
+def test_autoscaler_target_thresholds_and_clamps():
+    a = ThresholdAutoscaler(up_x1000=750, down_x1000=300, factor=2)
+    assert a.target(800, 4, 2, 16) == 8
+    assert a.target(800, 10, 2, 16) == 16      # clamped at max
+    assert a.target(200, 8, 2, 16) == 4
+    assert a.target(200, 3, 2, 16) == 2        # floor-div, clamped at min
+    assert a.target(500, 8, 2, 16) == 8        # dead band holds
+
+
+def test_autoscaler_validation():
+    with pytest.raises(ValueError, match="down < up"):
+        ThresholdAutoscaler(up_x1000=300, down_x1000=300)
+    with pytest.raises(ValueError, match="factor"):
+        ThresholdAutoscaler(factor=1)
+    with pytest.raises(ValueError, match="patience"):
+        ThresholdAutoscaler(patience=0)
+
+
+# ---------------------------------------------------------------------------
+# diurnal arrivals
+# ---------------------------------------------------------------------------
+
+
+def test_diurnal_arrivals_shape():
+    def draw(seed):
+        return list(diurnal_arrivals(500, base_gap_ns=1_000_000,
+                                     peak_gap_ns=50_000,
+                                     period_ns=100_000_000, seed=seed))
+
+    arr = draw(7)
+    assert len(arr) == 500
+    assert all(b > a for a, b in zip(arr, arr[1:]))  # strictly increasing
+    assert arr == draw(7)           # deterministic in the seed
+    assert arr != draw(8)
+    # the diurnal swing is real: gaps near the peak (half a period in)
+    # are much shorter than gaps at the trough
+    mid = min(range(len(arr)),
+              key=lambda i: abs(arr[i] - 50_000_000))
+    trough_gap = arr[1] - arr[0]
+    peak_gap = arr[mid + 1] - arr[mid]
+    assert peak_gap < trough_gap
+
+
+# ---------------------------------------------------------------------------
+# the fleet, cross-engine
+# ---------------------------------------------------------------------------
+
+
+def _fleet():
+    n_pool, founding = 8, 4
+    topo = Topology(n_hosts=n_pool + 1, n_cpus=2)
+    topo.capacity_pool(range(founding + 1, n_pool + 1), 20_000_000,
+                       stagger_ns=500_000)
+    ready = [0] * founding + [20_000_000 + i * 500_000
+                              for i in range(n_pool - founding)]
+    wl = AutoscaledServe(
+        arrivals=diurnal_arrivals(700, base_gap_ns=1_000_000,
+                                  peak_gap_ns=60_000,
+                                  period_ns=100_000_000, seed=5),
+        n_pool=n_pool, ready_ns=ready, service_ns=400_000,
+        min_active=founding, decide_every=8, probe_every=4,
+        autoscaler=ThresholdAutoscaler(patience=2),
+        placement="worst_fit")
+    return Simulation(topo, wl, Scenario("autoscale smoke"),
+                      placement=wl.default_placement())
+
+
+def test_autoscaled_fleet_engine_matrix():
+    reports = assert_engines_agree(_fleet, label="autoscale")
+    ref = reports[sorted(reports)[0]]
+    for eng, rep in reports.items():
+        assert rep.control == ref.control, (
+            f"control section diverged on {eng}")
+    sec = ref.control["autoserve"]
+    assert ref.status == "ok"
+    assert sec["served"] == 700
+    moves = [(d["from"], d["to"]) for d in sec["decisions"]
+             if d["from"] != d["to"]]
+    assert any(b > a for a, b in moves), "no scale-up observed"
+    assert any(b < a for a, b in moves), "no scale-down observed"
+    assert sec["peak_active"] > 4
+    assert sec["final_active"] >= 4
+    assert sec["probes"]["sent"] == sec["probes"]["acks"] > 0
+    assert 0 < sec["latency_ns"]["p50"] <= sec["latency_ns"]["p99"] \
+        <= sec["latency_ns"]["max"]
+    # membership timeline carries the four late pool joins
+    joins = [e for e in ref.control["membership"] if e["event"] == "join"]
+    assert [e["host"] for e in joins] == [5, 6, 7, 8]
+
+
+def test_autoscaled_serve_validation():
+    arr = [1_000 * i for i in range(1, 20)]
+    with pytest.raises(ValueError, match="placement"):
+        AutoscaledServe(arrivals=arr, n_pool=4, placement="zany_fit")
+    with pytest.raises(ValueError, match="min_active"):
+        AutoscaledServe(arrivals=arr, n_pool=4, min_active=3,
+                        ready_ns=[0, 0, 5_000, 5_000])
+
+
+def test_control_report_absent_without_control_workload():
+    from repro.sim import RackRing
+    wl = RackRing(n_racks=1, hosts_per_rack=2, n_iters=4,
+                  compute_ns=5_000)
+    topo = Topology.full_mesh(2, link=_LINK, n_cpus=2)
+    r = Simulation(topo, wl, Scenario("plain"),
+                   placement=wl.default_placement()).run(engine="async")
+    assert r.control == {}

@@ -331,3 +331,57 @@ def test_deterministic_bitflip_clockskew_mixed_grids():
         draws.append(rack(Scenario(f"mixed{i}", tuple(inj))))
     for make in draws:
         assert_engines_agree(make)
+
+
+def test_deterministic_membership_churn_grids():
+    """Always-on cross-engine draws for membership churn: seeded
+    join-vtime grids over the rack base, alone and mixed with
+    stragglers and receive-clock skew.  Every engine must admit the
+    joiners at the same epoch flip and agree bit-exactly — including
+    the ``SimReport.control`` membership timeline, which the harness
+    CORE_FIELDS deliberately leave out."""
+    import numpy as np
+
+    from repro.sim import JoinHost
+
+    def rack(sc, joins):
+        def make():
+            topo = Topology.racks(2, 2)
+            for h, at in joins:
+                topo.join(h, at)
+            wl = RackRing(n_racks=2, hosts_per_rack=2, n_iters=8,
+                          compute_ns=5_000, cross_every=2,
+                          skew_bound_ns=100_000)
+            return Simulation(topo, wl, sc,
+                              placement=wl.default_placement())
+        return make
+
+    rng = np.random.default_rng(23)
+    draws = []
+    for i in range(5):
+        joiners = list(rng.choice((1, 2, 3), size=rng.integers(1, 3),
+                                  replace=False))
+        vtimes = [int(rng.choice((1, 5_000, 40_000, 200_000)))
+                  for _ in joiners]
+        inj = []
+        if rng.random() < 0.5:
+            # half the draws declare joins as injections, half on the
+            # topology — both paths must be identical machinery
+            inj = [JoinHost(int(h), v) for h, v in zip(joiners, vtimes)]
+            joins = ()
+        else:
+            joins = tuple((int(h), v) for h, v in zip(joiners, vtimes))
+        if rng.random() < 0.5:
+            inj.append(Straggler(f"w{rng.integers(0, 4)}", 2.0))
+        if rng.random() < 0.4:
+            stay = [h for h in range(4) if h not in joiners]
+            inj.append(ClockSkew(host=int(rng.choice(stay)),
+                                 offset_ns=int(rng.choice((0, 1_000))),
+                                 drift_ppm=int(rng.choice((0, 50)))))
+        draws.append(rack(Scenario(f"churn{i}", tuple(inj)), joins))
+    for make in draws:
+        reports = assert_engines_agree(make)
+        ref = next(iter(reports.values()))
+        assert ref.control.get("membership"), "draw produced no churn"
+        for rep in reports.values():
+            assert rep.control == ref.control

@@ -1,0 +1,167 @@
+"""Mutable cluster membership: hosts joining and leaving as
+simulation events.
+
+The engine-matrix tests drive the three churn shapes through every
+engine (``barrier``/``async``/``dist:1``/``dist:K``) via the shared
+harness — join mid-run, leave mid-run (FailHost as churn), and
+join-then-leave on the same host — asserting bit-identical reports
+*and* bit-identical ``SimReport.control`` membership timelines (the
+harness CORE_FIELDS deliberately exclude ``control``, so the timeline
+equality is asserted explicitly here).
+
+Validation, the vectorized-engine guard, and the campaign fallback
+routing for ``JoinHost`` grids are covered at the bottom.
+"""
+import pytest
+
+from engine_harness import assert_engines_agree
+from repro.sim import (Campaign, FaultGrid, JoinHost, RackRing,
+                       Scenario, Simulation, Topology,
+                       UnsupportedByEngine, registry)
+from repro.sim.scenario import FailHost
+
+_LINK = Topology(1).default_host_link
+
+
+def _ring(n_hosts, scenario=None, n_iters=30, joins=()):
+    topo = Topology.full_mesh(n_hosts, link=_LINK, n_cpus=2)
+    for h, at in joins:
+        topo.join(h, at)
+    wl = RackRing(n_racks=1, hosts_per_rack=n_hosts, n_iters=n_iters,
+                  compute_ns=5_000, msg_bytes=512)
+    return Simulation(topo, wl, scenario or Scenario("membership"),
+                      placement=wl.default_placement())
+
+
+def _assert_control_agrees(reports):
+    ref_eng = sorted(reports)[0]
+    ref = reports[ref_eng]
+    for eng, rep in reports.items():
+        assert rep.control == ref.control, (
+            f"control timeline diverged: {eng} vs {ref_eng}\n"
+            f" got: {rep.control}\nwant: {ref.control}")
+    return ref
+
+
+def test_join_mid_run_engine_matrix():
+    reports = assert_engines_agree(
+        lambda: _ring(4, joins=((3, 400_000),)), label="join")
+    r = _assert_control_agrees(reports)
+    assert r.status == "ok"
+    assert r.control["membership"] == [
+        {"event": "join", "host": 3, "vtime": 400_000}]
+    # the joiner's tasks spawned at the join time, not at 0
+    assert all(v["vtime"] >= 400_000 for n, v in r.tasks.items()
+               if v["host"] == 3)
+
+
+def test_joinhost_injection_equals_topology_join():
+    via_topo = _ring(4, joins=((3, 400_000),)).run(engine="async")
+    via_inj = _ring(4, scenario=Scenario(
+        "j", (JoinHost(3, 400_000),))).run(engine="async")
+    assert via_inj.tasks == via_topo.tasks
+    assert via_inj.control == via_topo.control
+    assert via_inj.vtime_ns == via_topo.vtime_ns
+
+
+def test_leave_mid_run_engine_matrix():
+    # a dead ring partner wedges the survivor: every engine must agree
+    # on the deadlock, the leave timeline, and the wedged-host detail
+    reports = assert_engines_agree(
+        lambda: _ring(2, scenario=Scenario(
+            "leave", (FailHost(1, at_vtime=100_000),)), n_iters=50),
+        label="leave")
+    r = _assert_control_agrees(reports)
+    assert r.status == "deadlock"
+    assert r.control["membership"] == [
+        {"event": "leave", "host": 1, "vtime": 100_000}]
+    for eng, rep in reports.items():
+        assert rep.detail_info.get("kind") == "wedged", (eng,
+                                                         rep.detail_info)
+        assert rep.detail_info.get("wedged_hosts") == [0], (eng,
+                                                            rep.detail_info)
+
+
+def test_join_then_leave_same_host_fresh_state():
+    # host 3 joins at 200us and dies at 1ms: the timeline carries both
+    # events in vtime order and the host does not resurrect (its tasks
+    # end dead, never re-spawned)
+    def make():
+        return _ring(4, scenario=Scenario(
+            "churn", (FailHost(3, at_vtime=1_000_000),)),
+            n_iters=60, joins=((3, 200_000),))
+
+    reports = assert_engines_agree(make, label="join-then-leave")
+    r = _assert_control_agrees(reports)
+    assert r.control["membership"] == [
+        {"event": "join", "host": 3, "vtime": 200_000},
+        {"event": "leave", "host": 3, "vtime": 1_000_000}]
+
+
+def test_membership_epoch_counted_once_per_flip():
+    sim = _ring(4, joins=((2, 300_000), (3, 300_000)))
+    report = sim.run(engine="async")
+    assert report.status == "ok"
+    # both joiners share one vtime, so one epoch flip admits both
+    assert sim.orchestrator.stats["membership_epochs"] == 1
+
+
+def test_topology_join_validation():
+    topo = Topology.full_mesh(4, link=_LINK, n_cpus=2)
+    with pytest.raises(ValueError, match="outside"):
+        topo.join(4, 1_000)
+    with pytest.raises(ValueError, match="founding member"):
+        topo.join(0, 1_000)
+    with pytest.raises(ValueError, match=">= 1"):
+        topo.join(3, 0)
+    topo.join(3, 1_000)
+    with pytest.raises(ValueError, match="already has a join event"):
+        topo.join(3, 2_000)
+
+
+def test_joinhost_injection_validation_at_build():
+    with pytest.raises(ValueError, match="founding member"):
+        _ring(4, scenario=Scenario("bad", (JoinHost(0, 1_000),))).build()
+    # a JoinHost duplicating a Topology.join is a conflict, not a merge
+    with pytest.raises(ValueError, match="already has a join event"):
+        _ring(4, scenario=Scenario("dup", (JoinHost(3, 2_000),)),
+              joins=((3, 1_000),)).build()
+
+
+def test_capacity_pool_staggers_joins():
+    topo = Topology.full_mesh(5, link=_LINK, n_cpus=2)
+    topo.capacity_pool(range(2, 5), 1_000, stagger_ns=250)
+    assert topo.joins == {2: 1_000, 3: 1_250, 4: 1_500}
+
+
+def test_vectorized_engine_rejects_membership():
+    with pytest.raises(UnsupportedByEngine, match="membership"):
+        _ring(4, joins=((3, 400_000),)).run(engine="vectorized")
+    with pytest.raises(UnsupportedByEngine, match="membership"):
+        _ring(4, scenario=Scenario(
+            "j", (JoinHost(3, 400_000),))).run(engine="vectorized")
+
+
+def test_campaign_routes_join_host_to_fallback():
+    # join_host points must leave the vectorized sweep fast path and
+    # run per-point on the reference engine; sweepable kinds in the
+    # same grid still take the fast path ("mixed")
+    grid = FaultGrid(types=("join_host", "straggler"),
+                     targets=("w3",), vtimes=(0, 20_000))
+    camp = Campaign(lambda sc: registry.load("rack_ring@v1", sc), grid,
+                    seed=3)
+    rep = camp.run(minimize=False)
+    assert rep.fast_path == "mixed"
+    outcomes = {p["type"]: p["outcome"] for p in rep.points}
+    assert set(outcomes) == {"join_host", "straggler"}
+    # vtime 0 clamps to 1 (a vtime-0 join would be a founding member)
+    p0 = next(p for p in rep.points
+              if p["type"] == "join_host" and p["vtime"] == 0)
+    assert p0["outcome"] in ("ok", "divergence")
+
+
+def test_joinhost_spec_round_trip():
+    from repro.sim.campaign import injection_from_dict, injection_to_dict
+    d = injection_to_dict(JoinHost(3, 7))
+    assert d == {"host": 3, "at_vtime": 7, "type": "JoinHost"}
+    assert injection_from_dict(d) == JoinHost(3, 7)

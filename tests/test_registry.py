@@ -79,3 +79,46 @@ def test_golden_check_flags_drift(tmp_path, monkeypatch):
     monkeypatch.setattr(registry, "GOLDEN", fake)
     failures = registry.check(["rack_ring@v1"])
     assert len(failures) == 1 and "rack_ring@v1" in failures[0]
+
+
+def test_cli_list_json_is_machine_readable(capsys):
+    assert registry.main(["list", "--json"]) == 0
+    import json as _json
+    rows = _json.loads(capsys.readouterr().out)
+    by_ref = {r["ref"]: r for r in rows}
+    assert set(by_ref) == set(registry.names())
+    assert by_ref["rack_ring@v1"]["campaign_base"] is True
+    assert by_ref["diurnal_autoscale@v1"]["tags"] == ["gallery",
+                                                      "control"]
+    assert by_ref["diurnal_autoscale@v1"]["version"] == 1
+
+
+def test_cli_check_exits_nonzero_on_mismatch(tmp_path, monkeypatch,
+                                             capsys):
+    import json as _json
+    golden = _json.loads(registry.GOLDEN.read_text())
+    golden["rack_ring@v1"]["canonical"]["messages"] += 1
+    fake = tmp_path / "registry.json"
+    fake.write_text(_json.dumps(golden))
+    monkeypatch.setattr(registry, "GOLDEN", fake)
+    assert registry.main(["check", "rack_ring@v1"]) == 1
+    assert "FAIL rack_ring@v1" in capsys.readouterr().out
+    # and the clean pin is green through the same entry point
+    monkeypatch.undo()
+    assert registry.main(["check", "rack_ring@v1"]) == 0
+
+
+def test_diurnal_autoscale_golden_pins_control_plane():
+    import json as _json
+    rec = _json.loads(registry.GOLDEN.read_text())["diurnal_autoscale@v1"]
+    assert rec["outcome"] == "ok"
+    sec = rec["canonical"]["control"]["autoserve"]
+    moves = [(d["from"], d["to"]) for d in sec["decisions"]
+             if d["from"] != d["to"]]
+    # the marquee ramp: 4 -> 64 -> 4 over one diurnal period
+    assert moves == [(4, 8), (8, 16), (16, 32), (32, 64),
+                     (64, 32), (32, 16), (16, 8), (8, 4)]
+    assert sec["peak_active"] == 64 and sec["final_active"] == 4
+    joins = [e for e in rec["canonical"]["control"]["membership"]
+             if e["event"] == "join"]
+    assert len(joins) == 60
